@@ -1,0 +1,179 @@
+"""Shared benchmark machinery: timing, CSV rows, query construction for
+the nested TPC-H suite (paper §6 / Appendix B)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.materialization import mat_input_name
+from repro.core.plans import ExecSettings
+from repro.core.unnesting import Catalog, compile_standard
+from repro.data.generators import TPCH_TYPES
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def time_fn(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        out = fn()
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+# ---------------------------------------------------------------------------
+# nested TPC-H query family (levels 0..3), narrow variant
+# ---------------------------------------------------------------------------
+
+LEVEL_KEYS = [("Lineitem", None),
+              ("Orders", "oid"), ("Customer", "cid"), ("Nation", "nid")]
+
+CATALOG = Catalog(unique_keys={
+    "Part__F": ("pid",), "Orders__F": ("oid",), "Customer__F": ("cid",),
+    "Nation__F": ("nid",), "Region__F": ("rid",)})
+
+
+def flat_to_nested_query(levels: int) -> N.Expr:
+    """Group Lineitem under Orders/Customer/Nation (levels deep)."""
+    L = N.Var("Lineitem", TPCH_TYPES["Lineitem"])
+    O = N.Var("Orders", TPCH_TYPES["Orders"])
+    C = N.Var("Customer", TPCH_TYPES["Customer"])
+    Na = N.Var("Nation", TPCH_TYPES["Nation"])
+
+    def items_of(o):
+        return N.for_in("l", L, lambda l:
+            N.IfThen(o.oid.eq(l.oid),
+                     N.Singleton(N.record(pid=l.pid, qty=l.qty))))
+
+    def orders_of(c):
+        return N.for_in("o", O, lambda o:
+            N.IfThen(c.cid.eq(o.cid),
+                     N.Singleton(N.record(odate=o.odate,
+                                          oparts=items_of(o)))))
+
+    def custs_of(n):
+        return N.for_in("c", C, lambda c:
+            N.IfThen(n.nid.eq(c.nid),
+                     N.Singleton(N.record(cname=c.cname,
+                                          corders=orders_of(c)))))
+
+    if levels == 1:
+        return N.for_in("o", O, lambda o: N.Singleton(N.record(
+            odate=o.odate, oparts=items_of(o))))
+    if levels == 2:
+        return N.for_in("c", C, lambda c: N.Singleton(N.record(
+            cname=c.cname, corders=orders_of(c))))
+    if levels == 3:
+        return N.for_in("n", Na, lambda n: N.Singleton(N.record(
+            nname=n.nname, ncusts=custs_of(n))))
+    raise ValueError(levels)
+
+
+def nested_to_nested_query(levels: int, input_name: str,
+                           input_ty: N.BagT) -> N.Expr:
+    """Join Part at the lowest level + sumBy (Example 1 generalized)."""
+    P = N.Var("Part", TPCH_TYPES["Part"])
+    X = N.Var(input_name, input_ty)
+
+    def agg(op_bag_holder):
+        inner = N.for_in("op", op_bag_holder, lambda op:
+            N.for_in("p", P, lambda p:
+                N.IfThen(op.pid.eq(p.pid),
+                         N.Singleton(N.record(pname=p.pname,
+                                              total=op.qty * p.price)))))
+        return N.SumBy(inner, keys=("pname",), values=("total",))
+
+    if levels == 1:
+        return N.for_in("x", X, lambda x: N.Singleton(N.record(
+            odate=x.odate, oparts=agg(x.oparts))))
+    if levels == 2:
+        return N.for_in("x", X, lambda x: N.Singleton(N.record(
+            cname=x.cname,
+            corders=N.for_in("co", x.corders, lambda co:
+                N.Singleton(N.record(odate=co.odate,
+                                     oparts=agg(co.oparts)))))))
+    if levels == 3:
+        return N.for_in("x", X, lambda x: N.Singleton(N.record(
+            nname=x.nname,
+            ncusts=N.for_in("c", x.ncusts, lambda c:
+                N.Singleton(N.record(
+                    cname=c.cname,
+                    corders=N.for_in("co", c.corders, lambda co:
+                        N.Singleton(N.record(odate=co.odate,
+                                             oparts=agg(co.oparts))))))))))
+    raise ValueError(levels)
+
+
+def nested_to_flat_query(levels: int, input_name: str,
+                         input_ty: N.BagT) -> N.Expr:
+    P = N.Var("Part", TPCH_TYPES["Part"])
+    X = N.Var(input_name, input_ty)
+    if levels == 1:
+        inner = N.for_in("x", X, lambda x:
+            N.for_in("op", x.oparts, lambda op:
+                N.for_in("p", P, lambda p:
+                    N.IfThen(op.pid.eq(p.pid),
+                             N.Singleton(N.record(odate=x.odate,
+                                                  total=op.qty * p.price))))))
+        return N.SumBy(inner, keys=("odate",), values=("total",))
+    if levels == 2:
+        inner = N.for_in("x", X, lambda x:
+            N.for_in("co", x.corders, lambda co:
+                N.for_in("op", co.oparts, lambda op:
+                    N.for_in("p", P, lambda p:
+                        N.IfThen(op.pid.eq(p.pid),
+                                 N.Singleton(N.record(
+                                     cname=x.cname,
+                                     total=op.qty * p.price)))))))
+        return N.SumBy(inner, keys=("cname",), values=("total",))
+    if levels == 3:
+        inner = N.for_in("x", X, lambda x:
+            N.for_in("c", x.ncusts, lambda c:
+                N.for_in("co", c.corders, lambda co:
+                    N.for_in("op", co.oparts, lambda op:
+                        N.for_in("p", P, lambda p:
+                            N.IfThen(op.pid.eq(p.pid),
+                                     N.Singleton(N.record(
+                                         nname=x.nname,
+                                         total=op.qty * p.price))))))))
+        return N.SumBy(inner, keys=("nname",), values=("total",))
+    raise ValueError(levels)
+
+
+def materialize_nested_input(db: Dict[str, list], levels: int):
+    """Run flat-to-nested (oracle) to build the nested input value."""
+    q = flat_to_nested_query(levels)
+    val = I.eval_expr(q, db)
+    return val, q.ty
+
+
+def run_shred_columnar(prog: N.Program, input_types, inputs,
+                       settings: Optional[ExecSettings] = None):
+    sp = M.shred_program(prog, input_types, domain_elimination=True)
+    cp = CG.compile_program(sp, CATALOG)
+    env = CG.columnar_shred_inputs(inputs, input_types)
+
+    def run():
+        return CG.run_flat_program(cp, env, settings or ExecSettings())
+
+    return sp, run
+
+
+def bag_bytes(bag) -> int:
+    return sum(a.size * a.dtype.itemsize for a in bag.data.values())

@@ -1,0 +1,132 @@
+"""Roofline analysis from the dry-run artifacts (assignment §Roofline).
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Terms (seconds, per step, per chip — the SPMD HLO is per-device):
+  compute    = dot_flops / peak_flops          (trip-count-scaled dots)
+  memory     = hbm_bytes / hbm_bw              (see note below)
+  collective = collective_bytes / link_bw      (trip-count-scaled)
+
+HBM bytes: we report two bounds and use their geometric mean as the
+term — ``cost_analysis['bytes accessed']`` counts rolled loops once
+(lower bound), ``scaled.hbm_bytes_proxy`` counts every instruction
+result x2 (upper bound; fusion internals excluded). MODEL_FLOPS uses
+6*N_active*D (train) / 2*N_active*D (inference).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "results")
+
+
+def load(mesh: str = "16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "dryrun_*.json"))):
+        r = json.load(open(path))
+        if r["mesh"] != mesh:
+            continue
+        rows.append(derive(r))
+    return rows
+
+
+def derive(r: dict) -> dict:
+    chips = r["chips"]
+    sc = r.get("scaled", {})
+    dot_flops = sc.get("dot_flops", 0.0)               # per device
+    coll_bytes = sc.get("collective_bytes", 0.0)       # per device
+    hbm_hi = sc.get("hbm_bytes_proxy", 0.0)
+    hbm_lo = r.get("cost_analysis", {}).get("bytes accessed", 0.0)
+    hbm_mid = math.sqrt(max(hbm_hi, 1.0) * max(hbm_lo, 1.0))
+
+    t_compute = dot_flops / PEAK_FLOPS
+    t_memory = hbm_mid / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_time = max(terms.values())      # perfect-overlap bound
+    model_flops_dev = r["model_flops"] / chips
+    useful = model_flops_dev / max(dot_flops, 1.0)
+    # roofline fraction: useful-FLOPs MFU implied by the binding term
+    mfu_bound = model_flops_dev / PEAK_FLOPS / max(step_time, 1e-12)
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "step": r["step"], "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "step_time_bound_s": step_time,
+        "model_flops": r["model_flops"],
+        "dot_flops_per_dev": dot_flops,
+        "useful_flops_ratio": useful,
+        "mfu_bound": mfu_bound,
+        "hbm_lo": hbm_lo, "hbm_hi": hbm_hi,
+        "coll_bytes_per_dev": coll_bytes,
+        "optimizer": r.get("optimizer", "-"),
+        "memory_analysis": r.get("memory_analysis", {}),
+    }
+
+
+def fmt_table(rows) -> str:
+    hdr = (f"{'arch':<16} {'shape':<12} {'cmp(s)':>9} {'mem(s)':>9} "
+           f"{'coll(s)':>9} {'bound(s)':>9} {'dom':<11} {'useful':>7} "
+           f"{'MFU≤':>6}")
+    out = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        out.append(
+            f"{r['arch']:<16} {r['shape']:<12} "
+            f"{r['t_compute_s']:>9.4f} {r['t_memory_s']:>9.4f} "
+            f"{r['t_collective_s']:>9.4f} {r['step_time_bound_s']:>9.4f} "
+            f"{r['dominant']:<11} {r['useful_flops_ratio']:>7.2f} "
+            f"{r['mfu_bound']*100:>5.1f}%")
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows):
+    """The three most interesting cells: worst roofline fraction, most
+    collective-bound, most representative of the technique (MoE train —
+    the skew-dispatch arch)."""
+    train = [r for r in rows if r["step"] == "train"]
+    worst = min(train, key=lambda r: r["mfu_bound"])
+    coll = max(rows, key=lambda r: (r["t_collective_s"]
+                                    / max(r["step_time_bound_s"], 1e-12)))
+    rep = next(r for r in rows
+               if r["arch"] == "arctic_480b" and r["shape"] == "train_4k")
+    return {"worst_mfu": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if args.json:
+        print(json.dumps(rows, indent=1))
+        return
+    print(f"Roofline table — mesh {args.mesh} "
+          f"(v5e: 197 TF/s, 819 GB/s HBM, 50 GB/s link)\n")
+    print(fmt_table(rows))
+    print()
+    hc = pick_hillclimb(rows)
+    print("hillclimb picks:")
+    for k, r in hc.items():
+        print(f"  {k}: {r['arch']} x {r['shape']} "
+              f"(dom={r['dominant']}, MFU-bound {r['mfu_bound']*100:.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark driver — one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (paper Fig. 7, Fig. 8, Fig. 9,
+Appendix D, Appendix E.1), then the roofline summary pointer.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-skew", action="store_true",
+                    help="skip the 8-virtual-device subprocess benchmark")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    sections = []
+    from benchmarks import biomedical, representation, succinct, tpch_nested
+    sections.append(("tpch_nested (Fig.7)",
+                     lambda: tpch_nested.run(scale=30 if args.quick else 60)))
+    sections.append(("biomedical E2E (Fig.9)",
+                     lambda: biomedical.run(n_samples=6 if args.quick else 10)))
+    sections.append(("succinct (App.D)", succinct.run))
+    sections.append(("representation (App.E.1)",
+                     lambda: representation.run(
+                         n=5000 if args.quick else 20000)))
+    if not args.skip_skew:
+        from benchmarks import skew
+        sections.append(("skew (Fig.8)", skew.run))
+
+    failed = []
+    for name, fn in sections:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    print("# --- roofline (assignment) ---")
+    print("# see: PYTHONPATH=src python -m benchmarks.roofline")
+    if failed:
+        print(f"# FAILED sections: {failed}")
+        sys.exit(1)
+    print("# all benchmark sections completed")
+
+
+if __name__ == '__main__':
+    main()

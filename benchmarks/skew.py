@@ -1,0 +1,100 @@
+"""Skew-handling benchmark (paper Fig. 8 + App. E.5): nested-to-nested
+narrow query at level 2 over increasingly skewed data, SHRED vs
+SHRED_SKEW on 8 virtual devices — reporting runtime, shuffled rows and
+overflow (the TPU analogue of Spark's crashed runs).
+
+Runs in a subprocess so the virtual-device XLA flag never leaks into
+the parent (single-device) process.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import emit
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json, time
+sys.path.insert(0, r"%(src)s")
+sys.path.insert(0, r"%(bench)s")
+import jax
+import repro
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.plans import ExecSettings
+from repro.data.generators import TPCH_TYPES, gen_tpch
+from repro.exec.dist import device_mesh_1d, run_distributed
+from benchmarks.common import CATALOG, materialize_nested_input, \
+    nested_to_nested_query
+
+out = []
+for skew in (0.0, 0.8, 1.2, 2.0):
+    db = gen_tpch(scale=48, skew=skew, seed=0)
+    nested, nty = materialize_nested_input(db, 2)
+    types = dict(TPCH_TYPES); types["NCOP"] = nty
+    inputs = dict(db); inputs["NCOP"] = nested
+    q = nested_to_nested_query(2, "NCOP", nty)
+    prog = N.Program([N.Assignment("Q", q)])
+    sp = M.shred_program(prog, types, domain_elimination=True)
+    cp = CG.compile_program(sp, CATALOG)
+    env = CG.columnar_shred_inputs(inputs, types)
+    PN = 8
+    env = {k: b.resize(((b.capacity + PN - 1)//PN)*PN) for k, b in env.items()}
+    mesh = device_mesh_1d(PN)
+    man = sp.manifests["Q"]
+    names = [man.top] + list(man.dicts.values())
+    def fn(env_local, ctx):
+        o = CG.run_flat_program(cp, env_local, ExecSettings(dist=ctx))
+        return {k: o[k] for k in names}
+    direct = I.eval_expr(q, inputs)
+    for aware in (False, True):
+        t0 = time.perf_counter()
+        res, metrics = run_distributed(fn, env, mesh, skew_default=aware,
+                                       cap_factor=16.0)
+        dt = time.perf_counter() - t0
+        parts = {(): res[man.top],
+                 **{p: res[n] for p, n in man.dicts.items()}}
+        ok = I.bags_equal(direct, CG.parts_to_rows(parts, q.ty))
+        out.append(dict(skew=skew, aware=aware, seconds=dt, ok=ok,
+                        **{k: int(v) for k, v in metrics.items()}))
+print("JSON" + json.dumps(out))
+"""
+
+
+def run():
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    bench = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    script = _CHILD % {"src": os.path.abspath(src),
+                       "bench": os.path.abspath(bench)}
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=3000)
+    if res.returncode != 0:
+        print(res.stdout[-2000:])
+        print(res.stderr[-2000:])
+        raise RuntimeError("skew benchmark child failed")
+    payload = [l for l in res.stdout.splitlines() if l.startswith("JSON")][0]
+    rows = json.loads(payload[4:])
+    for r in rows:
+        name = f"skew{r['skew']}_{'aware' if r['aware'] else 'unaware'}"
+        assert r["ok"], f"{name} produced wrong results"
+        emit(name, r["seconds"] * 1e6,
+             f"shuffle_rows={r.get('shuffle_rows', 0)};"
+             f"overflow={r.get('overflow_rows', 0)};"
+             f"broadcastB={r.get('broadcast_bytes', 0)}")
+    # headline: shuffle reduction at the highest skew
+    hi = [r for r in rows if r["skew"] == 2.0]
+    red = hi[0]["shuffle_rows"] / max(hi[1]["shuffle_rows"], 1)
+    emit("skew2.0_shuffle_reduction", 0.0, f"x{red:.2f}")
+
+
+if __name__ == "__main__":
+    run()

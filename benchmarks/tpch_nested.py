@@ -1,0 +1,114 @@
+"""Nested TPC-H micro-benchmark (paper Fig. 7): flat-to-nested,
+nested-to-nested, nested-to-flat at nesting levels 1-3, STANDARD vs
+SHRED (+UNSHRED), reporting wall time and materialized intermediate
+bytes (the flattening-width signal)."""
+
+from __future__ import annotations
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.materialization import mat_input_name
+from repro.core.plans import ExecSettings
+from repro.core.unnesting import compile_standard
+from repro.data.generators import TPCH_TYPES, gen_tpch
+
+from .common import (CATALOG, bag_bytes, emit, flat_to_nested_query,
+                     materialize_nested_input, nested_to_flat_query,
+                     nested_to_nested_query, time_fn)
+
+
+def _standard(q, nested_name, nested_ty, env):
+    roots = {nested_name: nested_ty} if nested_ty is not None else {}
+    flat = {k: v for k, v in TPCH_TYPES.items()}
+    splan = compile_standard(q, input_roots=roots, flat_inputs=flat,
+                             parts_name=mat_input_name, catalog=CATALOG)
+    return lambda: CG.run_standard(splan, env)
+
+
+def run(scale: int = 60):
+    db = gen_tpch(scale=scale, skew=0.0, seed=0)
+
+    # ---------------- flat-to-nested ----------------
+    for lv in (1, 2, 3):
+        q = flat_to_nested_query(lv)
+        prog = N.Program([N.Assignment("Q", q)])
+        # SHRED
+        sp = M.shred_program(prog, TPCH_TYPES, domain_elimination=True)
+        cp = CG.compile_program(sp, CATALOG)
+        env = CG.columnar_shred_inputs(db, TPCH_TYPES)
+        us = time_fn(lambda: CG.run_flat_program(cp, env))
+        emit(f"f2n_L{lv}_shred", us, f"assignments={len(sp.program.names())}")
+        # STANDARD (wide flatten + nest rebuild)
+        run_std = _standard(q, None, None, env)
+        us_std = time_fn(run_std)
+        # intermediate width: bytes of the wide bag vs shredded parts
+        out_parts = run_std()
+        wide_bytes = sum(bag_bytes(b) for b in out_parts.values())
+        emit(f"f2n_L{lv}_standard", us_std, f"out_bytes={wide_bytes}")
+        # UNSHRED cost (cogroup clustering of dictionaries)
+        outs = CG.run_flat_program(cp, env)
+        man = sp.manifests["Q"]
+        parts = {(): outs[man.top],
+                 **{p: outs[n] for p, n in man.dicts.items()}}
+        us_unshred = time_fn(lambda: CG.unshred_parts(parts))
+        emit(f"f2n_L{lv}_unshred_extra", us_unshred, "")
+
+    # ---------------- nested-to-nested ----------------
+    for lv in (1, 2, 3):
+        nested, nty = materialize_nested_input(db, lv)
+        name = f"NCOP{lv}"
+        types = dict(TPCH_TYPES)
+        types[name] = nty
+        inputs = dict(db)
+        inputs[name] = nested
+        q = nested_to_nested_query(lv, name, nty)
+        prog = N.Program([N.Assignment("Q", q)])
+        sp = M.shred_program(prog, types, domain_elimination=True)
+        cp = CG.compile_program(sp, CATALOG)
+        env = CG.columnar_shred_inputs(inputs, types)
+        us = time_fn(lambda: CG.run_flat_program(cp, env))
+        # localized aggregation: leaf dict computed w/o touching ancestors
+        leaf = [n for n in sp.program.names() if "oparts" in n][-1]
+        emit(f"n2n_L{lv}_shred", us, f"localized_leaf={leaf}")
+        run_std = _standard(q, name, nty, env)
+        us_std = time_fn(run_std)
+        emit(f"n2n_L{lv}_standard", us_std, "")
+
+    # ---------------- nested-to-flat ----------------
+    for lv in (1, 2, 3):
+        nested, nty = materialize_nested_input(db, lv)
+        name = f"NCOP{lv}"
+        types = dict(TPCH_TYPES)
+        types[name] = nty
+        inputs = dict(db)
+        inputs[name] = nested
+        q = nested_to_flat_query(lv, name, nty)
+        # shredded route: shred the *body*, apply sumBy on its flat output
+        body = q.bag_expr
+        prog = N.Program([N.Assignment("QB", body)])
+        sp = M.shred_program(prog, types, domain_elimination=True)
+        cp = CG.compile_program(sp, CATALOG)
+        env0 = CG.columnar_shred_inputs(inputs, types)
+
+        from repro.exec import ops as X
+
+        def run_shred():
+            env = CG.run_flat_program(cp, env0)
+            return X.sum_by(env["QB"], q.keys, q.values)
+
+        us = time_fn(run_shred)
+        emit(f"n2f_L{lv}_shred", us, "")
+        run_std = _standard(q, name, nty, env0)
+        us_std = time_fn(run_std)
+        emit(f"n2f_L{lv}_standard", us_std, "")
+
+        # correctness cross-check at each level
+        want = I.eval_expr(q, inputs)
+        got = run_std()[()].to_rows()
+        assert I.bags_equal(want, got), f"n2f_L{lv} standard mismatch"
+
+
+if __name__ == "__main__":
+    run()

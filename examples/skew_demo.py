@@ -1,0 +1,58 @@
+"""Skew-resilient distributed processing demo (paper §5) on 8 virtual
+devices: runs the same shredded query with and without skew-aware joins
+on Zipf-skewed data and prints the shuffle/broadcast/overflow metrics.
+
+    PYTHONPATH=src python examples/skew_demo.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+
+import jax
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.plans import ExecSettings
+from repro.core.unnesting import Catalog
+from repro.exec.dist import device_mesh_1d, run_distributed
+from helpers import INPUT_TYPES, gen_cop, gen_parts, running_example_query
+
+print(f"devices: {len(jax.devices())}")
+data = {"COP": gen_cop(n_cust=24, max_orders=4, max_items=24, seed=7,
+                       zipf=0.75),
+        "Part": gen_parts(29)}
+direct = I.eval_expr(running_example_query(), data)
+
+prog = N.Program([N.Assignment("Q", running_example_query())])
+sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+cp = CG.compile_program(sp, Catalog(unique_keys={"Part__F": ("pid",)}))
+env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+PN = 8
+env = {k: b.resize(((b.capacity + PN - 1) // PN) * PN)
+       for k, b in env.items()}
+mesh = device_mesh_1d(PN)
+man = sp.manifests["Q"]
+names = [man.top] + list(man.dicts.values())
+
+
+def fn(env_local, ctx):
+    out = CG.run_flat_program(cp, env_local, ExecSettings(dist=ctx))
+    return {k: out[k] for k in names}
+
+
+for aware in (False, True):
+    out, metrics = run_distributed(fn, env, mesh, skew_default=aware,
+                                   cap_factor=16.0)
+    parts = {(): out[man.top], **{p: out[n] for p, n in man.dicts.items()}}
+    ok = I.bags_equal(direct, CG.parts_to_rows(parts,
+                                               running_example_query().ty))
+    label = "skew-aware " if aware else "skew-unaware"
+    print(f"{label}: correct={ok}  metrics={metrics}")
+print("note: the skew-aware join leaves heavy keys in place and "
+      "broadcasts the small build side (paper Fig. 6)")

@@ -1,0 +1,8 @@
+# repro — "Scalable Querying of Nested Data" (Smith et al., 2020) on JAX/TPU.
+#
+# The query engine uses 64-bit keys (composite join keys pack two int32s
+# exactly); model code always passes explicit dtypes, so enabling x64 is
+# safe and keeps key packing collision-free.
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,1 @@
+from .table import FlatBag, StringEncoder, concat_bags  # noqa: F401

@@ -1,0 +1,193 @@
+"""FlatBag — the columnar, fixed-capacity bag representation.
+
+TPU adaptation of the paper's Spark ``Dataset`` (DESIGN.md §2): a bag is
+a struct-of-arrays with a static *capacity* and a validity mask. Filters
+mask; nothing ever reallocates. Strings and dates are dictionary-encoded
+to int32 at ingest. Labels are ordinary int columns (a label's identity
+is its captured key tuple; tags are static metadata).
+
+FlatBags are pytrees, so they flow through jit / shard_map unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+DTYPES = {
+    "int": jnp.int64,
+    "real": jnp.float64,
+    "string": jnp.int32,   # dictionary code
+    "bool": jnp.bool_,
+    "date": jnp.int32,     # days
+    "label": jnp.int64,
+}
+
+
+class StringEncoder:
+    """Per-domain string dictionary (shared across tables joining on the
+    same string domain)."""
+
+    def __init__(self):
+        self.vocab: Dict[str, int] = {}
+        self.rev: List[str] = []
+
+    def encode(self, s: str) -> int:
+        if s not in self.vocab:
+            self.vocab[s] = len(self.rev)
+            self.rev.append(s)
+        return self.vocab[s]
+
+    def decode(self, code: int) -> str:
+        return self.rev[int(code)] if 0 <= int(code) < len(self.rev) else f"<{code}>"
+
+
+@jax.tree_util.register_pytree_node_class
+class FlatBag:
+    """Struct-of-arrays bag: ``data[col] : (capacity,)`` + ``valid``."""
+
+    def __init__(self, data: Dict[str, jnp.ndarray], valid: jnp.ndarray):
+        self.data = dict(data)
+        self.valid = valid
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.data))
+        return tuple(self.data[n] for n in names) + (self.valid,), names
+
+    @classmethod
+    def tree_unflatten(cls, names, arrays):
+        data = dict(zip(names, arrays[:-1]))
+        return cls(data, arrays[-1])
+
+    # -- basic properties --------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[-1])
+
+    @property
+    def columns(self) -> List[str]:
+        return sorted(self.data)
+
+    def count(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int32), axis=-1)
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.data[name]
+
+    def with_columns(self, **cols) -> "FlatBag":
+        data = dict(self.data)
+        data.update(cols)
+        return FlatBag(data, self.valid)
+
+    def select_columns(self, names: Sequence[str]) -> "FlatBag":
+        return FlatBag({n: self.data[n] for n in names}, self.valid)
+
+    def drop_columns(self, names: Sequence[str]) -> "FlatBag":
+        drop = set(names)
+        return FlatBag({n: a for n, a in self.data.items() if n not in drop},
+                       self.valid)
+
+    def mask(self, keep: jnp.ndarray) -> "FlatBag":
+        return FlatBag(self.data, self.valid & keep)
+
+    def row_bytes(self) -> int:
+        """Bytes per valid row (the shuffle-accounting unit)."""
+        total = 0
+        for a in self.data.values():
+            total += a.dtype.itemsize
+        total += 1  # validity bit, charged as a byte
+        return total
+
+    def resize(self, capacity: int) -> "FlatBag":
+        """Grow (pad) or shrink (compact-first not required for grow)."""
+        cap = self.capacity
+        if capacity == cap:
+            return self
+        if capacity > cap:
+            pad = capacity - cap
+            data = {n: jnp.pad(a, [(0, pad)]) for n, a in self.data.items()}
+            return FlatBag(data, jnp.pad(self.valid, [(0, pad)]))
+        # shrink: keep valid rows first
+        order = jnp.argsort(~self.valid, stable=True)
+        data = {n: a[order][:capacity] for n, a in self.data.items()}
+        return FlatBag(data, self.valid[order][:capacity])
+
+    def compact(self) -> "FlatBag":
+        """Stable-sort valid rows to the front (same capacity)."""
+        order = jnp.argsort(~self.valid, stable=True)
+        return FlatBag({n: a[order] for n, a in self.data.items()},
+                       self.valid[order])
+
+    # -- host conversion -------------------------------------------------
+    @staticmethod
+    def from_rows(rows: List[dict], schema: Dict[str, str],
+                  capacity: Optional[int] = None,
+                  encoders: Optional[Dict[str, StringEncoder]] = None
+                  ) -> "FlatBag":
+        """Build from Python rows. ``schema``: col -> kind (see DTYPES).
+        String columns use ``encoders[col]`` (created if missing)."""
+        n = len(rows)
+        cap = capacity or max(n, 1)
+        assert cap >= n, f"capacity {cap} < rows {n}"
+        encoders = encoders if encoders is not None else {}
+        data = {}
+        for colname, kind in schema.items():
+            dtype = DTYPES[kind]
+            vals = np.zeros(cap, dtype=np.dtype(dtype))
+            for i, r in enumerate(rows):
+                v = r[colname]
+                if kind == "string" and isinstance(v, str):
+                    enc = encoders.setdefault(colname, StringEncoder())
+                    v = enc.encode(v)
+                if kind == "label" and not isinstance(v, (int, np.integer)):
+                    # interpreter Labels: identity is the captured value(s)
+                    v = _label_to_int(v)
+                vals[i] = v
+            data[colname] = jnp.asarray(vals)
+        valid = jnp.arange(cap) < n
+        return FlatBag(data, valid)
+
+    def to_rows(self, decoders: Optional[Dict[str, StringEncoder]] = None
+                ) -> List[dict]:
+        valid = np.asarray(self.valid)
+        host = {n: np.asarray(a) for n, a in self.data.items()}
+        out = []
+        for i in range(self.capacity):
+            if not valid[i]:
+                continue
+            row = {}
+            for n, a in host.items():
+                v = a[i].item()
+                if decoders and n in decoders:
+                    v = decoders[n].decode(v)
+                row[n] = v
+            out.append(row)
+        return out
+
+    def __repr__(self) -> str:
+        return (f"FlatBag(cap={self.capacity}, cols={self.columns}, "
+                f"count={int(self.count())})")
+
+
+def _label_to_int(v) -> int:
+    """Interpreter Label -> int identity (single int capture), used only
+    when round-tripping oracle values into columnar tests."""
+    from repro.core.interpreter import Label
+    if isinstance(v, Label):
+        assert len(v.values) == 1, "columnar labels are single-key"
+        return _label_to_int(v.values[0])
+    assert isinstance(v, (int, np.integer)), v
+    return int(v)
+
+
+def concat_bags(a: FlatBag, b: FlatBag) -> FlatBag:
+    cols = set(a.data) & set(b.data)
+    assert cols == set(a.data) == set(b.data), (a.columns, b.columns)
+    data = {n: jnp.concatenate([a.data[n], b.data[n]]) for n in cols}
+    return FlatBag(data, jnp.concatenate([a.valid, b.valid]))

@@ -1,0 +1,271 @@
+"""Code generation (paper §3.2/§4.6) — running compiled plans over the
+columnar backend, locally or distributed.
+
+* ``run_flat_program``  — executes a materialized shredded program
+  (output of ``materialization.shred_program``): compiles each
+  assignment with ``compile_flat_query`` (+ optimizer passes), evaluates
+  in sequence, returns the environment of FlatBags.
+* ``run_standard``      — executes a StandardPlan (wide flattening +
+  bottom-up Gamma_u nest rebuild), returning nested *parts*.
+* ``columnar_shred_inputs`` — value-shreds nested Python rows into
+  FlatBags (the columnar twin of interpreter.shred_value).
+* ``unshred_parts``     — the cogroup step: clusters every dictionary by
+  label and derives CSR offsets (the UNSHRED cost in the paper).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.columnar.table import FlatBag
+from repro.exec import ops as X
+from . import interpreter as I
+from . import nrc as N
+from .materialization import Manifest, ShreddedProgram, mat_input_name
+from .plans import ExecSettings, MapP, Plan, eval_plan, push_aggregation, \
+    required_columns
+from .unnesting import Catalog, NestSpec, StandardPlan, compile_flat_query
+
+
+# ---------------------------------------------------------------------------
+# schemas / ingest
+# ---------------------------------------------------------------------------
+
+def schema_of(elem: N.TupleT) -> Dict[str, str]:
+    out = {}
+    for n, t in elem.fields:
+        if isinstance(t, N.LabelT):
+            out[n] = "label"
+        elif isinstance(t, N.ScalarT):
+            out[n] = t.kind
+        else:
+            raise TypeError(f"non-flat attribute {n}: {t!r}")
+    return out
+
+
+def columnar_shred_inputs(inputs: Dict[str, list],
+                          input_types: Dict[str, N.BagT],
+                          capacities: Optional[Dict[str, int]] = None,
+                          encoders: Optional[dict] = None
+                          ) -> Dict[str, FlatBag]:
+    """Value-shred nested inputs to FlatBags keyed by the materialized
+    names (R__F / R__D_<path>). Flat inputs load directly as R__F."""
+    capacities = capacities or {}
+    encoders = encoders if encoders is not None else {}
+    env: Dict[str, FlatBag] = {}
+    for name, rows in inputs.items():
+        ty = input_types[name]
+        parts = I.shred_value(rows, ty, root=name)
+        for path, bag_rows in parts.items():
+            key = mat_input_name(name, path)
+            flat = _flat_elem(ty, path, root=name)
+            schema = schema_of(flat)
+            if path:
+                schema["label"] = "label"
+            env[key] = FlatBag.from_rows(bag_rows, schema,
+                                         capacity=capacities.get(key),
+                                         encoders=encoders)
+    return env
+
+
+def _flat_elem(ty: N.BagT, path: tuple, root: str) -> N.TupleT:
+    cur: N.Type = ty
+    for a in path:
+        assert isinstance(cur, N.BagT)
+        elem = cur.elem
+        assert isinstance(elem, N.TupleT)
+        cur = elem.field(a)
+    assert isinstance(cur, N.BagT)
+    tagroot = f"{root}.{'.'.join(path)}" if path else root
+    flat = N.flat_type(cur, path=tagroot)
+    assert isinstance(flat.elem, N.TupleT)
+    return flat.elem
+
+
+# ---------------------------------------------------------------------------
+# shredded route execution
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CompiledProgram:
+    plans: List[Tuple[str, Plan]]          # (assignment name, plan)
+    shredded: ShreddedProgram
+
+    def pretty(self) -> str:
+        from .plans import plan_pretty
+        out = []
+        for name, p in self.plans:
+            out.append(f"{name} <=")
+            out.append(plan_pretty(p, 1))
+            out.append("")
+        return "\n".join(out)
+
+
+def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
+                    optimize: bool = True) -> CompiledProgram:
+    catalog = catalog or Catalog()
+    plans = []
+    for a in sp.program.assignments:
+        plan = compile_flat_query(a.expr, catalog)
+        if optimize:
+            plan = push_aggregation(plan)
+            plan = required_columns(plan, None)
+        plans.append((a.name, plan))
+    return CompiledProgram(plans, sp)
+
+
+def run_flat_program(cp: CompiledProgram, env: Dict[str, FlatBag],
+                     settings: Optional[ExecSettings] = None
+                     ) -> Dict[str, FlatBag]:
+    settings = settings or ExecSettings()
+    env = dict(env)
+    for name, plan in cp.plans:
+        env[name] = eval_plan(plan, env, settings)
+    return env
+
+
+# ---------------------------------------------------------------------------
+# standard route execution
+# ---------------------------------------------------------------------------
+
+def run_standard(sp: StandardPlan, env: Dict[str, FlatBag],
+                 settings: Optional[ExecSettings] = None
+                 ) -> Dict[tuple, FlatBag]:
+    """Execute a StandardPlan; returns nested output as parts
+    {path: FlatBag} (non-root parts carry a ``label`` column)."""
+    settings = settings or ExecSettings()
+    bag = eval_plan(sp.wide, env, settings)
+    parts: Dict[tuple, FlatBag] = {}
+
+    def flags_and(b: FlatBag, cols: tuple) -> jnp.ndarray:
+        m = jnp.ones(b.capacity, dtype=bool)
+        for c in cols:
+            if c in b.data:
+                m = m & b.col(c)
+        return m
+
+    # nested-to-flat: single aggregate at the top, no nest levels
+    if sp.flat_agg is not None:
+        keys, vals = sp.flat_agg
+        rmap = dict(sp.top_rename)
+        ext = {out: bag.col(col) for out, col in sp.top_rename}
+        all_matched = tuple(c for c in bag.data if c.startswith("__m."))
+        mask = flags_and(bag, all_matched)
+        bag = bag.with_columns(**ext).mask(mask)
+        out = X.sum_by(bag, keys, vals, use_kernel=settings.use_kernel)
+        parts[()] = out.select_columns(list(keys) + list(vals))
+        return parts
+
+    for spec in sp.nests:  # bottom-up
+        mflag = flags_and(bag, spec.matched_cols)
+        if spec.sum_agg is not None:
+            agg_keys, agg_vals = spec.sum_agg
+            ext = {}
+            for out_name, col in spec.rename:
+                if out_name in agg_keys:
+                    ext[out_name] = bag.col(col)
+                elif out_name in agg_vals:
+                    v = bag.col(col)
+                    ext[out_name] = jnp.where(mflag, v, jnp.zeros_like(v))
+            ext["__mcnt"] = mflag.astype(jnp.int64)
+            bag2 = bag.with_columns(**ext)
+            agg = X.sum_by(bag2, tuple(spec.group_cols) + tuple(agg_keys),
+                           tuple(agg_vals) + ("__mcnt",),
+                           use_kernel=settings.use_kernel)
+            agg = agg.with_columns(__cv=agg.col("__mcnt") > 0)
+            child_cols = tuple(agg_keys) + tuple(agg_vals)
+            parents, children = X.nest_level(
+                agg, spec.group_cols, child_cols, spec.label_col,
+                child_valid_col="__cv")
+            out_children = FlatBag(
+                {"label": children.col(spec.label_col),
+                 **{c: children.col(c) for c in child_cols}},
+                children.valid)
+        else:
+            ext = {out_name: bag.col(col) for out_name, col in spec.rename
+                   if col in bag.data}
+            bag2 = bag.with_columns(**ext, __cv=mflag)
+            child_cols = tuple(out for out, _ in spec.rename)
+            parents, children = X.nest_level(
+                bag2, spec.group_cols, child_cols, spec.label_col,
+                child_valid_col="__cv")
+            out_children = FlatBag(
+                {"label": children.col(spec.label_col),
+                 **{c: children.col(c) for c in child_cols}},
+                children.valid)
+        parts[spec.path] = out_children
+        # parent label column becomes available for the level above
+        bag = parents
+
+    # top level
+    top_matched = tuple(c for c in bag.data if c.startswith("__m."))
+    mask = flags_and(bag, top_matched)
+    data = {}
+    for out_name, col in sp.top_rename:
+        src = col if col in bag.data else out_name
+        data[out_name] = bag.col(src)
+    parts[()] = FlatBag(data, bag.valid & mask)
+    return parts
+
+
+# ---------------------------------------------------------------------------
+# unshredding (cogroup): cluster dictionaries by label + CSR offsets
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CSRLevel:
+    bag: FlatBag              # rows clustered by label
+    sorted_labels: jnp.ndarray
+
+
+def unshred_parts(parts: Dict[tuple, FlatBag]) -> Dict[tuple, CSRLevel]:
+    """The UNSHRED step (paper §6): for each dictionary, cluster rows by
+    label (sort) so each parent's bag is adjacent, and keep the sorted
+    label array for CSR range lookup (searchsorted). This is the
+    columnar cogroup — its cost is what the paper's UNSHRED bars
+    measure."""
+    out: Dict[tuple, CSRLevel] = {}
+    for path, bag in parts.items():
+        if path == ():
+            out[path] = CSRLevel(bag, None)
+            continue
+        key = bag.col("label").astype(jnp.int64)
+        key = jnp.where(bag.valid, key, X.I64_MAX)
+        order = jnp.argsort(key)
+        data = {n: a[order] for n, a in bag.data.items()}
+        out[path] = CSRLevel(FlatBag(data, bag.valid[order]), key[order])
+    return out
+
+
+def parts_to_rows(parts: Dict[tuple, FlatBag], ty: N.BagT,
+                  decoders: Optional[dict] = None) -> list:
+    """Host-side reconstruction of nested rows from parts (tests)."""
+    host = {path: bag.to_rows(decoders) for path, bag in parts.items()}
+
+    def attach(rows: list, elem: N.TupleT, path: tuple) -> list:
+        out = []
+        for r in rows:
+            row = {}
+            for n, t in elem.fields:
+                if isinstance(t, N.BagT):
+                    sub = path + (n,)
+                    lab = r[n]
+                    kids = [dict(k) for k in host.get(sub, [])
+                            if k["label"] == lab]
+                    for k in kids:
+                        k.pop("label")
+                    sub_elem = t.elem
+                    assert isinstance(sub_elem, N.TupleT)
+                    row[n] = attach(kids, sub_elem, sub)
+                else:
+                    row[n] = r[n]
+            out.append(row)
+        return out
+
+    top = [dict(r) for r in host[()]]
+    elem = ty.elem
+    assert isinstance(elem, N.TupleT)
+    return attach(top, elem, ())

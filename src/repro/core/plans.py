@@ -1,0 +1,426 @@
+"""Plan language (paper §2.2) — algebraic IR between NRC and columnar
+execution, with the optimizer hooks of §3.3.
+
+Plan nodes reference *columns* of wide bags. Column names are
+``alias.attr`` (alias = the NRC loop variable that introduced the bag).
+Scalar expressions inside nodes (predicates, projections) reuse the NRC
+expression AST with Var(name=<column>).
+
+The evaluator (``eval_plan``) runs a plan over an environment of
+FlatBags, locally or — via the distributed execution context in
+``repro.exec.dist`` — under shard_map with exchange/broadcast collectives
+and optional skew-aware operators (§5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dc_field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.columnar.table import FlatBag
+from repro.exec import ops as X
+from . import nrc as N
+
+
+# ---------------------------------------------------------------------------
+# IR
+# ---------------------------------------------------------------------------
+
+class Plan:
+    pass
+
+
+@dataclass
+class ScanP(Plan):
+    bag: str          # environment key
+    alias: str        # column prefix for this bag's attributes
+    with_rowid: bool = False  # add 'alias.__rowid' (paper's unique IDs)
+
+
+@dataclass
+class SelectP(Plan):
+    child: Plan
+    pred: N.Expr      # BOOL-typed column expression
+
+
+@dataclass
+class MapP(Plan):
+    child: Plan
+    outputs: tuple    # ((out_col, N.Expr), ...) — full projection list
+    extend: bool = False  # keep child columns, add outputs (derived cols)
+
+
+@dataclass
+class JoinP(Plan):
+    left: Plan
+    right: Plan
+    left_on: tuple    # column names
+    right_on: tuple
+    how: str = "inner"           # inner | left_outer
+    unique_right: bool = True    # fk join (capacity-preserving) if True
+    expansion: float = 1.0       # general-join capacity factor
+    broadcast: bool = False      # distribution hint: broadcast right side
+    skew_aware: bool = False     # §5 skew-triple processing
+    matched_col: str = "__matched"
+
+
+@dataclass
+class SumAggP(Plan):
+    child: Plan
+    keys: tuple
+    vals: tuple
+    local_preagg: bool = False   # aggregation pushdown: pre-agg per partition
+
+
+@dataclass
+class DeDupP(Plan):
+    child: Plan
+    cols: Optional[tuple] = None
+
+
+@dataclass
+class UnionP(Plan):
+    left: Plan
+    right: Plan
+
+
+@dataclass
+class OuterUnnestP(Plan):
+    """Pair parent rows wide with child rows (standard route mu-bar).
+    ``child_bag`` is a parts bag whose ``child_label`` points at
+    ``parent_label`` column of the parent plan."""
+    parent: Plan
+    child_bag: str
+    alias: str
+    parent_label: str   # column in parent output
+    child_label: str    # attr in child bag
+    expansion: float = 1.0
+    matched_col: str = "__matched"
+    rowid_col: Optional[str] = None
+
+
+def plan_pretty(p: Plan, indent: int = 0) -> str:
+    pad = "  " * indent
+    if isinstance(p, ScanP):
+        return f"{pad}Scan({p.bag} as {p.alias})"
+    if isinstance(p, SelectP):
+        return f"{pad}Select[{N.pretty(p.pred)}]\n{plan_pretty(p.child, indent+1)}"
+    if isinstance(p, MapP):
+        cols = ", ".join(c for c, _ in p.outputs)
+        return f"{pad}Project[{cols}]\n{plan_pretty(p.child, indent+1)}"
+    if isinstance(p, JoinP):
+        kind = "Join" if p.how == "inner" else "OuterJoin"
+        mods = []
+        if p.broadcast:
+            mods.append("broadcast")
+        if p.skew_aware:
+            mods.append("skew")
+        if not p.unique_right:
+            mods.append(f"general x{p.expansion}")
+        mod = ("{" + ",".join(mods) + "}") if mods else ""
+        return (f"{pad}{kind}{mod}[{p.left_on} = {p.right_on}]\n"
+                f"{plan_pretty(p.left, indent+1)}\n"
+                f"{plan_pretty(p.right, indent+1)}")
+    if isinstance(p, SumAggP):
+        pre = "{preagg}" if p.local_preagg else ""
+        return (f"{pad}Gamma+{pre}[keys={p.keys} vals={p.vals}]\n"
+                f"{plan_pretty(p.child, indent+1)}")
+    if isinstance(p, DeDupP):
+        return f"{pad}DeDup[{p.cols}]\n{plan_pretty(p.child, indent+1)}"
+    if isinstance(p, UnionP):
+        return (f"{pad}UnionAll\n{plan_pretty(p.left, indent+1)}\n"
+                f"{plan_pretty(p.right, indent+1)}")
+    if isinstance(p, OuterUnnestP):
+        return (f"{pad}OuterUnnest[{p.child_bag} as {p.alias}, "
+                f"{p.parent_label}={p.alias}.{p.child_label}]\n"
+                f"{plan_pretty(p.parent, indent+1)}")
+    return f"{pad}<{type(p).__name__}>"
+
+
+# ---------------------------------------------------------------------------
+# scalar column expressions -> jnp
+# ---------------------------------------------------------------------------
+
+def eval_col_expr(e: N.Expr, bag: FlatBag) -> jnp.ndarray:
+    if isinstance(e, N.Var):
+        return bag.col(e.name)
+    if isinstance(e, N.Const):
+        return jnp.asarray(e.value)
+    if isinstance(e, N.Arith):
+        l, r = eval_col_expr(e.left, bag), eval_col_expr(e.right, bag)
+        return {"+": l + r, "-": l - r, "*": l * r,
+                "/": l / jnp.where(r == 0, 1, r)}[e.op]
+    if isinstance(e, N.Cmp):
+        l, r = eval_col_expr(e.left, bag), eval_col_expr(e.right, bag)
+        return {"==": l == r, "!=": l != r, "<": l < r, "<=": l <= r,
+                ">": l > r, ">=": l >= r}[e.op]
+    if isinstance(e, N.BoolOp):
+        l, r = eval_col_expr(e.left, bag), eval_col_expr(e.right, bag)
+        return (l & r) if e.op == "&&" else (l | r)
+    if isinstance(e, N.Not):
+        return ~eval_col_expr(e.inner, bag)
+    if isinstance(e, N.IfThen):
+        c = eval_col_expr(e.cond, bag)
+        t = eval_col_expr(e.then, bag)
+        assert e.els is not None, "scalar if needs else in columnar exec"
+        f = eval_col_expr(e.els, bag)
+        return jnp.where(c, t, f)
+    if isinstance(e, N.NewLabel):
+        # columnar labels: one capture -> the key itself (exact);
+        # multiple captures -> iterated splitmix64 combining. Captures
+        # may themselves be 64-bit labels, so shift-packing is unsound;
+        # construction and lookup sides evaluate the same expression, so
+        # equality is preserved (collision odds ~2^-64, DESIGN §7).
+        vals = [eval_col_expr(v, bag).astype(jnp.int64)
+                for _, v in e.captures]
+        if len(vals) == 1:
+            return vals[0]
+        from repro.exec.ops import _mix64
+        k = _mix64(vals[0])
+        golden = jnp.uint64(0x9E3779B97F4A7C15)
+        for v in vals[1:]:
+            salted = (v.astype(jnp.uint64) + golden).astype(jnp.int64)
+            k = _mix64(k ^ _mix64(salted))
+        return k
+    raise TypeError(f"eval_col_expr: {type(e).__name__} ({N.pretty(e)})")
+
+
+def col_expr_deps(e: N.Expr) -> set:
+    """Columns referenced by a column expression."""
+    deps = set()
+
+    def go(x):
+        if isinstance(x, N.Var):
+            deps.add(x.name)
+        for c in N.children(x):
+            go(c)
+
+    go(e)
+    return deps
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ExecSettings:
+    """Execution knobs shared by local and distributed evaluation."""
+    use_kernel: bool = False        # Pallas segment_reduce for Gamma+
+    default_expansion: float = 1.0
+    # distributed context (None => local, single partition)
+    dist: Optional[object] = None   # repro.exec.dist.DistContext
+
+
+def _scan(env: Dict[str, FlatBag], name: str, alias: str,
+          with_rowid: bool = False) -> FlatBag:
+    bag = env[name]
+    data = {f"{alias}.{c}": bag.data[c] for c in bag.data}
+    if with_rowid:
+        data[f"{alias}.__rowid"] = jnp.arange(bag.capacity, dtype=jnp.int64)
+    return FlatBag(data, bag.valid)
+
+
+def eval_plan(p: Plan, env: Dict[str, FlatBag],
+              s: Optional[ExecSettings] = None) -> FlatBag:
+    s = s or ExecSettings()
+    if isinstance(p, ScanP):
+        return _scan(env, p.bag, p.alias, p.with_rowid)
+    if isinstance(p, SelectP):
+        child = eval_plan(p.child, env, s)
+        return X.select(child, eval_col_expr(p.pred, child))
+    if isinstance(p, MapP):
+        child = eval_plan(p.child, env, s)
+        cols = {out: jnp.broadcast_to(eval_col_expr(e, child),
+                                      (child.capacity,)).astype(
+                    eval_col_expr(e, child).dtype)
+                for out, e in p.outputs}
+        if p.extend:
+            return child.with_columns(**cols)
+        return X.project(child, cols)
+    if isinstance(p, JoinP):
+        left = eval_plan(p.left, env, s)
+        right = eval_plan(p.right, env, s)
+        return _exec_join(p, left, right, s)
+    if isinstance(p, SumAggP):
+        child = eval_plan(p.child, env, s)
+        if s.dist is not None:
+            return s.dist.sum_by(child, p.keys, p.vals,
+                                 local_preagg=p.local_preagg,
+                                 use_kernel=s.use_kernel)
+        return X.sum_by(child, p.keys, p.vals, use_kernel=s.use_kernel)
+    if isinstance(p, DeDupP):
+        child = eval_plan(p.child, env, s)
+        cols = p.cols or tuple(child.columns)
+        if s.dist is not None:
+            return s.dist.dedup(child, cols)
+        return X.dedup(child, cols)
+    if isinstance(p, UnionP):
+        return X.union_all(eval_plan(p.left, env, s),
+                           eval_plan(p.right, env, s))
+    if isinstance(p, OuterUnnestP):
+        parent = eval_plan(p.parent, env, s)
+        child = _scan(env, p.child_bag, p.alias)
+        out_cap = int(child.capacity * p.expansion) + parent.capacity
+        bag, _ = X.flatten_child(parent, child, p.parent_label,
+                                 f"{p.alias}.{p.child_label}", out_cap,
+                                 outer=True, matched_col=p.matched_col,
+                                 rowid_col=p.rowid_col)
+        return bag
+    raise TypeError(f"eval_plan: {type(p).__name__}")
+
+
+def _exec_join(p: JoinP, left: FlatBag, right: FlatBag,
+               s: ExecSettings) -> FlatBag:
+    if s.dist is not None:
+        return s.dist.join(left, right, p.left_on, p.right_on, how=p.how,
+                           unique_right=p.unique_right,
+                           broadcast=p.broadcast, skew_aware=p.skew_aware,
+                           expansion=p.expansion)
+    if p.unique_right:
+        bag = X.fk_join(left, right, p.left_on, p.right_on, how=p.how)
+        if p.how == "left_outer" and p.matched_col != "__matched":
+            bag.data[p.matched_col] = bag.data.pop("__matched")
+        return bag
+    # M:N capacity: dictionary joins fan out to the build side's
+    # cardinality (1 label -> whole inner bag), so size by max of both
+    out_cap = int(max(left.capacity, right.capacity) * max(p.expansion, 1.0))
+    bag, _ = X.general_join(left, right, p.left_on, p.right_on, out_cap,
+                            how=p.how, matched_col=p.matched_col)
+    return bag
+
+
+# ---------------------------------------------------------------------------
+# optimizer (§3.3): projection pushdown + aggregation pushdown
+# ---------------------------------------------------------------------------
+
+def required_columns(p: Plan, needed: Optional[set] = None) -> Plan:
+    """Projection pushdown: rebuild the plan so scans only carry columns
+    that some ancestor actually uses. ``needed=None`` keeps everything
+    (root)."""
+    return _pushdown(p, needed)
+
+
+def _pushdown(p: Plan, needed: Optional[set]) -> Plan:
+    if isinstance(p, ScanP):
+        return p if needed is None else _PrunedScan(p, frozenset(needed))
+    if isinstance(p, SelectP):
+        deps = col_expr_deps(p.pred)
+        child_needed = None if needed is None else set(needed) | deps
+        return SelectP(_pushdown(p.child, child_needed), p.pred)
+    if isinstance(p, MapP):
+        if p.extend:
+            outs = p.outputs
+            deps = set()
+            for _, e in outs:
+                deps |= col_expr_deps(e)
+            if needed is None:
+                child_needed = None
+            else:
+                child_needed = (set(needed) - {c for c, _ in outs}) | deps
+            return MapP(_pushdown(p.child, child_needed), outs, extend=True)
+        if needed is not None:
+            outs = tuple((c, e) for c, e in p.outputs if c in needed)
+        else:
+            outs = p.outputs
+        deps = set()
+        for _, e in outs:
+            deps |= col_expr_deps(e)
+        return MapP(_pushdown(p.child, deps), outs)
+    if isinstance(p, JoinP):
+        ln = None if needed is None else set(needed) | set(p.left_on)
+        rn = None if needed is None else set(needed) | set(p.right_on)
+        return JoinP(_pushdown(p.left, ln), _pushdown(p.right, rn),
+                     p.left_on, p.right_on, p.how, p.unique_right,
+                     p.expansion, p.broadcast, p.skew_aware)
+    if isinstance(p, SumAggP):
+        cn = set(p.keys) | set(p.vals)
+        return SumAggP(_pushdown(p.child, cn), p.keys, p.vals,
+                       p.local_preagg)
+    if isinstance(p, DeDupP):
+        cn = None if p.cols is None else set(p.cols)
+        if needed is not None and cn is not None:
+            cn |= needed
+        return DeDupP(_pushdown(p.child, cn), p.cols)
+    if isinstance(p, UnionP):
+        return UnionP(_pushdown(p.left, needed), _pushdown(p.right, needed))
+    if isinstance(p, OuterUnnestP):
+        pn = None if needed is None else set(needed) | {p.parent_label}
+        return OuterUnnestP(_pushdown(p.parent, pn), p.child_bag, p.alias,
+                            p.parent_label, p.child_label, p.expansion)
+    raise TypeError(type(p).__name__)
+
+
+@dataclass
+class _PrunedScan(Plan):
+    inner: ScanP
+    keep: frozenset
+
+
+def _eval_pruned(p: _PrunedScan, env, s) -> FlatBag:
+    bag = _scan(env, p.inner.bag, p.inner.alias)
+    keep = [c for c in bag.columns if c in p.keep]
+    return bag.select_columns(keep)
+
+
+# register pruned scan in evaluator
+_orig_eval_plan = eval_plan
+
+
+def eval_plan(p: Plan, env: Dict[str, FlatBag],          # noqa: F811
+              s: Optional[ExecSettings] = None) -> FlatBag:
+    s = s or ExecSettings()
+    if isinstance(p, _PrunedScan):
+        return _eval_pruned(p, env, s)
+    return _orig_eval_plan(p, env, s)
+
+
+def push_aggregation(p: Plan) -> Plan:
+    """Aggregation pushdown (§3.3): when a Gamma+ sits above a join and
+    the aggregate's value columns come entirely from the probe (left)
+    side, compute partial sums below the join grouped by the join key +
+    surviving key columns. Sound when the build side is unique on the
+    join key (fk join), which the planner tracks via ``unique_right``."""
+    if isinstance(p, SumAggP) and isinstance(p.child, JoinP):
+        j = p.child
+        left_cols = _plan_columns(j.left)
+        if left_cols is None:
+            return p
+        vals_from_left = all(v in left_cols for v in p.vals)
+        if j.unique_right and vals_from_left:
+            keys_below = tuple(sorted((set(p.keys) & left_cols)
+                                      | set(j.left_on)))
+            inner = SumAggP(j.left, keys_below, p.vals)
+            new_join = JoinP(inner, j.right, j.left_on, j.right_on, j.how,
+                             j.unique_right, j.expansion, j.broadcast,
+                             j.skew_aware)
+            return SumAggP(new_join, p.keys, p.vals)
+    # recurse
+    for attr in ("child", "left", "right", "parent"):
+        if hasattr(p, attr):
+            setattr(p, attr, push_aggregation(getattr(p, attr)))
+    return p
+
+
+def _plan_columns(p: Plan) -> Optional[set]:
+    """Static column set of a plan's output (None if unknown)."""
+    if isinstance(p, ScanP):
+        return None  # unknown without env; treated as opaque
+    if isinstance(p, _PrunedScan):
+        return set(p.keep)
+    if isinstance(p, MapP):
+        return {c for c, _ in p.outputs}
+    if isinstance(p, SelectP):
+        return _plan_columns(p.child)
+    if isinstance(p, SumAggP):
+        return set(p.keys) | set(p.vals)
+    if isinstance(p, JoinP):
+        l, r = _plan_columns(p.left), _plan_columns(p.right)
+        if l is None or r is None:
+            return None
+        return l | r
+    if isinstance(p, DeDupP):
+        return _plan_columns(p.child)
+    return None

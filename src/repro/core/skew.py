@@ -1,0 +1,87 @@
+"""Skew-resilient processing (paper §5).
+
+Heavy-key detection by sampling, skew-triples, and membership tests.
+The paper samples tuples per partition and calls a key *heavy* when it
+covers >= ``threshold`` of the sample; with threshold t there can be at
+most ceil(1/t) heavy keys per partition (the paper's 2.5% -> 40 keys),
+which bounds the broadcast cost of the heavy set.
+
+These helpers are pure jnp and run both locally and inside shard_map
+(the distributed variants all_gather the per-partition candidates).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.columnar.table import FlatBag
+from repro.exec import ops as X
+
+I64_MAX = X.I64_MAX
+
+
+def mix64(k: jnp.ndarray) -> jnp.ndarray:
+    """splitmix64 finalizer — hash partitioning and sampling strides."""
+    k = k.astype(jnp.uint64)
+    k = (k ^ (k >> 30)) * jnp.uint64(0xBF58476D1CE4E5B9)
+    k = (k ^ (k >> 27)) * jnp.uint64(0x94D049BB133111EB)
+    k = k ^ (k >> 31)
+    return k.astype(jnp.int64)
+
+
+def heavy_keys_local(key: jnp.ndarray, valid: jnp.ndarray,
+                     sample: int = 256, threshold: float = 0.025,
+                     max_heavy: Optional[int] = None) -> jnp.ndarray:
+    """Per-partition heavy-key candidates from a strided sample.
+
+    Returns a static-size array (max_heavy,) padded with I64_MAX.
+    max_heavy defaults to ceil(1/threshold) — the paper's bound."""
+    cap = key.shape[0]
+    if max_heavy is None:
+        max_heavy = max(int(1.0 / threshold), 1)
+    sample = min(sample, cap)
+    stride = max(cap // sample, 1)
+    idx = jnp.arange(sample) * stride
+    skey = jnp.where(valid[idx], key[idx], I64_MAX)
+    # count sampled frequency per key (sort + run lengths)
+    sk = jnp.sort(skey)
+    start = jnp.concatenate([jnp.ones(1, bool), sk[1:] != sk[:-1]])
+    seg = jnp.cumsum(start.astype(jnp.int32)) - 1
+    ones = (sk != I64_MAX).astype(jnp.int32)
+    counts = jax.ops.segment_sum(ones, seg, num_segments=sample)
+    firsts = jax.ops.segment_min(jnp.arange(sample), seg,
+                                 num_segments=sample)
+    need = max(int(threshold * sample), 1)
+    is_heavy_seg = counts >= need
+    # rank heavy segments by -count and take top max_heavy
+    order = jnp.argsort(jnp.where(is_heavy_seg, -counts, 1))
+    top = order[:max_heavy]
+    fidx = jnp.clip(firsts[top], 0, sample - 1)
+    keys = jnp.where(is_heavy_seg[top], sk[fidx], I64_MAX)
+    return keys
+
+
+def merge_heavy(candidates: jnp.ndarray) -> jnp.ndarray:
+    """Deduplicate an array of heavy-key candidates (padded I64_MAX),
+    returning it sorted (still padded)."""
+    sk = jnp.sort(candidates.reshape(-1))
+    dup = jnp.concatenate([jnp.zeros(1, bool), sk[1:] == sk[:-1]])
+    return jnp.sort(jnp.where(dup, I64_MAX, sk))
+
+
+def is_member(key: jnp.ndarray, heavy_sorted: jnp.ndarray) -> jnp.ndarray:
+    """Membership of each key in the (sorted, padded) heavy set."""
+    pos = jnp.searchsorted(heavy_sorted, key)
+    pos = jnp.clip(pos, 0, heavy_sorted.shape[0] - 1)
+    return (heavy_sorted[pos] == key) & (key != I64_MAX)
+
+
+def split_skew(bag: FlatBag, key_cols, heavy_sorted: jnp.ndarray
+               ) -> Tuple[FlatBag, FlatBag]:
+    """Split a bag into (light, heavy) components of a skew-triple."""
+    key = X.pack_keys(bag, key_cols)
+    hv = is_member(key, heavy_sorted)
+    return bag.mask(~hv), bag.mask(hv)

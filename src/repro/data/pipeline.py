@@ -1,0 +1,96 @@
+"""LM data pipeline built on the paper's query engine (first-class
+integration, DESIGN.md §3): nested corpora are value-shredded once;
+an NRC query (filter by language weight, join quality metadata, flatten
+sections) is *shredded and compiled* to columnar plans; its flat output
+(doc_id, sec_id, pos, tok) is packed into fixed-length token batches.
+
+Because the query runs over the shredded representation, the skewed
+section lengths never sit on one partition — the exact Challenge-2/3
+argument of the paper, applied to LM ingest.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codegen as CG
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.plans import ExecSettings
+from repro.core.unnesting import Catalog
+from .generators import CORPUS_TYPES
+
+
+def token_query() -> N.Program:
+    """for d in Corpus, for l in LangScore if d.lang == l.lang and
+    weighted, for s in d.sections, for t in s.tokens -> flat rows."""
+    Corpus = N.Var("Corpus", CORPUS_TYPES["Corpus"])
+    Lang = N.Var("LangScore", CORPUS_TYPES["LangScore"])
+    q = N.for_in("d", Corpus, lambda d:
+        N.for_in("l", Lang, lambda l:
+            N.IfThen(d.lang.eq(l.lang),
+                N.for_in("s", d.sections, lambda s:
+                    N.for_in("t", s.tokens, lambda t:
+                        N.Singleton(N.record(
+                            doc_id=d.doc_id, sec_id=s.sec_id,
+                            pos=t.pos, tok=t.tok,
+                            weight=l.weight * d.quality)))))))
+    return N.Program([N.Assignment("TOKENS", q)])
+
+
+@dataclass
+class TokenPipeline:
+    """Compiles and runs the ingest query; yields (B, S) token batches."""
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+    def build(self, inputs: Dict[str, list]):
+        prog = token_query()
+        self.shredded = M.shred_program(prog, CORPUS_TYPES,
+                                        domain_elimination=True)
+        catalog = Catalog(unique_keys={"LangScore__F": ("lang",)})
+        self.compiled = CG.compile_program(self.shredded, catalog)
+        env = CG.columnar_shred_inputs(inputs, CORPUS_TYPES)
+        env = CG.run_flat_program(self.compiled, env,
+                                  ExecSettings())
+        out = env["TOKENS"]
+        rows = out.to_rows()
+        rows = [r for r in rows if r["weight"] > 0]
+        rows.sort(key=lambda r: (r["doc_id"], r["sec_id"], r["pos"]))
+        self.stream = np.array([r["tok"] for r in rows], np.int32)
+        return self
+
+    def __iter__(self) -> Iterator[dict]:
+        need = self.batch * self.seq_len
+        stream = self.stream
+        if len(stream) < need + 1:
+            reps = need // max(len(stream), 1) + 2
+            stream = np.tile(stream, reps)
+        cursor = 0
+        while True:
+            chunk = stream[cursor:cursor + need + 1]
+            if len(chunk) < need + 1:
+                cursor = 0
+                continue
+            x = chunk[:need].reshape(self.batch, self.seq_len)
+            y = chunk[1:need + 1].reshape(self.batch, self.seq_len)
+            cursor += need
+            yield {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+
+    def batch_at(self, cursor: int) -> dict:
+        """Deterministic batch addressing (checkpoint/resume exactness)."""
+        need = self.batch * self.seq_len
+        stream = self.stream
+        if len(stream) < need + 1:
+            stream = np.tile(stream, need // max(len(stream), 1) + 2)
+        start = (cursor * need) % (len(stream) - need - 1)
+        chunk = stream[start:start + need + 1]
+        return {"tokens": jnp.asarray(chunk[:need].reshape(
+                    self.batch, self.seq_len)),
+                "labels": jnp.asarray(chunk[1:need + 1].reshape(
+                    self.batch, self.seq_len))}

@@ -1,0 +1,245 @@
+"""Distributed execution under shard_map (DESIGN.md §2, §5).
+
+Spark's shuffle becomes ``jax.lax.all_to_all`` with *fixed-capacity
+per-destination buckets* (the MoE-dispatch pattern): skewed keys
+overflow their bucket instead of spilling to disk — overflow is counted
+and reported, the TPU-native analogue of the paper's crashed bars.
+
+Broadcast joins use ``all_gather`` of the small side. The skew-aware
+join (paper Fig. 6) exchanges only the light component and gathers the
+heavy rows of the build side, leaving heavy probe rows in place.
+
+All operators run *inside* shard_map over a 1-D partition axis (the
+mesh's "data"×"pod" axes flattened); a ``DistContext`` carries the axis
+name and a metrics accumulator (shuffle bytes, broadcast bytes,
+overflow rows) whose values are psum'd on exit.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field as dc_field
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.columnar.table import FlatBag
+from repro.core import skew as SK
+from . import ops as X
+
+
+class DistContext:
+    """Collective operators + metering for one shard_map region."""
+
+    def __init__(self, axis: str, n_partitions: int,
+                 cap_factor: float = 2.0, sample: int = 256,
+                 threshold: float = 0.025, skew_default: bool = False):
+        self.axis = axis
+        self.P = n_partitions
+        self.cap_factor = cap_factor
+        self.sample = sample
+        self.threshold = threshold
+        self.skew_default = skew_default
+        self.metrics: Dict[str, jnp.ndarray] = {}
+
+    # -- metering -----------------------------------------------------
+    def _add(self, name: str, value):
+        self.metrics[name] = self.metrics.get(name, jnp.zeros((), jnp.int64)) \
+            + jnp.asarray(value, jnp.int64)
+
+    def finalize_metrics(self) -> Dict[str, jnp.ndarray]:
+        return {k: jax.lax.psum(v, self.axis)
+                for k, v in self.metrics.items()}
+
+    # -- exchange (hash repartition) ------------------------------------
+    def exchange(self, bag: FlatBag, key_cols: Sequence[str],
+                 keep: Optional[jnp.ndarray] = None) -> FlatBag:
+        """Hash-repartition rows by key over the partition axis.
+        ``keep`` optionally restricts which rows participate (others are
+        dropped — used by skew-aware ops to exchange only light rows)."""
+        cap = bag.capacity
+        Pn = self.P
+        bucket = max(int(cap * self.cap_factor) // Pn, 1)
+        key = X.pack_keys(bag, key_cols)
+        valid = bag.valid if keep is None else (bag.valid & keep)
+        dest = (SK.mix64(key) % Pn).astype(jnp.int32)
+        dest = jnp.where(valid, dest, 0)
+        onehot = (dest[:, None] == jnp.arange(Pn)[None, :]) & valid[:, None]
+        pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
+        pos = jnp.take_along_axis(pos, dest[:, None], axis=1)[:, 0]
+        ok = valid & (pos < bucket)
+        self._add("overflow_rows", jnp.sum(valid & (pos >= bucket)))
+        self._add("shuffle_rows", jnp.sum(ok))
+        self._add("shuffle_bytes", jnp.sum(ok) * bag.row_bytes())
+
+        pos_safe = jnp.where(ok, pos, bucket)  # out-of-bounds -> dropped
+
+        def scatter(col):
+            buf = jnp.zeros((Pn, bucket), col.dtype)
+            return buf.at[dest, pos_safe].set(jnp.where(ok, col, 0),
+                                              mode="drop")
+
+        data = {n: scatter(a) for n, a in bag.data.items()}
+        vbuf = jnp.zeros((Pn, bucket), bool).at[dest, pos_safe].set(
+            ok, mode="drop")
+        out_data = {}
+        for n, a in data.items():
+            recv = jax.lax.all_to_all(a, self.axis, split_axis=0,
+                                      concat_axis=0, tiled=False)
+            out_data[n] = recv.reshape(Pn * bucket)
+        vrecv = jax.lax.all_to_all(vbuf, self.axis, split_axis=0,
+                                   concat_axis=0, tiled=False)
+        return FlatBag(out_data, vrecv.reshape(Pn * bucket))
+
+    # -- broadcast (all_gather) -----------------------------------------
+    def gather_all(self, bag: FlatBag,
+                   keep: Optional[jnp.ndarray] = None) -> FlatBag:
+        valid = bag.valid if keep is None else (bag.valid & keep)
+        self._add("broadcast_bytes",
+                  jax.lax.psum(jnp.sum(valid), self.axis)
+                  * bag.row_bytes() * (self.P - 1) // self.P)
+        data = {n: jax.lax.all_gather(a, self.axis, tiled=True)
+                for n, a in bag.data.items()}
+        v = jax.lax.all_gather(valid, self.axis, tiled=True)
+        return FlatBag(data, v)
+
+    # -- joins -----------------------------------------------------------
+    def join(self, left: FlatBag, right: FlatBag, left_on, right_on,
+             how: str = "inner", unique_right: bool = True,
+             broadcast: bool = False, skew_aware: bool = False,
+             expansion: float = 4.0) -> FlatBag:
+        if broadcast:
+            rall = self.gather_all(right)
+            return self._local_join(left, rall, left_on, right_on, how,
+                                    unique_right, expansion)
+        if skew_aware or self.skew_default:
+            return self._skew_join(left, right, left_on, right_on, how,
+                                   unique_right, expansion)
+        lex = self.exchange(left, left_on)
+        rex = self.exchange(right, right_on)
+        return self._local_join(lex, rex, left_on, right_on, how,
+                                unique_right, expansion)
+
+    def _local_join(self, left, right, left_on, right_on, how,
+                    unique_right, expansion):
+        if unique_right:
+            return X.fk_join(left, right, left_on, right_on, how=how)
+        out_cap = int(max(left.capacity, right.capacity)
+                      * max(expansion, 1.0))
+        bag, overflow = X.general_join(left, right, left_on, right_on,
+                                       out_cap, how=how)
+        self._add("overflow_rows", overflow)
+        return bag
+
+    def _skew_join(self, left, right, left_on, right_on, how,
+                   unique_right, expansion):
+        """Paper Fig. 6: split the probe side by heavy keys; exchange the
+        light component; leave heavy probe rows in place and broadcast
+        the matching build rows."""
+        hk = self.heavy_keys(left, left_on)
+        lkey = X.pack_keys(left, left_on)
+        heavy_mask = SK.is_member(lkey, hk) & left.valid
+        # light plan: standard exchange join
+        lex = self.exchange(left, left_on, keep=~heavy_mask)
+        rex = self.exchange(right, right_on)
+        light = self._local_join(lex, rex, left_on, right_on, how,
+                                 unique_right, expansion)
+        # heavy plan: heavy probe rows stay; broadcast matching build rows
+        rkey = X.pack_keys(right, right_on)
+        r_heavy = SK.is_member(rkey, hk)
+        rall = self.gather_all(right, keep=r_heavy)
+        heavy = self._local_join(left.mask(heavy_mask), rall, left_on,
+                                 right_on, how, unique_right, expansion)
+        from repro.columnar.table import concat_bags
+        return concat_bags(light, heavy)
+
+    # -- heavy-key detection (sampled, then gathered) ---------------------
+    def heavy_keys(self, bag: FlatBag, key_cols) -> jnp.ndarray:
+        key = X.pack_keys(bag, key_cols)
+        local = SK.heavy_keys_local(key, bag.valid, sample=self.sample,
+                                    threshold=self.threshold)
+        self._add("broadcast_bytes", local.shape[0] * 8 * (self.P - 1))
+        allc = jax.lax.all_gather(local, self.axis, tiled=True)
+        return SK.merge_heavy(allc)
+
+    # -- aggregation -------------------------------------------------------
+    def sum_by(self, bag: FlatBag, keys, vals, local_preagg: bool = True,
+               use_kernel: bool = False) -> FlatBag:
+        """Gamma+ : optional local pre-aggregation (aggregation pushdown,
+        §3.3 — executed "locally at each partition"), exchange by key,
+        final local aggregation. Aggregation is inherently skew-resilient
+        (paper §5: 'Gamma+ mitigates skew-effects by default')."""
+        if local_preagg:
+            bag = X.sum_by(bag, keys, vals, use_kernel=use_kernel)
+        ex = self.exchange(bag, keys)
+        return X.sum_by(ex, keys, vals, use_kernel=use_kernel)
+
+    def dedup(self, bag: FlatBag, cols) -> FlatBag:
+        local = X.dedup(bag, cols)
+        ex = self.exchange(local, cols)
+        return X.dedup(ex, cols)
+
+    # -- BagToDict (skew-aware label repartition, Fig. 6 last row) --------
+    def bag_to_dict(self, bag: FlatBag, skew_aware: bool = True) -> FlatBag:
+        if not skew_aware:
+            return self.exchange(bag, ("label",))
+        hk = self.heavy_keys(bag, ("label",))
+        key = X.pack_keys(bag, ("label",))
+        heavy_mask = SK.is_member(key, hk) & bag.valid
+        light = self.exchange(bag, ("label",), keep=~heavy_mask)
+        heavy = bag.mask(heavy_mask)
+        # heavy labels keep their current location (skew resilience);
+        # pad the light exchange output to align capacities, then union.
+        from repro.columnar.table import concat_bags
+        return concat_bags(light, heavy)
+
+
+# ---------------------------------------------------------------------------
+# shard_map driver
+# ---------------------------------------------------------------------------
+
+def device_mesh_1d(n: int, axis: str = "data") -> Mesh:
+    devs = jax.devices()[:n]
+    import numpy as np
+    return Mesh(np.array(devs), (axis,))
+
+
+def _bag_specs(tree, axis: str):
+    return jax.tree.map(lambda _: P(axis), tree)
+
+
+def run_distributed(fn: Callable[[Dict[str, FlatBag], DistContext], dict],
+                    env: Dict[str, FlatBag], mesh: Mesh,
+                    axis: str = "data", cap_factor: float = 2.0,
+                    skew_default: bool = False,
+                    threshold: float = 0.025,
+                    jit: bool = True) -> Tuple[dict, Dict[str, int]]:
+    """Run ``fn(env_local, ctx)`` SPMD over ``mesh[axis]``.
+
+    Every FlatBag in env is row-sharded over the axis (capacities must
+    divide the axis size). Returns (outputs, metrics)."""
+    n = mesh.shape[axis]
+    for k, b in env.items():
+        assert b.capacity % n == 0, (
+            f"bag {k} capacity {b.capacity} not divisible by {n} partitions")
+
+    from jax.experimental.shard_map import shard_map
+
+    def inner(env_local):
+        ctx = DistContext(axis, n, cap_factor=cap_factor,
+                          sample=256, threshold=threshold,
+                          skew_default=skew_default)
+        out = fn(env_local, ctx)
+        return out, ctx.finalize_metrics()
+
+    in_specs = (P(axis),)            # pytree-prefix: every bag leaf sharded
+    out_specs = (P(axis), P())       # outputs sharded, metrics replicated
+
+    sm = shard_map(inner, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_rep=False)
+    if jit:
+        sm = jax.jit(sm)
+    out, metrics = sm(env)
+    return out, {k: int(v) for k, v in metrics.items()}

@@ -1,0 +1,296 @@
+"""Local (single-partition) columnar operators over FlatBag.
+
+These are the physical counterparts of the paper's plan-language
+operators (Fig. 10) under the TPU static-shape discipline:
+
+  sigma      -> select            (mask, no compaction)
+  pi         -> project / map     (column arithmetic)
+  join       -> fk_join           (build side unique — every benchmark join)
+                general_join      (M:N, static output capacity + overflow)
+  outer-join -> fk_join(how="left_outer")
+  Gamma+     -> sum_by            (sort + segment-sum; Pallas kernel inside)
+  Gamma_u    -> nest_level        (CSR regroup; labels = dense group ids)
+  dedup      -> dedup
+  mu / mu-bar-> flatten_child / outer_unnest (wide flattening, standard route)
+
+All ops are shape-static and jit-safe. Aggregation can route through the
+Pallas segment_reduce kernel (interpret mode on CPU) or the jnp fallback.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.columnar.table import FlatBag
+
+I64_MAX = jnp.iinfo(jnp.int64).max
+
+
+# ---------------------------------------------------------------------------
+# key packing
+# ---------------------------------------------------------------------------
+
+def _mix64(k: jnp.ndarray) -> jnp.ndarray:
+    """splitmix64 finalizer (bijective on 64 bits)."""
+    k = k.astype(jnp.uint64)
+    k = (k ^ (k >> 30)) * jnp.uint64(0xBF58476D1CE4E5B9)
+    k = (k ^ (k >> 27)) * jnp.uint64(0x94D049BB133111EB)
+    k = k ^ (k >> 31)
+    return k.astype(jnp.int64)
+
+
+def pack_keys(bag: FlatBag, cols: Sequence[str]) -> jnp.ndarray:
+    """Composite equality key as int64. One column: the value itself
+    (exact). Multiple columns: iterated splitmix64 combining — columns
+    may themselves be full-width 64-bit labels, so shift-packing is not
+    sound; hash-combining preserves equality with ~2^-64 pairwise
+    collision odds (DESIGN.md §7)."""
+    assert cols, "empty key"
+    arrs = [bag.col(c).astype(jnp.int64) for c in cols]
+    if len(arrs) == 1:
+        return arrs[0]
+    k = _mix64(arrs[0])
+    golden = jnp.uint64(0x9E3779B97F4A7C15)
+    for a in arrs[1:]:
+        a_salted = (a.astype(jnp.uint64) + golden).astype(jnp.int64)
+        k = _mix64(k ^ _mix64(a_salted))
+    return k
+
+
+def _sorted_by(bag: FlatBag, key: jnp.ndarray
+               ) -> Tuple[FlatBag, jnp.ndarray, jnp.ndarray]:
+    """Sort rows by (invalid-last, key). Returns (sorted bag, sorted key,
+    permutation)."""
+    order = jnp.lexsort((key, ~bag.valid))
+    data = {n: a[order] for n, a in bag.data.items()}
+    return FlatBag(data, bag.valid[order]), key[order], order
+
+
+# ---------------------------------------------------------------------------
+# sigma / pi
+# ---------------------------------------------------------------------------
+
+def select(bag: FlatBag, mask: jnp.ndarray) -> FlatBag:
+    return bag.mask(mask)
+
+
+def project(bag: FlatBag, cols: Dict[str, jnp.ndarray]) -> FlatBag:
+    """New bag with computed columns (same validity)."""
+    return FlatBag(dict(cols), bag.valid)
+
+
+# ---------------------------------------------------------------------------
+# aggregation: Gamma+ (sum_by) and dedup
+# ---------------------------------------------------------------------------
+
+def _segments(bag: FlatBag, key_cols: Sequence[str]):
+    key = pack_keys(bag, key_cols)
+    sbag, skey, order = _sorted_by(bag, key)
+    sval = sbag.valid
+    prev_key = jnp.concatenate([skey[:1] - 1, skey[:-1]])
+    prev_val = jnp.concatenate([~sval[:1], sval[:-1]])
+    seg_start = (skey != prev_key) | (sval != prev_val)
+    seg_start = seg_start.at[0].set(True)
+    seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+    return sbag, skey, seg_id
+
+
+def sum_by(bag: FlatBag, key_cols: Sequence[str], val_cols: Sequence[str],
+           use_kernel: bool = False) -> FlatBag:
+    """Gamma+: group by key_cols, sum val_cols. NULL-semantics: invalid
+    rows contribute nothing; groups of only-invalid rows are invalid.
+    Output capacity == input capacity."""
+    cap = bag.capacity
+    sbag, skey, seg_id = _segments(bag, key_cols)
+    idx = jnp.arange(cap)
+    first = jax.ops.segment_min(idx, seg_id, num_segments=cap)
+    first_c = jnp.clip(first, 0, cap - 1)
+    exists = first < cap
+    out_valid = exists & sbag.valid[first_c]
+
+    data = {}
+    for kc in key_cols:
+        data[kc] = sbag.col(kc)[first_c]
+    for vc in val_cols:
+        vals = jnp.where(sbag.valid, sbag.col(vc), 0)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            summed = kops.segment_reduce(vals, seg_id, num_segments=cap)
+        else:
+            summed = jax.ops.segment_sum(vals, seg_id, num_segments=cap)
+        data[vc] = summed
+    return FlatBag(data, out_valid)
+
+
+def dedup(bag: FlatBag, cols: Optional[Sequence[str]] = None) -> FlatBag:
+    """Keep one representative row per distinct value of ``cols``."""
+    cols = cols or bag.columns
+    sbag, skey, seg_id = _segments(bag, cols)
+    prev = jnp.concatenate([jnp.full((1,), -1, seg_id.dtype), seg_id[:-1]])
+    keep = (seg_id != prev) & sbag.valid
+    return FlatBag(sbag.data, keep)
+
+
+# ---------------------------------------------------------------------------
+# joins
+# ---------------------------------------------------------------------------
+
+def fk_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
+            right_on: Sequence[str], how: str = "inner",
+            right_prefix: str = "") -> FlatBag:
+    """Equi-join where the right (build) side is unique on its key — the
+    shape of every join in the paper's benchmarks (pk/fk). Output rows
+    align with the left side (capacity preserved).
+
+    how = "inner" | "left_outer". For left_outer, unmatched rows keep
+    left validity and get zero-defaults + a ``__matched`` bool column.
+    """
+    cap_r = right.capacity
+    rkey = pack_keys(right, right_on)
+    rkey = jnp.where(right.valid, rkey, I64_MAX)
+    order_r = jnp.argsort(rkey)
+    srk = rkey[order_r]
+
+    lkey = pack_keys(left, left_on)
+    pos = jnp.searchsorted(srk, lkey)
+    pos_c = jnp.clip(pos, 0, cap_r - 1)
+    ridx = order_r[pos_c]
+    matched = (srk[pos_c] == lkey) & right.valid[ridx] & left.valid
+
+    data = dict(left.data)
+    for n, a in right.data.items():
+        out_name = right_prefix + n
+        if out_name in data:
+            if n in right_on:
+                continue  # equal by join predicate; keep left copy
+            raise ValueError(f"join column collision: {out_name}")
+        gathered = a[ridx]
+        data[out_name] = jnp.where(matched, gathered,
+                                   jnp.zeros_like(gathered))
+    if how == "inner":
+        return FlatBag(data, matched)
+    assert how == "left_outer", how
+    data["__matched"] = matched
+    return FlatBag(data, left.valid)
+
+
+def general_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
+                 right_on: Sequence[str], out_capacity: int,
+                 how: str = "inner", right_prefix: str = "",
+                 matched_col: str = "__matched",
+                 rowid_col: Optional[str] = None
+                 ) -> Tuple[FlatBag, jnp.ndarray]:
+    """M:N equi-join with a static output capacity (the TPU analogue of
+    the paper's per-partition memory ceiling). Returns (bag, overflow):
+    overflow counts result rows that did not fit — the static-shape
+    equivalent of Spark's disk-spill/OOM crash region.
+
+    how = "left_outer" keeps unmatched left rows (one output row with
+    ``__matched`` False), which is the outer-unnest building block.
+    """
+    cap_r = right.capacity
+    rkey = pack_keys(right, right_on)
+    rkey = jnp.where(right.valid, rkey, I64_MAX)
+    order_r = jnp.argsort(rkey)
+    srk = rkey[order_r]
+
+    lkey = pack_keys(left, left_on)
+    lo = jnp.searchsorted(srk, lkey, side="left")
+    hi = jnp.searchsorted(srk, lkey, side="right")
+    cnt = jnp.where(left.valid, hi - lo, 0)
+    if how == "left_outer":
+        cnt = jnp.where(left.valid & (cnt == 0), 1, cnt)
+    offs = jnp.cumsum(cnt)                      # inclusive
+    start = offs - cnt
+    total = offs[-1]
+
+    j = jnp.arange(out_capacity)
+    li = jnp.searchsorted(offs, j, side="right")
+    li_c = jnp.clip(li, 0, left.capacity - 1)
+    within = j - start[li_c]
+    has_match = (hi[li_c] - lo[li_c]) > 0
+    ridx = order_r[jnp.clip(lo[li_c] + within, 0, cap_r - 1)]
+    out_valid = j < total
+
+    data = {n: a[li_c] for n, a in left.data.items()}
+    for n, a in right.data.items():
+        out_name = right_prefix + n
+        if out_name in data:
+            if n in right_on:
+                continue
+            raise ValueError(f"join column collision: {out_name}")
+        gathered = a[ridx]
+        data[out_name] = jnp.where(out_valid & has_match, gathered,
+                                   jnp.zeros_like(gathered))
+    if how == "left_outer":
+        data[matched_col] = has_match & out_valid
+    if rowid_col is not None:
+        # the paper's outer-unnest unique ID: one per output tuple
+        data[rowid_col] = j.astype(jnp.int64)
+    overflow = jnp.maximum(total - out_capacity, 0)
+    return FlatBag(data, out_valid), overflow
+
+
+# ---------------------------------------------------------------------------
+# standard-route flattening (mu / outer-unnest) and nesting (Gamma_u)
+# ---------------------------------------------------------------------------
+
+def flatten_child(parent: FlatBag, child: FlatBag, parent_label: str,
+                  child_label: str, out_capacity: int,
+                  outer: bool = True, matched_col: str = "__matched",
+                  rowid_col: Optional[str] = None
+                  ) -> Tuple[FlatBag, jnp.ndarray]:
+    """mu / outer-unnest: pair each parent row with its child rows (child
+    rows carry ``child_label`` pointing at ``parent_label``), gathering
+    ALL parent columns wide onto the result — this is the paper's
+    flattening cost, reproduced byte-for-byte."""
+    how = "left_outer" if outer else "inner"
+    return general_join(parent, child, [parent_label], [child_label],
+                        out_capacity, how=how, matched_col=matched_col,
+                        rowid_col=rowid_col)
+
+
+def nest_level(bag: FlatBag, group_cols: Sequence[str],
+               child_cols: Sequence[str], label_col: str,
+               child_valid_col: Optional[str] = None
+               ) -> Tuple[FlatBag, FlatBag]:
+    """Gamma_u: regroup a wide bag into (parents, children):
+
+      parents  — one row per distinct group_cols, plus ``label_col`` with
+                 a fresh dense label (the group id);
+      children — child_cols of every input row, plus ``label_col``.
+
+    ``child_valid_col`` (from outer joins) marks rows that represent an
+    empty bag: the parent row is kept, the child row is dropped — the
+    paper's NULL -> empty-bag cast in Gamma."""
+    cap = bag.capacity
+    sbag, skey, seg_id = _segments(bag, group_cols)
+    idx = jnp.arange(cap)
+    first = jax.ops.segment_min(idx, seg_id, num_segments=cap)
+    first_c = jnp.clip(first, 0, cap - 1)
+    exists = first < cap
+    parent_valid = exists & sbag.valid[first_c]
+
+    pdata = {c: sbag.col(c)[first_c] for c in group_cols}
+    pdata[label_col] = jnp.arange(cap, dtype=jnp.int64)
+    parents = FlatBag(pdata, parent_valid)
+
+    cdata = {c: sbag.col(c) for c in child_cols}
+    cdata[label_col] = seg_id.astype(jnp.int64)
+    child_valid = sbag.valid
+    if child_valid_col is not None:
+        child_valid = child_valid & sbag.col(child_valid_col)
+    children = FlatBag(cdata, child_valid)
+    return parents, children
+
+
+# ---------------------------------------------------------------------------
+# set ops
+# ---------------------------------------------------------------------------
+
+def union_all(a: FlatBag, b: FlatBag) -> FlatBag:
+    from repro.columnar.table import concat_bags
+    return concat_bags(a, b)

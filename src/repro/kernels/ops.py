@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU
+set ``repro.kernels.ops.INTERPRET = False`` (the launcher does this when
+it detects TPU devices). Each wrapper falls back to the jnp oracle when
+``USE_REF`` is set — the knob benchmarks use to compare.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .rwkv6_scan import rwkv6_pallas
+from .segment_reduce import segment_reduce_pallas
+
+INTERPRET = True    # CPU container: interpret mode; launcher flips on TPU
+USE_REF = False
+
+
+def detect_backend():
+    global INTERPRET
+    INTERPRET = jax.default_backend() != "tpu"
+
+
+def segment_reduce(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                   num_segments: int) -> jnp.ndarray:
+    """Sorted-segment sum. values (n,) or (n, d)."""
+    squeeze = values.ndim == 1
+    if squeeze:
+        values = values[:, None]
+    dtype = values.dtype
+    if USE_REF:
+        out = ref.segment_reduce_ref(values.astype(jnp.float32),
+                                     seg_ids, num_segments)
+    else:
+        out = segment_reduce_pallas(values.astype(jnp.float32),
+                                    seg_ids, num_segments,
+                                    interpret=INTERPRET)
+    out = out.astype(dtype)
+    return out[:, 0] if squeeze else out
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    if USE_REF:
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=INTERPRET)
+
+
+def rwkv6_scan(r, k, v, w, u, chunk: int = 64):
+    if USE_REF:
+        return ref.rwkv6_ref(r, k, v, w, u)
+    return rwkv6_pallas(r, k, v, w, u, chunk=chunk, interpret=INTERPRET)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_reduce_ref(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                       num_segments: int) -> jnp.ndarray:
+    """Oracle for kernels.segment_reduce: jax.ops.segment_sum with
+    out-of-range ids dropped."""
+    ok = (seg_ids >= 0) & (seg_ids < num_segments)
+    vals = jnp.where(ok[:, None], values, 0)
+    ids = jnp.where(ok, seg_ids, 0)
+    return jax.ops.segment_sum(vals, ids, num_segments=num_segments)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Oracle for kernels.flash_attention: materialized-scores softmax
+    attention with GQA/causal/sliding-window/softcap."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.rwkv6_scan: the sequential RWKV-6 recurrence.
+
+      r,k,w: (B, H, T, K)   v: (B, H, T, V)   u: (H, K)
+      S_t   = diag(w_t) S_{t-1} + k_t v_t^T          (state: K x V)
+      o_t   = (r_t (S_{t-1} + diag(u) k_t v_t^T))    (1 x V)
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[:, None] * v_t[None, :]            # (K, V)
+        o = (r_t[None, :] @ (S + u_h[:, None] * kv))[0]
+        S = w_t[:, None] * S + kv
+        return S, o
+
+    out = jnp.zeros((B, H, T, V), jnp.float32)
+    for b in range(B):
+        for h in range(H):
+            u_h = u[h]
+            S0 = jnp.zeros((K, V), jnp.float32)
+            _, o = jax.lax.scan(
+                lambda S, inp: step(S, inp), S0,
+                (r[b, h].astype(jnp.float32), k[b, h].astype(jnp.float32),
+                 v[b, h].astype(jnp.float32), w[b, h].astype(jnp.float32)))
+            out = out.at[b, h].set(o)
+    return out.astype(r.dtype)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: RWKV-6 chunked linear recurrence (Finch).
+
+The RWKV-6 time-mix is a linear recurrence with *data-dependent,
+per-channel* decay:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+A naive scan is O(T) sequential matvecs — hostile to the MXU. We use
+the chunked form: within a chunk of C steps the pairwise decay factor
+between source i and query t is exp(cwe[t] - cwi[i]) (sums of logs of
+w in (0,1], hence <= 0: numerically stable without rescaling). The
+inter-chunk term is a (C,K)x(K,V) matmul against the carried state —
+MXU work — while the intra-chunk term is VPU elementwise over (C,C,K).
+State is carried across the chunk axis in VMEM scratch (TPU grid
+iteration is sequential over the last axis).
+
+This is the TPU adaptation argued in DESIGN.md: the paper's insight
+"split work into a bulk-parallel part and a small sequential carry" is
+the same discipline as sequential-materialization; hardware-wise the
+kernel trades O(C^2 K) elementwise for MXU-friendly chunk boundaries.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)     # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)     # (C, V)
+    w = w_ref[0].astype(jnp.float32)     # (C, K), decays in (0, 1]
+    u = u_ref[0].astype(jnp.float32)     # (K,)
+
+    lw = jnp.log(jnp.maximum(w, 1e-12))
+    cwi = jnp.cumsum(lw, axis=0)                       # inclusive
+    cwe = cwi - lw                                     # exclusive
+
+    # intra-chunk pairwise term: A[t,i] = sum_c r[t,c] k[i,c]
+    #                                      exp(cwe[t,c] - cwi[i,c]),  i < t
+    diff = cwe[:, None, :] - cwi[None, :, :]           # (C, C, K), <= 0
+    A = jnp.einsum("tc,ic,tic->ti", r, k, jnp.exp(diff))
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(i_idx < t_idx, A, 0.0)
+    # current-token bonus (diagonal): r_t . (u * k_t)
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)        # (C,)
+    A = A + jnp.diag(bonus)
+    o = A @ v                                          # (C, V)
+
+    # inter-chunk term: q'[t] = r[t] * exp(cwe[t]) against carried state
+    qp = r * jnp.exp(cwe)
+    o = o + jax.lax.dot_general(qp, s_scr[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: S' = (k * exp(cwi[C-1]-cwi))^T v + diag(exp(cwi[-1])) S
+    decay_all = jnp.exp(cwi[-1])                       # (K,)
+    kp = k * jnp.exp(cwi[-1][None, :] - cwi)
+    s_scr[...] = decay_all[:, None] * s_scr[...] + jax.lax.dot_general(
+        kp, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def rwkv6_pallas(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 w: jnp.ndarray, u: jnp.ndarray, chunk: int = 64,
+                 interpret: bool = True) -> jnp.ndarray:
+    """r,k,w: (B,H,T,K); v: (B,H,T,V); u: (H,K). Returns (B,H,T,V)."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        zr = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r = jnp.pad(r, zr)
+        k = jnp.pad(k, zr)
+        v = jnp.pad(v, zr)
+        w = jnp.pad(w, zr, constant_values=1.0)
+    Tp = T + pad
+    rf = r.reshape(B * H, Tp, K)
+    kf = k.reshape(B * H, Tp, K)
+    vf = v.reshape(B * H, Tp, V)
+    wf = w.reshape(B * H, Tp, K)
+    uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid = (B * H, Tp // chunk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, V), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, K), lambda bh, ci: (bh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, V), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tp, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf)
+    return out.reshape(B, H, Tp, V)[:, :, :T, :]

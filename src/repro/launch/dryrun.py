@@ -1,0 +1,375 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, with NO allocation (ShapeDtypeStruct inputs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek_67b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell it records to benchmarks/results/dryrun_<arch>_<shape>_<mesh>.json:
+  * memory_analysis (bytes per device: args/outputs/temps/code),
+  * cost_analysis   (HLO flops / bytes accessed / transcendentals),
+  * collective operand bytes by op kind (parsed from the post-SPMD HLO),
+  * parameter/optimizer byte tallies and MODEL_FLOPS (6*N*D terms),
+which benchmarks/roofline.py turns into the three-term roofline table.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro  # noqa: F401  (x64 config)
+from repro.configs import ARCHS, SHAPES, cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import sharding as SH
+from repro.models import transformer as T
+from repro.models.config import LayerKind, ModelConfig
+from repro.train import optim as O
+from repro.train.train_loop import (decode_step_fn, prefill_step_fn,
+                                    train_step_fn)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results")
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, *axes):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=SH.named_sharding(*axes))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict:
+    """Stand-ins for every model input of the given benchmark shape."""
+    sh = SHAPES[shape_name]
+    S, B, step = sh["seq_len"], sh["global_batch"], sh["step"]
+    if step == "train":
+        batch = {
+            "tokens": _sds((B, S), jnp.int32, "dp", None),
+            "labels": _sds((B, S), jnp.int32, "dp", None),
+        }
+        if cfg.n_image_tokens:
+            batch["embeds_prefix"] = _sds(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16,
+                "dp", None, None)
+        if cfg.enc_layers:
+            batch["enc_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16,
+                                       "dp", None, None)
+        return {"batch": batch}
+    if step == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32, "dp", None)}
+        if cfg.enc_layers:
+            batch["enc_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16,
+                                       "dp", None, None)
+        if cfg.n_image_tokens:
+            batch["embeds_prefix"] = _sds(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16,
+                "dp", None, None)
+        return {"batch": batch}
+    assert step == "decode"
+    long_ctx = B == 1      # long_500k: shard the sequence, not the batch
+    bd = None if long_ctx else "dp"
+    sq = "sp" if long_ctx else None
+    caches = {}
+    nb = cfg.n_blocks
+    dt = jnp.bfloat16
+    # KV caches: batch over dp; head_dim over model (kv_heads < 16 on
+    # most archs, so TP lands on the head_dim axis — QK^T/PV contract it
+    # and GSPMD inserts the psum); long-context shards seq over data.
+    hd_ax = "model" if cfg.hd % 16 == 0 else None
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)
+        if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+            kv_shape = (nb, B, cfg.n_kv_heads, S, cfg.hd)
+            caches[str(pos)] = {
+                "kv_k": _sds(kv_shape, dt, None, bd, None, sq, hd_ax),
+                "kv_v": _sds(kv_shape, dt, None, bd, None, sq, hd_ax),
+            }
+        elif kind == LayerKind.MAMBA:
+            din = cfg.mamba_expand * cfg.d_model
+            caches[str(pos)] = {
+                "conv": _sds((nb, B, cfg.mamba_conv - 1, din), dt,
+                             None, bd, None, "model"),
+                "ssm": _sds((nb, B, din, cfg.mamba_d_state), jnp.float32,
+                            None, bd, "model", None),
+            }
+        elif kind == LayerKind.RWKV:
+            H = cfg.d_model // cfg.rwkv_head_dim
+            K = cfg.rwkv_head_dim
+            caches[str(pos)] = {
+                "shift": _sds((nb, B, 1, cfg.d_model), dt,
+                              None, bd, None, None),
+                "wkv": _sds((nb, B, H, K, K), jnp.float32,
+                            None, bd, "model", None, None),
+            }
+    batch = {
+        "token": _sds((B,), jnp.int32, bd),
+        "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.enc_layers:
+        batch["enc_out"] = _sds((B, S, cfg.d_model), dt, bd, None, None)
+    return {"caches": caches, "batch": batch}
+
+
+def opt_shardings(ocfg: O.OptConfig, cfg: ModelConfig, fsdp: bool = False):
+    """Optimizer-state shardings derived from the parameter defs.
+    Under FSDP they inherit the data-sharded axes (ZeRO for free)."""
+    defs = T.param_defs(cfg, fsdp=fsdp)
+
+    def leaf(pd: T.PD):
+        return SH.named_sharding(*pd.axes)
+
+    def fact(pd: T.PD):
+        if len(pd.shape) >= 2:
+            return {"vr": SH.named_sharding(*pd.axes[:-1]),
+                    "vc": SH.named_sharding(*(pd.axes[:-2] + pd.axes[-1:]))}
+        return {"v": SH.named_sharding(*pd.axes)}
+
+    if ocfg.kind == "adamw":
+        return {"step": SH.named_sharding(),
+                "m": T._leaf_map(leaf, defs), "v": T._leaf_map(leaf, defs)}
+    return {"step": SH.named_sharding(), "f": T._leaf_map(fact, defs)}
+
+
+USE_FSDP_TRAIN = True   # §Perf B2/C1: FSDP weight sharding for train
+                        # (set False to reproduce the paper-faithful
+                        # TP-only baseline recorded in results_baseline/)
+
+
+def abstract_opt_state(ocfg: O.OptConfig, cfg: ModelConfig,
+                       shardings) -> Dict:
+    ab = O.abstract_state(ocfg, T.abstract_params(cfg))
+
+    def attach(x, s):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s)
+
+    return jax.tree.map(attach, ab, shardings)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+                "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                       r"pred|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes of every collective op in post-SPMD HLO."""
+    out = {k: 0 for k in _COLL_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in _COLL_OPS:
+            # match "= shape op(" — result type precedes the op name
+            idx = stripped.find(f" {op}(")
+            if idx == -1:
+                idx = stripped.find(f" {op}-start(")
+            if idx == -1:
+                continue
+            eq = stripped.find("=")
+            if eq == -1 or "-done(" in stripped:
+                continue
+            result_type = stripped[eq + 1:idx]
+            out[op] += _shape_bytes(result_type)
+            out["count"] += 1
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> Dict[str, float]:
+    sh = SHAPES[shape_name]
+    S, B, step = sh["seq_len"], sh["global_batch"], sh["step"]
+    abs_p = T.abstract_params(cfg)
+    n_total = sum(np.prod(x.shape) for x in jax.tree.leaves(abs_p))
+    # active params: subtract non-routed experts
+    n_active = n_total
+    if cfg.moe is not None:
+        m = cfg.moe
+        n_moe = sum(1 for i in range(cfg.n_layers) if cfg.has_moe_at(i))
+        mult = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        n_active -= n_moe * (m.num_experts - m.top_k) * mult \
+            * cfg.d_model * m.d_ff_expert
+    tokens = B * S if step in ("train", "prefill") else B
+    factor = 6 if step == "train" else 2
+    return {"params_total": float(n_total),
+            "params_active": float(n_active),
+            "tokens": float(tokens),
+            "model_flops": float(factor) * float(n_active) * float(tokens)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = None, verbose: bool = True) -> Optional[dict]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    SH.set_mesh(mesh)
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    step = sh["step"]
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "chips": int(np.prod(mesh.devices.shape)),
+              "step": step}
+
+    t0 = time.time()
+    fsdp = USE_FSDP_TRAIN and step == "train"
+    record["fsdp"] = fsdp
+    params_ab = jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        T.abstract_params(cfg), T.param_shardings(cfg, fsdp=fsdp))
+    specs = input_specs(cfg, shape_name)
+
+    with mesh:
+        if step == "train":
+            step_callable, ocfg = train_step_fn(cfg)
+            record["optimizer"] = ocfg.kind
+            osh = opt_shardings(ocfg, cfg, fsdp=fsdp)
+            opt_ab = abstract_opt_state(ocfg, cfg, osh)
+            fn = jax.jit(step_callable, donate_argnums=(0, 1))
+            lowered = fn.lower(params_ab, opt_ab, specs["batch"])
+        elif step == "prefill":
+            fn = jax.jit(prefill_step_fn(cfg))
+            lowered = fn.lower(params_ab, specs["batch"])
+        else:
+            fn = jax.jit(decode_step_fn(cfg), donate_argnums=(1,))
+            lowered = fn.lower(params_ab, specs["caches"], specs["batch"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    record["lower_s"] = round(t_lower, 2)
+    record["compile_s"] = round(t_compile, 2)
+
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")
+            if hasattr(mem, k)}
+        print(mem)
+    except Exception as e:  # CPU backend may not implement it
+        record["memory_analysis"] = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        record["cost_analysis"] = {
+            k: float(v) for k, v in cost.items()
+            if k in ("flops", "bytes accessed", "transcendentals",
+                     "optimal_seconds")
+            or k.startswith("bytes accessed")}
+        print({k: v for k, v in record["cost_analysis"].items()
+               if k in ("flops", "bytes accessed")})
+    except Exception as e:
+        record["cost_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    record["collectives"] = collective_bytes(hlo)
+    record["hlo_bytes"] = len(hlo)
+    # trip-count-scaled per-device analysis (rolled scans counted fully)
+    from repro.launch import hlo_analysis as HA
+    record["scaled"] = HA.analyze(hlo)
+    record.update(model_flops(cfg, shape_name))
+    # parameter memory tally (per chip)
+    n_param_bytes = sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(T.abstract_params(cfg)))
+    record["param_bytes_total"] = n_param_bytes
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"dryrun_{arch}_{shape_name}_{record['mesh']}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(record, f, indent=1)
+    if verbose:
+        coll = record["collectives"]
+        print(f"[{record['mesh']}] {arch} x {shape_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s  "
+              f"collectives: {coll['count']} ops "
+              f"{sum(v for k, v in coll.items() if k != 'count')/2**30:.2f} GiB")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out = args.out or os.path.normpath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "../../..", "benchmarks", "results"))
+
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.all:
+        todo = [(a, s, skip) for a, s, skip in cells()]
+    else:
+        assert args.arch and args.shape
+        todo = [(args.arch, args.shape, None)]
+
+    failures = []
+    for arch, shape_name, skip in todo:
+        if skip:
+            print(f"SKIP {arch} x {shape_name}: {skip}")
+            continue
+        for mp in meshes:
+            try:
+                run_cell(arch, shape_name, mp, out_dir=out)
+            except Exception as e:
+                import traceback
+                traceback.print_exc()
+                failures.append((arch, shape_name, mp, str(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

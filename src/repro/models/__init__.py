@@ -1,0 +1,1 @@
+from .config import ModelConfig, MoECfg, LayerKind  # noqa: F401

@@ -1,0 +1,198 @@
+"""Shared model layers: norms, RoPE, MLP variants, chunked attention.
+
+Attention here is the XLA-native *chunked* (online-softmax) form —
+memory O(S·D) instead of O(S²) — which is what the dry-run lowers (it
+both compiles at 32k/500k and yields honest cost_analysis). The Pallas
+flash kernel in ``repro.kernels`` is the TPU fast path, numerically
+validated against the same oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))
+            ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, H, S, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, None, :, None] * freq
+    else:
+        ang = positions.astype(jnp.float32)[:, None, :, None] * freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_apply(kind: str, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["wi0"]) * (x @ p["wi1"])) @ p["wo"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["wi0"]) * (x @ p["wi1"])) @ p["wo"]
+    if kind == "sq_relu":
+        h = jax.nn.relu(x @ p["wi0"])
+        return (h * h) @ p["wo"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ p["wi0"]) @ p["wo"]
+    raise ValueError(kind)
+
+
+def mlp_param_shapes(kind: str, d: int, ff: int) -> dict:
+    if kind in ("swiglu", "geglu"):
+        return {"wi0": (d, ff), "wi1": (d, ff), "wo": (ff, d)}
+    return {"wi0": (d, ff), "wo": (ff, d)}
+
+
+# ---------------------------------------------------------------------------
+# chunked (online-softmax) attention — XLA-native flash
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, window: Optional[int] = None,
+                      softcap: Optional[float] = None,
+                      scale: Optional[float] = None,
+                      chunk: int = 1024,
+                      q_offset: int = 0,
+                      kv_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q: (B,H,Sq,D); k,v: (B,Hkv,Sk,D). Online softmax over KV chunks:
+    peak memory O(Sq x chunk) per head instead of O(Sq x Sk).
+
+    ``q_offset``: absolute position of q[0] (decode: Sk-1).
+    ``kv_valid``: optional (B, Sk) mask of valid cache slots."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        if kv_valid is not None:
+            kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+    Skp = Sk + pad
+    n_chunks = Skp // chunk
+    kc = k.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, Hkv, n_chunks, chunk, D).transpose(2, 0, 1, 3, 4)
+    if kv_valid is not None:
+        mc = kv_valid.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    else:
+        mc = jnp.ones((n_chunks, B, chunk), bool)
+
+    rows = q_offset + jnp.arange(Sq)
+    qf = q.astype(jnp.float32)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kj, vj, mj, cj = inp
+        kj = jnp.repeat(kj, group, axis=1).astype(jnp.float32)
+        vj = jnp.repeat(vj, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = cj * chunk + jnp.arange(chunk)
+        mask = (cols[None, :] < Sk) & jnp.ones((Sq, 1), bool)
+        if causal:
+            mask &= cols[None, :] <= rows[:, None]
+        if window is not None:
+            mask &= cols[None, :] > rows[:, None] - window
+        mask = mask[None, None] & mj[:, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhqk,bhkd->bhqd", p, vj)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, Sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc, vc, mc, jnp.arange(n_chunks)))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def decode_attention(q1: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None) -> jnp.ndarray:
+    """Single-step decode: q1 (B,H,1,D) against cache (B,Hkv,Smax,D).
+    ``cache_len``: number of valid cache entries (the new token's
+    position is cache_len - 1 after insertion)."""
+    B, Hkv, Smax, D = k_cache.shape
+    pos = jnp.arange(Smax)
+    valid = pos[None, :] < cache_len
+    if window is not None:
+        valid &= pos[None, :] > cache_len - 1 - window
+    valid = jnp.broadcast_to(valid, (B, Smax))
+    return chunked_attention(q1, k_cache, v_cache, causal=False,
+                             softcap=softcap, kv_valid=valid,
+                             q_offset=0, chunk=4096)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (avoids materializing (B,S,V) logits)
+# ---------------------------------------------------------------------------
+
+def chunked_xent(h: jnp.ndarray, emb: jnp.ndarray, labels: jnp.ndarray,
+                 chunk: int = 512,
+                 final_softcap: Optional[float] = None) -> jnp.ndarray:
+    """h: (B,S,d); emb: (V,d) (tied head); labels: (B,S) int32."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (S + pad) // chunk
+    hc = h.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def step(tot, inp):
+        hj, lj = inp
+        logits = (hj.astype(jnp.float32)
+                  @ emb.T.astype(jnp.float32))          # (B, chunk, V)
+        if final_softcap is not None:
+            logits = final_softcap * jnp.tanh(logits / final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lj, 0)[..., None], axis=-1)[..., 0]
+        ok = lj >= 0
+        loss = jnp.where(ok, lse - gold, 0.0)
+        return (tot[0] + jnp.sum(loss),
+                tot[1] + jnp.sum(ok).astype(jnp.int32)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hc, lc))
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,56 @@
+"""Logical-axis sharding helpers shared by models and the launcher.
+
+Logical axes: "dp" (batch: pod x data), "model" (tensor/expert
+parallel), "sp" (sequence: data axis, long-context decode). The
+launcher installs the physical mesh; without one (CPU smoke tests)
+every constraint is a no-op.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def logical_to_physical(axis: Optional[str]):
+    if axis is None or _MESH is None:
+        return None
+    names = _MESH.axis_names
+    if axis == "dp":
+        return tuple(a for a in ("pod", "data") if a in names) or None
+    if axis == "sp":
+        return "data" if "data" in names else None
+    if axis == "model":
+        return "model" if "model" in names else None
+    return axis if axis in names else None
+
+
+def pspec(*axes) -> P:
+    return P(*[logical_to_physical(a) for a in axes])
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint on logical axes; no-op without a mesh."""
+    if _MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, pspec(*axes)))
+
+
+def named_sharding(*axes) -> Optional[NamedSharding]:
+    if _MESH is None:
+        return None
+    return NamedSharding(_MESH, pspec(*axes))

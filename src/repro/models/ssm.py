@@ -1,0 +1,236 @@
+"""State-space / linear-recurrence mixers: RWKV-6 and Mamba.
+
+Both are written in chunk-parallel / scan form so the 500k-token
+long-context decode shape lowers with O(1) state, and the 4k training
+shape compiles to a single fori-loop HLO (no unrolling).
+
+``rwkv6_chunked`` is the XLA twin of ``kernels/rwkv6_scan.py`` (same
+chunked math; the Pallas kernel is the TPU fast path and is validated
+against the same oracle).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent per-channel decay
+# ---------------------------------------------------------------------------
+
+def rwkv6_chunked(r, k, v, w, u, chunk: int = 64):
+    """r,k,w: (B,H,T,K); v: (B,H,T,V); u: (H,K) -> (B,H,T,V).
+
+    Chunked linear recurrence: intra-chunk pairwise decays are exact
+    (exp of non-positive log-decay sums), the inter-chunk term is a
+    matmul against the carried (K,V) state."""
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        zp = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r, k, v = jnp.pad(r, zp), jnp.pad(k, zp), jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)
+    Tp = T + pad
+    n = Tp // chunk
+
+    def reshape(x, d):
+        return x.reshape(B, H, n, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, wc = reshape(r, K), reshape(k, K), reshape(w, K)
+    vc = reshape(v, V)
+
+    t_idx = jnp.arange(chunk)[:, None]
+    i_idx = jnp.arange(chunk)[None, :]
+    tri = (i_idx < t_idx)
+
+    def step(S, inp):
+        rj, kj, vj, wj = [x.astype(jnp.float32) for x in inp]
+        lw = jnp.log(jnp.maximum(wj, 1e-12))
+        cwi = jnp.cumsum(lw, axis=-2)
+        cwe = cwi - lw
+        diff = cwe[..., :, None, :] - cwi[..., None, :, :]   # (B,H,C,C,K)
+        A = jnp.einsum("bhtc,bhic,bhtic->bhti", rj, kj, jnp.exp(diff))
+        A = jnp.where(tri[None, None], A, 0.0)
+        bonus = jnp.einsum("bhtc,hc,bhtc->bht", rj,
+                           u.astype(jnp.float32), kj)
+        o = jnp.einsum("bhti,bhiv->bhtv", A, vj) \
+            + bonus[..., None] * vj \
+            + jnp.einsum("bhtc,bhcv->bhtv", rj * jnp.exp(cwe), S)
+        decay_all = jnp.exp(cwi[..., -1, :])                 # (B,H,K)
+        kp = kj * jnp.exp(cwi[..., -1:, :] - cwi)
+        S = decay_all[..., None] * S + jnp.einsum("bhtc,bhtv->bhcv", kp, vj)
+        return S, o
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    _, out = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, Tp, V)
+    return out[:, :, :T].astype(r.dtype)
+
+
+def rwkv6_step(S, r1, k1, v1, w1, u):
+    """One decode step. S: (B,H,K,V); r1,k1,w1: (B,H,K); v1: (B,H,V)."""
+    rf, kf, vf, wf = [x.astype(jnp.float32) for x in (r1, k1, v1, w1)]
+    kv = kf[..., :, None] * vf[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", rf, S + u[None, :, :, None] * kv)
+    S = wf[..., None] * S + kv
+    return S, o.astype(r1.dtype)
+
+
+def rwkv_mixer_params(d: int, n_heads: int, hd: int, lora: int = 64):
+    return {
+        "ln": (d,), "mu": (4, d),
+        "wr": (d, d), "wk": (d, d), "wv": (d, d), "wg": (d, d),
+        "wo": (d, d),
+        "w0": (n_heads, hd), "wa": (d, lora), "wb": (lora, d),
+        "u": (n_heads, hd), "gn": (d,),
+    }
+
+
+def rwkv_mixer(p: dict, x: jnp.ndarray, cfg, prev: Optional[jnp.ndarray],
+               state: Optional[jnp.ndarray] = None, decode: bool = False):
+    """RWKV-6 time-mix. x: (B,S,d). prev: (B,1,d) last token of previous
+    segment (token shift), zeros at start. Returns (out, (last_x, S))."""
+    B, S, d = x.shape
+    H = cfg.n_heads if d % cfg.n_heads == 0 else d // cfg.rwkv_head_dim
+    H = d // cfg.rwkv_head_dim
+    K = cfg.rwkv_head_dim
+    if prev is None:
+        prev = jnp.zeros((B, 1, d), x.dtype)
+    xx = jnp.concatenate([prev, x[:, :-1]], axis=1)     # token shift
+
+    def mix(i):
+        mu = p["mu"][i]
+        return x * mu + xx * (1.0 - mu)
+
+    xr, xk, xv, xw = mix(0), mix(1), mix(2), mix(3)
+    r = (xr @ p["wr"]).reshape(B, S, H, K).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk"]).reshape(B, S, H, K).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv"]).reshape(B, S, H, K).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xr @ p["wg"])
+    # data-dependent decay (low-rank): w in (0,1)
+    dlog = p["w0"].reshape(1, 1, d) + jnp.tanh(xw @ p["wa"]) @ p["wb"]
+    w = jnp.exp(-jnp.exp(jnp.clip(dlog.astype(jnp.float32), -10, 4)))
+    w = w.reshape(B, S, H, K).transpose(0, 2, 1, 3).astype(x.dtype)
+
+    if decode:
+        assert S == 1
+        S_new, o1 = rwkv6_step(state, r[:, :, 0], k[:, :, 0], v[:, :, 0],
+                               w[:, :, 0], p["u"])
+        o = o1[:, :, None, :].transpose(0, 2, 1, 3)
+        new_state = S_new
+    else:
+        o = rwkv6_chunked(r, k, v, w, p["u"], chunk=cfg.rwkv_chunk)
+        # recompute final state for segment hand-off (training ignores it)
+        new_state = None
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, d)
+    o = rms_norm(o, p["gn"], cfg.norm_eps) * g
+    return o @ p["wo"], (x[:, -1:], new_state)
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective scan)
+# ---------------------------------------------------------------------------
+
+def mamba_params(d: int, expand: int, n_state: int, conv: int,
+                 dt_rank: int):
+    din = expand * d
+    return {
+        "ln": (d,),
+        "in_proj": (d, 2 * din),
+        "conv_w": (conv, din), "conv_b": (din,),
+        "w_dt1": (din, dt_rank), "w_dt2": (dt_rank, din), "dt_b": (din,),
+        "wB": (din, n_state), "wC": (din, n_state),
+        "A_log": (din, n_state), "D": (din,),
+        "out_proj": (din, d),
+    }
+
+
+def mamba_mixer(p: dict, x: jnp.ndarray, cfg,
+                conv_state: Optional[jnp.ndarray] = None,
+                ssm_state: Optional[jnp.ndarray] = None,
+                decode: bool = False):
+    """Selective SSM. x: (B,S,d). Returns (out, (conv_state, ssm_state))."""
+    B, S, d = x.shape
+    din = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    kw = cfg.mamba_conv
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                  # (B,S,din)
+
+    # causal depthwise conv1d
+    if decode:
+        assert S == 1 and conv_state is not None
+        window = jnp.concatenate([conv_state, xin], axis=1)  # (B,kw,din)
+        conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        conv_out = conv_out[:, None, :]
+        new_conv = window[:, 1:]
+    else:
+        pad = jnp.zeros((B, kw - 1, din), xin.dtype)
+        xin_p = jnp.concatenate([pad, xin], axis=1)
+        idx = jnp.arange(S)[:, None] + jnp.arange(kw)[None, :]
+        windows = xin_p[:, idx]                          # (B,S,kw,din)
+        conv_out = jnp.einsum("bskc,kc->bsc", windows, p["conv_w"]) \
+            + p["conv_b"]
+        new_conv = xin_p[:, S:S + kw - 1] if decode else xin_p[:, -(kw - 1):]
+    h = jax.nn.silu(conv_out)
+
+    dt = jax.nn.softplus((h @ p["w_dt1"]) @ p["w_dt2"] + p["dt_b"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # (din,n)
+    Bm = h @ p["wB"]                                     # (B,S,n)
+    Cm = h @ p["wC"]
+
+    if decode:
+        da = jnp.exp(dt.astype(jnp.float32)[:, 0, :, None] * A[None])
+        db = (dt * h).astype(jnp.float32)[:, 0, :, None] \
+            * Bm.astype(jnp.float32)[:, 0, None, :]
+        s = ssm_state * da + db                          # (B,din,n)
+        y = jnp.einsum("bcn,bn->bc", s, Cm[:, 0].astype(jnp.float32))
+        y = y[:, None, :]
+        new_ssm = s
+    else:
+        # §Perf hillclimb (jamba, memory term): the (B,S,din,n) outer
+        # products da/db are never materialized — the scan carries only
+        # (dt*h, B, C) per step and forms the (B,din,n) update in-body,
+        # cutting temp HBM by ~n_state x (EXPERIMENTS.md §Perf A1).
+        def step(s, inp):
+            dt_t, dh_t, b_t, c_t = inp                   # (B,din),(B,din),(B,n),(B,n)
+            da_t = jnp.exp(dt_t[..., None] * A[None])    # (B,din,n)
+            s = s * da_t + dh_t[..., None] * b_t[:, None, :]
+            y = jnp.einsum("bcn,bn->bc", s, c_t)
+            return s, y
+
+        # §Perf A2 (jamba, memory term): two-level scan — the outer scan
+        # stores carries only at chunk boundaries; the inner scan is
+        # rematerialized in the backward pass (jax.checkpoint), so the
+        # per-step (B,din,n) linearization states never hit HBM all at
+        # once (EXPERIMENTS.md §Perf).
+        chunk = 256 if S % 256 == 0 else (S if S < 256 else 1)
+        s0 = jnp.zeros((B, din, n), jnp.float32)
+        xs = (dt.astype(jnp.float32).transpose(1, 0, 2),
+              (dt * h).astype(jnp.float32).transpose(1, 0, 2),
+              Bm.astype(jnp.float32).transpose(1, 0, 2),
+              Cm.astype(jnp.float32).transpose(1, 0, 2))
+        if chunk > 1 and S % chunk == 0:
+            xs_c = jax.tree.map(
+                lambda x: x.reshape((S // chunk, chunk) + x.shape[1:]), xs)
+
+            @jax.checkpoint
+            def chunk_step(s, inp):
+                return jax.lax.scan(step, s, inp)
+
+            _, ys = jax.lax.scan(chunk_step, s0, xs_c)
+            ys = ys.reshape((S,) + ys.shape[2:])
+        else:
+            _, ys = jax.lax.scan(step, s0, xs)
+        y = ys.transpose(1, 0, 2)                        # (B,S,din)
+        new_ssm = None
+    y = y.astype(x.dtype) + h * p["D"][None, None]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], (new_conv, new_ssm)

@@ -1,0 +1,491 @@
+"""The architecture zoo: one generic stacked-block LM covering all ten
+assigned architectures (dense GQA / MoE / SSM / hybrid / enc-dec / VLM).
+
+Layers are stacked per pattern position and scanned over blocks (one
+block = one pattern period), keeping the HLO size independent of depth
+— 95-layer deepseek compiles as fast as 6-layer whisper.
+
+Params are nested dicts of arrays; ``param_defs`` describes shapes +
+logical sharding axes, from which ``abstract_params`` (dry-run),
+``init_params`` (smoke/examples) and ``param_shardings`` derive.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sharding as SH
+from .config import LayerKind, ModelConfig
+from .layers import (chunked_attention, chunked_xent, decode_attention,
+                     mlp_apply, mlp_param_shapes, rms_norm, rope)
+from .moe import moe_apply, moe_param_shapes
+from .ssm import (mamba_mixer, mamba_params, rwkv_mixer, rwkv_mixer_params,
+                  rwkv6_step)
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PD:
+    shape: tuple
+    axes: tuple            # logical sharding per dim (None | "model" | ...)
+    init: str = "normal"   # normal | zeros | ones
+
+
+def _attn_defs(cfg: ModelConfig, cross: bool = False,
+               fsdp: bool = False) -> Dict[str, PD]:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pre = "x" if cross else ""
+    dd = "data" if fsdp else None
+    return {
+        pre + "wq": PD((d, H * hd), (dd, "model")),
+        pre + "wk": PD((d, Hkv * hd), (dd, "model")),
+        pre + "wv": PD((d, Hkv * hd), (dd, "model")),
+        pre + "wo": PD((H * hd, d), ("model", dd)),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig, fsdp: bool = False) -> Dict[str, PD]:
+    out = {}
+    dd = "data" if fsdp else None
+    for name, shape in mlp_param_shapes(cfg.mlp, cfg.d_model, cfg.d_ff).items():
+        axes = (dd, "model") if name.startswith("wi") else ("model", dd)
+        out[name] = PD(shape, axes)
+    return out
+
+
+MODEL_AXIS_SIZE = 16  # production meshes use model=16 (launch/mesh.py)
+
+
+def _moe_defs(cfg: ModelConfig, fsdp: bool = False) -> Dict[str, PD]:
+    m = cfg.moe
+    out = {}
+    shapes = moe_param_shapes(cfg.d_model, m.d_ff_expert, m.num_experts,
+                              cfg.mlp)
+    # expert-parallel when experts divide the model axis (arctic 128,
+    # jamba 16); otherwise TP inside each expert (mixtral 8).
+    # fsdp (train): additionally shard the d_model dim over "data" —
+    # replicated expert weights force GSPMD to all-gather dispatch
+    # buffers across dp for grad_w (§Perf B2); FSDP turns that into a
+    # per-layer weight gather + grad reduce-scatter instead.
+    ep = m.num_experts % MODEL_AXIS_SIZE == 0
+    dd = "data" if fsdp else None
+    for name, shape in shapes.items():
+        if name == "router":
+            out[name] = PD(shape, (None, None))
+        elif name.startswith("wi"):   # (E, d, ff)
+            out[name] = PD(shape, ("model", dd, None) if ep
+                           else (None, dd, "model"))
+        else:                          # wo (E, ff, d)
+            out[name] = PD(shape, ("model", None, dd) if ep
+                           else (None, "model", dd))
+    return out
+
+
+def _layer_defs(cfg: ModelConfig, pos: int, cross: bool = False,
+                fsdp: bool = False) -> Dict[str, PD]:
+    kind = cfg.layer_kind(pos)
+    d = cfg.d_model
+    defs: Dict[str, PD] = {"ln": PD((d,), (None,), "zeros"),
+                           "ln2": PD((d,), (None,), "zeros")}
+    if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+        defs.update(_attn_defs(cfg, fsdp=fsdp))
+    elif kind == LayerKind.MAMBA:
+        din = cfg.mamba_expand * d
+        dt_rank = max(d // 16, 8)
+        for name, shape in mamba_params(d, cfg.mamba_expand,
+                                        cfg.mamba_d_state, cfg.mamba_conv,
+                                        dt_rank).items():
+            if name == "ln":
+                continue
+            axes = {
+                "in_proj": (None, "model"), "conv_w": (None, "model"),
+                "conv_b": ("model",), "w_dt1": ("model", None),
+                "w_dt2": (None, "model"), "dt_b": ("model",),
+                "wB": ("model", None), "wC": ("model", None),
+                "A_log": ("model", None), "D": ("model",),
+                "out_proj": ("model", None),
+            }[name]
+            init = "ones" if name == "A_log" else (
+                "zeros" if name in ("conv_b", "dt_b", "D") else "normal")
+            defs[name] = PD(shape, axes, init)
+    elif kind == LayerKind.RWKV:
+        H = d // cfg.rwkv_head_dim
+        for name, shape in rwkv_mixer_params(d, H, cfg.rwkv_head_dim).items():
+            if name == "ln":
+                continue
+            axes = {
+                "mu": (None, None), "wr": (None, "model"),
+                "wk": (None, "model"), "wv": (None, "model"),
+                "wg": (None, "model"), "wo": ("model", None),
+                "w0": ("model", None), "wa": (None, None),
+                "wb": (None, "model"), "u": ("model", None),
+                "gn": (None,),
+            }[name]
+            init = "zeros" if name in ("w0", "gn") else "normal"
+            defs[name] = PD(shape, axes, init)
+    if cross:
+        defs.update(_attn_defs(cfg, cross=True, fsdp=fsdp))
+        defs["lnx"] = PD((d,), (None,), "zeros")
+    if cfg.has_moe_at(pos):
+        for name, pd in _moe_defs(cfg, fsdp=fsdp).items():
+            defs[f"moe_{name}"] = pd
+        if cfg.moe.dense_residual:
+            for name, pd in _mlp_defs(cfg, fsdp=fsdp).items():
+                defs[f"dense_{name}"] = pd
+    elif kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL, LayerKind.MAMBA,
+                  LayerKind.RWKV):
+        if kind in (LayerKind.MAMBA, LayerKind.RWKV) and not cfg.cross_attention:
+            # SSM mixers in jamba/rwkv still carry an FFN/MoE slot; rwkv
+            # uses its channel-mix as the FFN (same shapes).
+            pass
+        for name, pd in _mlp_defs(cfg, fsdp=fsdp).items():
+            defs[f"mlp_{name}"] = pd
+    return defs
+
+
+def param_defs(cfg: ModelConfig, fsdp: bool = False) -> Dict[str, Any]:
+    d, V = cfg.d_model, cfg.vocab
+    defs: Dict[str, Any] = {
+        "embed": PD((V, d), (None, "model")),
+        "final_ln": PD((d,), (None,), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = PD((V, d), (None, "model"))
+    blocks = {}
+    for pos in range(cfg.period):
+        layer = _layer_defs(cfg, pos, cross=cfg.cross_attention, fsdp=fsdp)
+        blocks[str(pos)] = {
+            name: PD((cfg.n_blocks,) + pd.shape, (None,) + pd.axes, pd.init)
+            for name, pd in layer.items()}
+    defs["blocks"] = blocks
+    if cfg.enc_layers:
+        enc = {}
+        for name, pd in _layer_defs(cfg.reduced(pattern=(LayerKind.ATTN,),
+                                                moe=None), 0).items():
+            enc[name] = PD((cfg.enc_layers,) + pd.shape, (None,) + pd.axes,
+                           pd.init)
+        defs["encoder"] = enc
+        defs["enc_final_ln"] = PD((d,), (None,), "zeros")
+    return defs
+
+
+def _leaf_map(fn, defs):
+    if isinstance(defs, PD):
+        return fn(defs)
+    return {k: _leaf_map(fn, v) for k, v in defs.items()}
+
+
+def abstract_params(cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    return _leaf_map(lambda pd: jax.ShapeDtypeStruct(pd.shape, dt),
+                     param_defs(cfg))
+
+
+def param_shardings(cfg: ModelConfig, fsdp: bool = False):
+    return _leaf_map(lambda pd: SH.named_sharding(*pd.axes),
+                     param_defs(cfg, fsdp=fsdp))
+
+
+def param_pspecs(cfg: ModelConfig):
+    return _leaf_map(lambda pd: SH.pspec(*pd.axes), param_defs(cfg))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    defs = param_defs(cfg)
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, PD))
+    keys = jax.random.split(key, len(leaves))
+    it = iter(range(len(leaves)))
+
+    def mk(pd: PD):
+        i = next(it)
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, dt)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, dt)
+        fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(keys[i], pd.shape, jnp.float32)
+                * scale).astype(dt)
+
+    return _leaf_map(mk, defs)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attention(cfg: ModelConfig, p: dict, x, positions, kind,
+               cache=None, cache_len=None, pre="",
+               kv_override=None):
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p[pre + "wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    if kv_override is None:
+        kv_src = x
+    else:
+        kv_src = kv_override
+    Skv = kv_src.shape[1]
+    k = (kv_src @ p[pre + "wk"]).reshape(B, Skv, Hkv, hd).transpose(0, 2, 1, 3)
+    v = (kv_src @ p[pre + "wv"]).reshape(B, Skv, Hkv, hd).transpose(0, 2, 1, 3)
+    if kv_override is None:  # self-attention: rope
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions if cache is None else positions, cfg.rope_theta)
+    window = cfg.window if kind == LayerKind.ATTN_LOCAL else None
+    if cache is not None:
+        kc, vc = cache
+        z = jnp.asarray(0, jnp.int32)
+        cl = jnp.asarray(cache_len, jnp.int32)
+        kc = jax.lax.dynamic_update_slice(kc, k, (z, z, cl, z))
+        vc = jax.lax.dynamic_update_slice(vc, v, (z, z, cl, z))
+        out = decode_attention(q, kc, vc, cache_len + S, window=window,
+                               softcap=cfg.attn_softcap)
+        new_cache = (kc, vc)
+    else:
+        causal = kv_override is None
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                softcap=cfg.attn_softcap,
+                                chunk=cfg.attn_chunk)
+        new_cache = None
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    return out @ p[pre + "wo"], new_cache
+
+
+def _ffn(cfg: ModelConfig, pos: int, p: dict, h):
+    if cfg.has_moe_at(pos):
+        moe_p = {k[len("moe_"):]: v for k, v in p.items()
+                 if k.startswith("moe_")}
+        m = cfg.moe
+        out, _ = moe_apply(moe_p, h, mlp=cfg.mlp,
+                           num_experts=m.num_experts, top_k=m.top_k,
+                           capacity_factor=m.capacity_factor,
+                           skew_aware=m.skew_aware)
+        if m.dense_residual:
+            dense_p = {k[len("dense_"):]: v for k, v in p.items()
+                       if k.startswith("dense_")}
+            out = out + mlp_apply(cfg.mlp, dense_p, h)
+        return out
+    mlp_p = {k[len("mlp_"):]: v for k, v in p.items()
+             if k.startswith("mlp_")}
+    return mlp_apply(cfg.mlp, mlp_p, h)
+
+
+def _apply_layer(cfg: ModelConfig, pos: int, p: dict, x, positions,
+                 cache=None, cache_len=None, enc_out=None,
+                 causal: bool = True):
+    kind = cfg.layer_kind(pos)
+    # §Perf C2 (Megatron-SP): between layers the residual stream is
+    # sequence-sharded over the model axis, turning per-layer TP
+    # activation all-reduces into reduce-scatter/all-gather pairs on
+    # bf16 (EXPERIMENTS.md §Perf). No-op without a mesh or at S == 1.
+    if x.shape[1] > 1 and x.shape[1] % 16 == 0:
+        x = SH.constrain(x, "dp", "model", None)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    new_cache = cache
+    if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+        if not causal:  # encoder self-attention (bidirectional)
+            B, S, d = h.shape
+            H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            q = (h @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+            k = (h @ p["wk"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+            v = (h @ p["wv"]).reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            out = chunked_attention(q, k, v, causal=False,
+                                    chunk=cfg.attn_chunk)
+            mix = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd) @ p["wo"]
+        else:
+            attn_cache = cache.get("kv") if isinstance(cache, dict) else None
+            mix, nk = _attention(cfg, p, h, positions, kind,
+                                 cache=attn_cache, cache_len=cache_len)
+            if isinstance(cache, dict):
+                new_cache = dict(cache, kv=nk)
+    elif kind == LayerKind.MAMBA:
+        conv_s = cache.get("conv") if isinstance(cache, dict) else None
+        ssm_s = cache.get("ssm") if isinstance(cache, dict) else None
+        mix, (nc, ns) = mamba_mixer(p, h, cfg, conv_state=conv_s,
+                                    ssm_state=ssm_s,
+                                    decode=cache is not None)
+        if isinstance(cache, dict):
+            new_cache = dict(cache, conv=nc, ssm=ns)
+    elif kind == LayerKind.RWKV:
+        prev = cache.get("shift") if isinstance(cache, dict) else None
+        st = cache.get("wkv") if isinstance(cache, dict) else None
+        mix, (last_x, ns) = rwkv_mixer(p, h, cfg, prev, state=st,
+                                       decode=cache is not None)
+        if isinstance(cache, dict):
+            new_cache = dict(cache, shift=last_x, wkv=ns)
+    else:
+        raise ValueError(kind)
+    x = x + mix
+    # cross-attention (whisper decoder)
+    if cfg.cross_attention and enc_out is not None:
+        hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+        cx, _ = _attention(cfg, p, hx, positions, LayerKind.ATTN,
+                           pre="x", kv_override=enc_out)
+        x = x + cx
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + _ffn(cfg, pos, p, h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model: train forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params, tokens, embeds_prefix=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    if embeds_prefix is not None:
+        x = jnp.concatenate([embeds_prefix.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _encoder(cfg: ModelConfig, params, enc_embeds):
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend per the assignment)."""
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    ecfg = cfg.reduced(pattern=(LayerKind.ATTN,), moe=None,
+                       cross_attention=False)
+
+    def enc_block(h, pslice):
+        h, _ = _apply_layer(ecfg, 0, pslice, h, positions, causal=False)
+        return h, None
+
+    body = jax.checkpoint(enc_block) if cfg.remat == "block" else enc_block
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, embeds_prefix=None,
+            enc_embeds=None):
+    """Training/prefill forward to final hidden states (B, S, d)."""
+    x = embed_tokens(cfg, params, tokens, embeds_prefix)
+    x = SH.constrain(x, "dp", None, None)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    enc_out = _encoder(cfg, params, enc_embeds) if cfg.enc_layers else None
+
+    def block(h, pslices):
+        for pos in range(cfg.period):
+            h, _ = _apply_layer(cfg, pos, pslices[str(pos)], h, positions,
+                                enc_out=enc_out)
+        return h, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(block)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            block,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        body = block
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    h = forward(cfg, params, batch["tokens"],
+                embeds_prefix=batch.get("embeds_prefix"),
+                enc_embeds=batch.get("enc_embeds"))
+    labels = batch["labels"]
+    if batch.get("embeds_prefix") is not None:
+        # image prefix carries no labels
+        h = h[:, batch["embeds_prefix"].shape[1]:]
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return chunked_xent(h, head, labels, chunk=cfg.seq_chunk_loss,
+                        final_softcap=cfg.final_softcap)
+
+
+# -- decode -----------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> dict:
+    """Per-pattern-position stacked caches (n_blocks leading dim)."""
+    dt = jnp.dtype(cfg.dtype)
+    nb = cfg.n_blocks
+    B = batch
+    caches = {}
+    for pos in range(cfg.period):
+        kind = cfg.layer_kind(pos)
+        if kind in (LayerKind.ATTN, LayerKind.ATTN_LOCAL):
+            shape = (nb, B, cfg.n_kv_heads, max_len, cfg.hd)
+            caches[str(pos)] = {
+                "kv_k": jnp.zeros(shape, dt),
+                "kv_v": jnp.zeros(shape, dt),
+            }
+        elif kind == LayerKind.MAMBA:
+            din = cfg.mamba_expand * cfg.d_model
+            caches[str(pos)] = {
+                "conv": jnp.zeros((nb, B, cfg.mamba_conv - 1, din), dt),
+                "ssm": jnp.zeros((nb, B, din, cfg.mamba_d_state),
+                                 jnp.float32),
+            }
+        elif kind == LayerKind.RWKV:
+            H = cfg.d_model // cfg.rwkv_head_dim
+            K = cfg.rwkv_head_dim
+            caches[str(pos)] = {
+                "shift": jnp.zeros((nb, B, 1, cfg.d_model), dt),
+                "wkv": jnp.zeros((nb, B, H, K, K), jnp.float32),
+            }
+    return caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, token, cache_len,
+                enc_out=None):
+    """One decode step. token: (B,) int32; cache_len: scalar int32.
+    Returns (logits (B, V), new_caches)."""
+    B = token.shape[0]
+    x = embed_tokens(cfg, params, token[:, None])
+    positions = jnp.full((1,), cache_len, jnp.int32)
+
+    def block(h, inp):
+        pslices, cslices = inp
+        new_c = {}
+        for pos in range(cfg.period):
+            c = dict(cslices[str(pos)])
+            if "kv_k" in c:
+                c2 = {"kv": (c["kv_k"], c["kv_v"])}
+            else:
+                c2 = c
+            h, nc = _apply_layer(cfg, pos, pslices[str(pos)], h, positions,
+                                 cache=c2, cache_len=cache_len,
+                                 enc_out=enc_out)
+            if "kv" in (nc or {}):
+                new_c[str(pos)] = {"kv_k": nc["kv"][0], "kv_v": nc["kv"][1]}
+            else:
+                new_c[str(pos)] = nc
+        return h, new_c
+
+    x, new_caches = jax.lax.scan(block, x, (params["blocks"], caches))
+    h = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = (h[:, 0].astype(jnp.float32)
+              @ head.T.astype(jnp.float32))
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, enc_embeds=None):
+    """Prefill forward returning last-position logits (KV population is
+    exercised through decode_step in serving; the dry-run lowers this
+    whole-sequence pass)."""
+    h = forward(cfg, params, tokens, enc_embeds=enc_embeds)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = (h[:, -1].astype(jnp.float32) @ head.T.astype(jnp.float32))
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits

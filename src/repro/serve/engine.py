@@ -1,0 +1,90 @@
+"""Batched serving engine: prefill + KV-cache decode loop.
+
+Serves fixed-size decode batches (the decode_32k dry-run shape is one
+step of exactly this loop). Requests are left-padded into a batch;
+prefill populates the caches token-by-token from each request's prompt
+(teacher-forced), then the decode loop samples until max tokens or EOS.
+
+On a real pod the engine runs under the production mesh with the same
+param shardings as the dry-run (`transformer.param_shardings`); here it
+is exercised on CPU with smoke configs (tests/test_serve.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 256,
+                 greedy: bool = True, jit: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.greedy = greedy
+        step = T.decode_step
+        if jit:
+            step = jax.jit(step, static_argnums=(0,), donate_argnums=(2,))
+        self._step = step
+
+    def generate(self, requests: List[Request]) -> List[List[int]]:
+        cfg = self.cfg
+        B = len(requests)
+        caches = T.init_cache(cfg, B, self.max_len)
+        max_prompt = max(len(r.prompt) for r in requests)
+        # left-align prompts; track per-request prompt lengths
+        toks = np.zeros((B, max_prompt), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, :len(r.prompt)] = r.prompt
+        # prefill by stepping the decode path (cache population is the
+        # point; a fused prefill kernel would batch this — see dry-run
+        # prefill_32k for the lowered bulk variant)
+        logits = None
+        for t in range(max_prompt):
+            logits, caches = self._step(cfg, self.params, caches,
+                                        jnp.asarray(toks[:, t]),
+                                        jnp.asarray(t, jnp.int32))
+        outs: List[List[int]] = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        cur = self._pick(logits)
+        max_new = max(r.max_new_tokens for r in requests)
+        for k in range(max_new):
+            pos = max_prompt + k
+            if pos >= self.max_len:
+                break
+            for i, r in enumerate(requests):
+                if done[i] or k >= r.max_new_tokens:
+                    done[i] = True
+                    continue
+                tok = int(cur[i])
+                if r.eos is not None and tok == r.eos:
+                    done[i] = True
+                    continue
+                outs[i].append(tok)
+            if done.all():
+                break
+            logits, caches = self._step(cfg, self.params, caches,
+                                        jnp.asarray(cur, jnp.int32),
+                                        jnp.asarray(pos, jnp.int32))
+            cur = self._pick(logits)
+        return outs
+
+    def _pick(self, logits) -> np.ndarray:
+        if self.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        raise NotImplementedError("sampling: plug in your policy")

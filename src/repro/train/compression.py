@@ -1,0 +1,77 @@
+"""Gradient compression: int8 error-feedback all-reduce.
+
+For the slow inter-pod hop, gradients are reduced in int8 with
+per-chunk fp32 scales and an error-feedback residual (the quantization
+error is carried into the next step, preserving convergence). The
+collective is a reduce-scatter (all_to_all of quantized chunks + local
+sum) followed by an all_gather of the re-quantized result:
+
+    bytes ~ 2 x (P-1)/P x N x 1  vs  2 x (P-1)/P x N x 4  uncompressed
+
+Used inside shard_map over the "pod" axis (launch/train.py --compress).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x: jnp.ndarray, axis: str, n: int,
+                         residual: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 mean-all-reduce of a flat f32 vector over a
+    shard_map axis of size ``n``. Returns (mean, new_residual)."""
+    x = x + residual                     # error feedback
+    pad = (-x.shape[0]) % n
+    xp = jnp.pad(x, (0, pad))
+    chunks = xp.reshape(n, -1)           # chunk d -> destination d
+    # per-chunk quantization
+    scales = jnp.max(jnp.abs(chunks), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(chunks / scales[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    # reduce-scatter: all_to_all chunks, sum dequantized locally
+    q_recv = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0)
+    s_recv = jax.lax.all_to_all(scales.reshape(n, 1), axis,
+                                split_axis=0, concat_axis=0)
+    local = jnp.sum(q_recv.astype(jnp.float32) * s_recv, axis=0) / n
+    # re-quantize the reduced shard and all_gather
+    q2, s2 = quantize_int8(local)
+    qg = jax.lax.all_gather(q2, axis, tiled=False)        # (n, chunk)
+    sg = jax.lax.all_gather(s2.reshape(1), axis, tiled=False)
+    mean = (qg.astype(jnp.float32) * sg.reshape(n, 1)).reshape(-1)
+    mean = mean[:x.shape[0]]
+    # residual: what this device failed to communicate
+    sent = dequantize_int8(
+        jnp.clip(jnp.round((x + jnp.zeros_like(x)) /
+                           (jnp.max(jnp.abs(x)) / 127.0 + 1e-12)),
+                 -127, 127).astype(jnp.int8),
+        jnp.max(jnp.abs(x)) / 127.0 + 1e-12)
+    new_residual = x - sent
+    return mean, new_residual
+
+
+def tree_compressed_mean(grads, axis: str, n: int, residuals):
+    """Apply compressed mean-all-reduce leaf-wise (flattened)."""
+    flat, tdef = jax.tree.flatten(grads)
+    res_flat = tdef.flatten_up_to(residuals)
+    outs, new_res = [], []
+    for g, r in zip(flat, res_flat):
+        shape = g.shape
+        m, nr = compressed_psum_mean(g.reshape(-1).astype(jnp.float32),
+                                     axis, n, r.reshape(-1))
+        outs.append(m.reshape(shape))
+        new_res.append(nr.reshape(shape))
+    return tdef.unflatten(outs), tdef.unflatten(new_res)

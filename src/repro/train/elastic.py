@@ -1,0 +1,128 @@
+"""Elasticity & failure handling (DESIGN.md §8).
+
+On a real cluster, pod failures surface as (a) a process exit ->
+restart-from-checkpoint, or (b) stragglers -> step-time anomalies. This
+module owns the host-side machinery, which is hardware-independent and
+exercised by tests via virtual-device meshes:
+
+  * ``Watchdog``     — EWMA step-time anomaly detector (straggler alarm
+                       + hook for backup-step / repartition logic);
+  * ``run_resumable``— crash-safe step loop: periodic async checkpoints,
+                       SIGTERM-triggered final save, exact resume of
+                       step counter + RNG + data cursor;
+  * ``reshard_restore`` — restore a checkpoint onto a *different* mesh
+                       (elastic scale up/down): global arrays are laid
+                       out by device_put against new shardings.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from . import checkpoint as CKPT
+
+
+@dataclass
+class Watchdog:
+    """Flags steps slower than ``threshold`` x EWMA (stragglers)."""
+    alpha: float = 0.1
+    threshold: float = 2.0
+    ewma: Optional[float] = None
+    slow_steps: int = 0
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.threshold * self.ewma
+        if slow:
+            self.slow_steps += 1
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ewma)
+        # EWMA excludes anomalies so one straggler doesn't mask the next
+        if not slow:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int
+    rng_key: Any
+    data_cursor: int
+
+
+def run_resumable(train_step: Callable, state: TrainState,
+                  batch_fn: Callable[[int, Any], Any],
+                  n_steps: int, ckpt_dir: str,
+                  ckpt_every: int = 50,
+                  watchdog: Optional[Watchdog] = None,
+                  log: Optional[Callable[[int, dict], None]] = None
+                  ) -> TrainState:
+    """Crash-safe training loop. ``batch_fn(cursor, rng) -> batch``.
+    Resumes from the latest complete checkpoint in ``ckpt_dir`` if any
+    (overriding the passed-in state)."""
+    ck = CKPT.AsyncCheckpointer(ckpt_dir)
+    last = CKPT.latest_step(ckpt_dir)
+    if last is not None:
+        tree = {"params": state.params, "opt": state.opt_state}
+        restored, manifest = CKPT.restore(ckpt_dir, last, template=tree)
+        state.params = restored["params"]
+        state.opt_state = restored["opt"]
+        state.step = manifest["extra"]["step"]
+        state.data_cursor = manifest["extra"]["data_cursor"]
+        state.rng_key = jax.random.PRNGKey(manifest["extra"]["rng_seed"])
+        state.rng_key = jax.random.fold_in(state.rng_key, state.step)
+
+    interrupted = {"flag": False}
+
+    def on_sigterm(signum, frame):
+        interrupted["flag"] = True
+
+    old = signal.signal(signal.SIGTERM, on_sigterm)
+    try:
+        while state.step < n_steps and not interrupted["flag"]:
+            t0 = time.perf_counter()
+            state.rng_key, sub = jax.random.split(state.rng_key)
+            batch = batch_fn(state.data_cursor, sub)
+            state.params, state.opt_state, metrics = train_step(
+                state.params, state.opt_state, batch)
+            state.step += 1
+            state.data_cursor += 1
+            dt = time.perf_counter() - t0
+            if watchdog is not None:
+                watchdog.observe(state.step, dt)
+            if log:
+                log(state.step, {**{k: float(v)
+                                    for k, v in metrics.items()},
+                                 "dt": dt})
+            if state.step % ckpt_every == 0:
+                ck.save(state.step,
+                        {"params": state.params, "opt": state.opt_state},
+                        extra={"step": state.step,
+                               "data_cursor": state.data_cursor,
+                               "rng_seed": 0})
+    finally:
+        signal.signal(signal.SIGTERM, old)
+        # final (preemption-safe) checkpoint
+        ck.save(state.step, {"params": state.params,
+                             "opt": state.opt_state},
+                extra={"step": state.step,
+                       "data_cursor": state.data_cursor, "rng_seed": 0})
+        ck.wait()
+    return state
+
+
+def reshard_restore(ckpt_dir: str, template, new_shardings,
+                    step: Optional[int] = None):
+    """Elastic restore onto a (possibly different) mesh."""
+    return CKPT.restore(ckpt_dir, step, template=template,
+                        shardings=new_shardings)

@@ -1,0 +1,154 @@
+"""Optimizers: AdamW and Adafactor (factored second moment).
+
+Adafactor is the default for the MoE giants (arctic-480b, mixtral,
+deepseek): a 480B-param model with full Adam state (m+v fp32) needs
+~5.4TB of optimizer memory — over a single v5e pod's 4TB HBM — while
+factored stats bring it to ~1TB (EXPERIMENTS.md §Dry-run records both).
+
+Optimizer states inherit the parameter sharding; with ZeRO-1 enabled the
+first replicated axis of each state tensor is additionally sharded over
+"data" when divisible (launcher decides).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | adafactor
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_state(cfg: OptConfig, params) -> dict:
+    if cfg.kind == "adamw":
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params),
+        }
+    assert cfg.kind == "adafactor", cfg.kind
+
+    def factored(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "f": jax.tree.map(factored, params,
+                              is_leaf=lambda x: hasattr(x, "ndim")
+                              or hasattr(x, "shape"))}
+
+
+def abstract_state(cfg: OptConfig, abstract_params) -> dict:
+    def z(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32)
+
+    if cfg.kind == "adamw":
+        return {"step": jax.ShapeDtypeStruct((), jnp.int32),
+                "m": jax.tree.map(z, abstract_params),
+                "v": jax.tree.map(z, abstract_params)}
+
+    def factored(s):
+        if len(s.shape) >= 2:
+            return {"vr": jax.ShapeDtypeStruct(s.shape[:-1], jnp.float32),
+                    "vc": jax.ShapeDtypeStruct(s.shape[:-2] + s.shape[-1:],
+                                               jnp.float32)}
+        return {"v": jax.ShapeDtypeStruct(s.shape, jnp.float32)}
+
+    return {"step": jax.ShapeDtypeStruct((), jnp.int32),
+            "f": jax.tree.map(factored, abstract_params)}
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply_updates(cfg: OptConfig, params, grads, state) -> Tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    if cfg.kind == "adamw":
+        b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m2 = cfg.b1 * m + (1 - cfg.b1) * g
+            v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+            mh = m2 / b1c
+            vh = v2 / b2c
+            step_dir = mh / (jnp.sqrt(vh) + cfg.eps)
+            new_p = p.astype(jnp.float32) - lr * (
+                step_dir + cfg.weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, {"step": step, "m": new_m, "v": new_v}
+
+    assert cfg.kind == "adafactor"
+    decay = 1.0 - (step.astype(jnp.float32) + 1) ** -0.8
+
+    def upd_f(p, g, f):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = decay * f["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * f["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            upd = g / (jnp.sqrt(vhat) + cfg.eps)
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            upd = g / (jnp.sqrt(v) + cfg.eps)
+            nf = {"v": v}
+        # relative step-size trust ratio
+        pn = jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))) + 1e-3
+        un = jnp.sqrt(jnp.mean(jnp.square(upd))) + 1e-9
+        new_p = p.astype(jnp.float32) - lr * jnp.minimum(1.0, pn / un) * (
+            upd + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), nf
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_f = tdef.flatten_up_to(state["f"])
+    out = [upd_f(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_f = tdef.unflatten([o[1] for o in out])
+    return new_p, {"step": step, "f": new_f}

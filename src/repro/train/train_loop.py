@@ -1,0 +1,87 @@
+"""Training step construction: microbatched grad accumulation, remat,
+and deferred gradient synchronization.
+
+``make_train_step`` returns a jit-able ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` function. Microbatching scans over the
+leading micro dimension accumulating f32 grads; the cross-replica
+gradient reduction happens once, after the scan (overlap discipline:
+per-microbatch collectives are deferred — DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from . import optim as O
+
+
+def make_loss(cfg: ModelConfig):
+    def loss(params, batch):
+        return T.loss_fn(cfg, params, batch)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, ocfg: O.OptConfig,
+                    microbatches: int = 1) -> Callable:
+    loss_fn = make_loss(cfg)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, tot = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return (acc, tot + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((microbatches, -1) + x.shape[1:]),
+                batch)
+            (grads, tot), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mb_batch)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = tot / microbatches
+        new_params, new_state = O.apply_updates(ocfg, params, grads,
+                                                opt_state)
+        metrics = {"loss": loss,
+                   "grad_norm": O._global_norm(grads),
+                   "lr": O.lr_at(ocfg, new_state["step"])}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# dry-run entry points: the exact functions lowered per (arch x shape)
+# ---------------------------------------------------------------------------
+
+def train_step_fn(cfg: ModelConfig, ocfg: Optional[O.OptConfig] = None):
+    ocfg = ocfg or O.OptConfig(
+        kind="adafactor" if (cfg.moe is not None
+                             or cfg.param_count() > 3e10) else "adamw")
+    return make_train_step(cfg, ocfg), ocfg
+
+
+def prefill_step_fn(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch["tokens"],
+                         enc_embeds=batch.get("enc_embeds"))
+    return prefill_step
+
+
+def decode_step_fn(cfg: ModelConfig):
+    def serve_step(params, caches, batch):
+        return T.decode_step(cfg, params, caches, batch["token"],
+                             batch["cache_len"],
+                             enc_out=batch.get("enc_out"))
+    return serve_step

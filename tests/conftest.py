@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the default single CPU device; multi-device tests spawn
+# subprocesses with their own XLA_FLAGS (per the dry-run isolation rule)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,61 @@
+"""Shared fixtures: the running-example query + data generators."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import nrc as N
+
+PART_T = N.bag(N.tuple_t(pid=N.INT, pname=N.INT, price=N.REAL))
+COP_T = N.bag(N.tuple_t(
+    cname=N.INT,
+    corders=N.bag(N.tuple_t(
+        odate=N.INT,
+        oparts=N.bag(N.tuple_t(pid=N.INT, qty=N.REAL))))))
+
+INPUT_TYPES = {"COP": COP_T, "Part": PART_T}
+
+
+def running_example_query():
+    """The paper's Example 1 query (nested-to-nested with sumBy)."""
+    COP = N.Var("COP", COP_T)
+    Part = N.Var("Part", PART_T)
+
+    def oparts_q(co):
+        inner = N.for_in("op", co.oparts, lambda op:
+            N.for_in("p", Part, lambda p:
+                N.IfThen(op.pid.eq(p.pid),
+                         N.Singleton(N.record(pname=p.pname,
+                                              total=op.qty * p.price)))))
+        return N.SumBy(inner, keys=("pname",), values=("total",))
+
+    return N.for_in("cop", COP, lambda cop: N.Singleton(N.record(
+        cname=cop.cname,
+        corders=N.for_in("co", cop.corders, lambda co: N.Singleton(N.record(
+            odate=co.odate,
+            oparts=oparts_q(co)))))))
+
+
+def gen_parts(n=20, seed=0):
+    rng = np.random.RandomState(seed)
+    return [{"pid": i, "pname": 100 + i, "price": float(rng.randint(1, 20))}
+            for i in range(1, n + 1)]
+
+
+def gen_cop(n_cust=10, max_orders=4, max_items=8, n_parts=20, seed=1,
+            zipf=0.0):
+    rng = np.random.RandomState(seed)
+    out = []
+    for c in range(n_cust):
+        orders = []
+        for o in range(rng.randint(0, max_orders + 1)):
+            items = []
+            for _ in range(rng.randint(0, max_items + 1)):
+                if zipf > 0 and rng.rand() < zipf:
+                    pid = 7
+                else:
+                    pid = int(rng.randint(1, n_parts + 1))
+                items.append({"pid": pid, "qty": float(rng.randint(1, 5))})
+            orders.append({"odate": 20200000 + o, "oparts": items})
+        out.append({"cname": 1000 + c, "corders": orders})
+    return out

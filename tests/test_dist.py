@@ -1,0 +1,145 @@
+"""Distributed engine tests — run in a subprocess with 8 virtual devices
+(XLA device count must be set before jax init; tests elsewhere keep the
+default single device per the dry-run isolation rule)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(body: str) -> str:
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, %r)
+        sys.path.insert(0, %r)
+        import numpy as np
+        import jax
+        import repro
+        from repro.core import nrc as N
+        from repro.core import interpreter as I
+        from repro.core import materialization as M
+        from repro.core import codegen as CG
+        from repro.core.plans import ExecSettings
+        from repro.core.unnesting import Catalog
+        from repro.exec.dist import device_mesh_1d, run_distributed
+        from helpers import INPUT_TYPES, gen_cop, gen_parts, \
+            running_example_query
+    """) % (SRC, os.path.dirname(__file__)) + textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"STDOUT:{res.stdout}\nSTDERR:{res.stderr}"
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_distributed_shredded_route_matches_oracle():
+    out = run_sub("""
+        data = {"COP": gen_cop(n_cust=16, seed=2, zipf=0.6),
+                "Part": gen_parts(29)}
+        direct = I.eval_expr(running_example_query(), data)
+        prog = N.Program([N.Assignment("Q", running_example_query())])
+        sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+        cp = CG.compile_program(sp, Catalog(unique_keys={"Part__F": ("pid",)}))
+        env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+        PN = 8
+        env = {k: b.resize(((b.capacity + PN - 1)//PN)*PN)
+               for k, b in env.items()}
+        mesh = device_mesh_1d(PN)
+        shuffles = {}
+        for skew in (False, True):
+            def fn(env_local, ctx):
+                out_env = CG.run_flat_program(cp, env_local,
+                                              ExecSettings(dist=ctx))
+                man = sp.manifests["Q"]
+                names = [man.top] + list(man.dicts.values())
+                return {k: out_env[k] for k in names}
+            out, metrics = run_distributed(fn, env, mesh,
+                                           skew_default=skew,
+                                           cap_factor=16.0)
+            man = sp.manifests["Q"]
+            parts = {(): out[man.top]}
+            for path, name in man.dicts.items():
+                parts[path] = out[name]
+            result = CG.parts_to_rows(parts, running_example_query().ty)
+            assert I.bags_equal(direct, result), f"skew={skew} mismatch"
+            shuffles[skew] = metrics["shuffle_rows"]
+        # the skew-aware join must shuffle strictly less on zipf data
+        assert shuffles[True] < shuffles[False], shuffles
+        print("OK", shuffles)
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_exchange_preserves_rows_and_detects_overflow():
+    out = run_sub("""
+        from repro.columnar.table import FlatBag
+        import jax.numpy as jnp
+        rows = [{"k": i % 13, "v": float(i)} for i in range(64)]
+        bag = FlatBag.from_rows(rows, {"k": "int", "v": "real"},
+                                capacity=64)
+        mesh = device_mesh_1d(8)
+        def fn(env, ctx):
+            return {"out": ctx.exchange(env["bag"], ("k",))}
+        out, metrics = run_distributed(fn, {"bag": bag}, mesh,
+                                       cap_factor=16.0)
+        got = sorted((r["k"], r["v"]) for r in out["out"].to_rows())
+        want = sorted((r["k"], r["v"]) for r in rows)
+        assert got == want, (got, want)
+        assert metrics["overflow_rows"] == 0
+        # tight capacity must overflow (and count it) on skewed keys
+        rows2 = [{"k": 0, "v": float(i)} for i in range(64)]
+        bag2 = FlatBag.from_rows(rows2, {"k": "int", "v": "real"},
+                                 capacity=64)
+        out2, m2 = run_distributed(fn, {"bag": bag2}, mesh,
+                                   cap_factor=1.0)
+        assert m2["overflow_rows"] > 0
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_distributed_sum_by_and_dedup():
+    out = run_sub("""
+        from repro.columnar.table import FlatBag
+        rows = [{"k": i % 5, "v": 1.0} for i in range(40)]
+        bag = FlatBag.from_rows(rows, {"k": "int", "v": "real"},
+                                capacity=40)
+        mesh = device_mesh_1d(8)
+        def fn(env, ctx):
+            return {"s": ctx.sum_by(env["bag"], ("k",), ("v",)),
+                    "d": ctx.dedup(env["bag"], ("k",))}
+        out, metrics = run_distributed(fn, {"bag": bag}, mesh,
+                                       cap_factor=16.0)
+        s = {r["k"]: r["v"] for r in out["s"].to_rows()}
+        assert s == {k: 8.0 for k in range(5)}, s
+        d = sorted(r["k"] for r in out["d"].to_rows())
+        assert d == list(range(5)), d
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_heavy_key_detection():
+    out = run_sub("""
+        import jax.numpy as jnp
+        from repro.core import skew as SK
+        key = jnp.concatenate([jnp.full((900,), 7, jnp.int64),
+                               jnp.arange(100, dtype=jnp.int64)])
+        valid = jnp.ones((1000,), bool)
+        hk = SK.heavy_keys_local(key, valid, sample=256, threshold=0.025)
+        member = SK.is_member(jnp.asarray([7, 3], jnp.int64),
+                              SK.merge_heavy(hk))
+        assert bool(member[0]) and not bool(member[1])
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,127 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes/dtypes (hypothesis + parametrized grids)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rwkv6_scan import rwkv6_pallas
+from repro.kernels.segment_reduce import segment_reduce_pallas
+
+
+# -- segment_reduce -----------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 5), st.integers(1, 50),
+       st.integers(0, 3))
+def test_segment_reduce_hypothesis(n, d, num_segments, seed):
+    rng = np.random.RandomState(seed)
+    seg = np.sort(rng.randint(0, num_segments, n)).astype(np.int32)
+    vals = rng.randn(n, d).astype(np.float32)
+    got = segment_reduce_pallas(jnp.asarray(vals), jnp.asarray(seg),
+                                num_segments, block_rows=32, block_segs=16)
+    want = R.segment_reduce_ref(jnp.asarray(vals), jnp.asarray(seg),
+                                num_segments)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_segment_reduce_out_of_range_dropped():
+    seg = jnp.asarray([-1, 0, 0, 1, 5], jnp.int32)
+    vals = jnp.ones((5, 1), jnp.float32)
+    got = segment_reduce_pallas(vals, seg, 2, block_rows=5, block_segs=2)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), [2.0, 1.0])
+
+
+# -- flash attention -----------------------------------------------------------
+
+ATTN_VARIANTS = [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=5),
+    dict(causal=True, softcap=20.0),
+    dict(causal=True, window=9, softcap=30.0),
+]
+
+
+@pytest.mark.parametrize("kwargs", ATTN_VARIANTS)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(1, 2, 2, 24, 16), (2, 4, 2, 33, 8)])
+def test_flash_attention_variants(kwargs, dtype, shape):
+    B, H, Hkv, S, D = shape
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, H, S, D), dtype)
+    k = jnp.asarray(rng.randn(B, Hkv, S, D), dtype)
+    v = jnp.asarray(rng.randn(B, Hkv, S, D), dtype)
+    got = flash_attention_pallas(q, k, v, block_q=16, block_k=16, **kwargs)
+    want = R.attention_ref(q, k, v, **kwargs)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(8, 64), st.integers(1, 2), st.integers(0, 3))
+def test_flash_attention_hypothesis(S, B, seed):
+    rng = np.random.RandomState(seed)
+    H, Hkv, D = 2, 1, 8
+    q = jnp.asarray(rng.randn(B, H, S, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, Hkv, S, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, Hkv, S, D), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=16,
+                                 block_k=16)
+    want = R.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+# -- rwkv6 ---------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(4, 40), st.integers(1, 2), st.integers(0, 2),
+       st.sampled_from([4, 16]))
+def test_rwkv6_hypothesis(T, B, seed, chunk):
+    rng = np.random.RandomState(seed)
+    H, K, V = 2, 8, 8
+    r = jnp.asarray(rng.randn(B, H, T, K) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.randn(B, H, T, K) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, T, V), jnp.float32)
+    w = jnp.asarray(0.2 + 0.79 * rng.rand(B, H, T, K), jnp.float32)
+    u = jnp.asarray(rng.randn(H, K) * 0.3, jnp.float32)
+    got = rwkv6_pallas(r, k, v, w, u, chunk=chunk)
+    want = R.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_rwkv6_chunk_invariance():
+    """Chunk size must not change the result (state hand-off exactness)."""
+    rng = np.random.RandomState(1)
+    B, H, T, K = 1, 1, 37, 4
+    r = jnp.asarray(rng.randn(B, H, T, K), jnp.float32)
+    k = jnp.asarray(rng.randn(B, H, T, K), jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, T, K), jnp.float32)
+    w = jnp.asarray(0.5 + 0.49 * rng.rand(B, H, T, K), jnp.float32)
+    u = jnp.asarray(rng.randn(H, K), jnp.float32)
+    o1 = rwkv6_pallas(r, k, v, w, u, chunk=8)
+    o2 = rwkv6_pallas(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+
+
+def test_jnp_chunked_matches_pallas():
+    """The XLA-native model path (ssm.rwkv6_chunked) and the Pallas
+    kernel implement the same math."""
+    from repro.models.ssm import rwkv6_chunked
+    rng = np.random.RandomState(2)
+    B, H, T, K = 1, 2, 20, 4
+    r = jnp.asarray(rng.randn(B, H, T, K), jnp.float32)
+    k = jnp.asarray(rng.randn(B, H, T, K), jnp.float32)
+    v = jnp.asarray(rng.randn(B, H, T, K), jnp.float32)
+    w = jnp.asarray(0.5 + 0.49 * rng.rand(B, H, T, K), jnp.float32)
+    u = jnp.asarray(rng.randn(H, K), jnp.float32)
+    o1 = rwkv6_pallas(r, k, v, w, u, chunk=8)
+    o2 = rwkv6_chunked(r, k, v, w, u, chunk=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)

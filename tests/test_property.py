@@ -1,0 +1,141 @@
+"""Hypothesis property tests on the system's invariants.
+
+Central property: for random nested databases and the benchmark query
+family, the shredded route (shred -> materialize -> execute -> unshred)
+equals direct NRC evaluation; value shredding round-trips; columnar ops
+match their Python semantics."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.columnar.table import FlatBag
+from repro.exec import ops as X
+
+from helpers import COP_T, INPUT_TYPES, PART_T, running_example_query
+
+
+# -- strategies -------------------------------------------------------------
+
+@st.composite
+def cop_db(draw):
+    n_parts = draw(st.integers(1, 8))
+    parts = [{"pid": i, "pname": 100 + i,
+              "price": float(draw(st.integers(1, 9)))}
+             for i in range(1, n_parts + 1)]
+    n_cust = draw(st.integers(0, 5))
+    cops = []
+    for c in range(n_cust):
+        n_ord = draw(st.integers(0, 3))
+        orders = []
+        for o in range(n_ord):
+            n_it = draw(st.integers(0, 4))
+            items = [{"pid": draw(st.integers(1, n_parts + 2)),  # some misses
+                      "qty": float(draw(st.integers(1, 5)))}
+                     for _ in range(n_it)]
+            orders.append({"odate": 20200000 + o, "oparts": items})
+        cops.append({"cname": 1000 + c, "corders": orders})
+    return {"COP": cops, "Part": parts}
+
+
+@settings(max_examples=25, deadline=None)
+@given(cop_db(), st.booleans())
+def test_shred_equals_direct(db, domain_elim):
+    q = running_example_query()
+    direct = I.eval_expr(q, db)
+    prog = N.Program([N.Assignment("Q", q)])
+    sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=domain_elim)
+    env = M.shredded_input_env(db, INPUT_TYPES)
+    env = I.eval_program(sp.program, env)
+    got = M.unshred_from_env(env, sp.manifests["Q"])
+    assert I.bags_equal(direct, got)
+
+
+@settings(max_examples=25, deadline=None)
+@given(cop_db())
+def test_value_shred_roundtrip(db):
+    shredded = I.shred_value(db["COP"], COP_T, root="COP")
+    back = I.unshred_value(shredded, COP_T)
+    assert I.bags_equal(db["COP"], back)
+
+
+# -- columnar op semantics ----------------------------------------------------
+
+@st.composite
+def keyed_rows(draw):
+    n = draw(st.integers(1, 24))
+    rows = [{"k": draw(st.integers(0, 6)), "v": float(draw(st.integers(0, 9)))}
+            for _ in range(n)]
+    return rows
+
+
+@settings(max_examples=30, deadline=None)
+@given(keyed_rows(), st.integers(0, 8))
+def test_sum_by_matches_python(rows, extra_cap):
+    bag = FlatBag.from_rows(rows, {"k": "int", "v": "real"},
+                            capacity=len(rows) + extra_cap)
+    out = X.sum_by(bag, ("k",), ("v",)).to_rows()
+    want = {}
+    for r in rows:
+        want[r["k"]] = want.get(r["k"], 0.0) + r["v"]
+    got = {r["k"]: r["v"] for r in out}
+    assert got == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(keyed_rows())
+def test_dedup_matches_python(rows):
+    bag = FlatBag.from_rows(rows, {"k": "int", "v": "real"})
+    out = X.dedup(bag, ("k", "v")).to_rows()
+    want = {(r["k"], r["v"]) for r in rows}
+    got = {(r["k"], r["v"]) for r in out}
+    assert got == want and len(out) == len(want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(keyed_rows(), st.integers(1, 6))
+def test_fk_join_matches_python(rows, n_right):
+    right_rows = [{"k": i, "w": float(i * 10)} for i in range(n_right)]
+    left = FlatBag.from_rows(rows, {"k": "int", "v": "real"})
+    right = FlatBag.from_rows(right_rows, {"k": "int", "w": "real"})
+    out = X.fk_join(left, right, ("k",), ("k",), how="inner").to_rows()
+    want = sorted((r["k"], r["v"], float(r["k"] * 10))
+                  for r in rows if r["k"] < n_right)
+    got = sorted((r["k"], r["v"], r["w"]) for r in out)
+    assert got == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(keyed_rows(), st.integers(1, 5))
+def test_general_join_matches_python(rows, n_right):
+    # right side with duplicate keys (M:N)
+    right_rows = [{"k": i % 3, "w": float(i)} for i in range(n_right)]
+    left = FlatBag.from_rows(rows, {"k": "int", "v": "real"})
+    right = FlatBag.from_rows(right_rows, {"k": "int", "w": "real"})
+    want = sorted((l["k"], l["v"], r["w"])
+                  for l in rows for r in right_rows if l["k"] == r["k"])
+    cap = max(len(want), 1)
+    out, overflow = X.general_join(left, right, ("k",), ("k",), cap)
+    got = sorted((r["k"], r["v"], r["w"]) for r in out.to_rows())
+    assert int(overflow) == 0
+    assert got == want
+
+
+@settings(max_examples=20, deadline=None)
+@given(keyed_rows())
+def test_nest_level_partitions_rows(rows):
+    bag = FlatBag.from_rows(rows, {"k": "int", "v": "real"})
+    parents, children = X.nest_level(bag, ("k",), ("v",), "lbl")
+    prows = parents.to_rows()
+    crows = children.to_rows()
+    assert {p["k"] for p in prows} == {r["k"] for r in rows}
+    # every child's label maps to exactly one parent's key group
+    lbl_to_k = {p["lbl"]: p["k"] for p in prows}
+    got = sorted((lbl_to_k[c["lbl"]], c["v"]) for c in crows)
+    want = sorted((r["k"], r["v"]) for r in rows)
+    assert got == want
