@@ -1,0 +1,18 @@
+# Developer entry points. The container bakes the jax toolchain; no
+# pip installs happen here.
+
+PY := PYTHONPATH=src python
+
+.PHONY: test bench-quick bench
+
+test:
+	$(PY) -m pytest -x -q
+
+# CPU-friendly perf smoke: runs every benchmark section except the
+# 8-virtual-device skew subprocess, fails on any Python exception, and
+# writes BENCH_<timestamp>.json (the cross-PR perf trajectory file).
+bench-quick:
+	$(PY) -m benchmarks.run --quick --skip-skew
+
+bench:
+	$(PY) -m benchmarks.run

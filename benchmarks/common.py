@@ -18,11 +18,23 @@ from repro.core.unnesting import Catalog, compile_standard
 from repro.data.generators import TPCH_TYPES
 
 ROWS: List[str] = []
+RECORDS: List[dict] = []          # machine-readable twin of ROWS
+CURRENT_SECTION: Optional[str] = None
+
+
+def set_section(name: Optional[str]):
+    """run.py tags every emit with its benchmark section (for the
+    BENCH_<timestamp>.json perf-trajectory file)."""
+    global CURRENT_SECTION
+    CURRENT_SECTION = name
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     line = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(line)
+    RECORDS.append({"section": CURRENT_SECTION, "name": name,
+                    "us_per_call": round(float(us_per_call), 1),
+                    "derived": derived})
     print(line, flush=True)
 
 

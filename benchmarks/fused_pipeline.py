@@ -1,0 +1,83 @@
+"""Fused-executor micro-benchmark: the paper's hot pipeline shape
+``join -> sum_by -> nest_level`` on shared keys, executed
+
+  * order-aware (physical props shared: one probe-side sort, cached
+    build argsort, cached packed keys), vs
+  * unfused (ORDER_AWARE off: every operator re-derives its sort /
+    pack, the seed executor's behavior),
+
+plus the Pallas kernel path for the fused variant. The on/off pair is
+the before/after number for the sort-order-aware executor; it lands in
+BENCH_<timestamp>.json under section "fused_pipeline"."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.columnar.table import FlatBag
+from repro.exec import ops as X
+
+from .common import emit, time_fn
+
+
+def _make_bags(n: int, n_parts: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    lineitem = FlatBag.from_rows(
+        [{"pid": int(rng.randint(0, n_parts)),
+          "odate": int(rng.randint(0, 365)),
+          "qty": float(rng.randint(1, 50))} for _ in range(n)],
+        {"pid": "int", "odate": "int", "qty": "real"})
+    part = FlatBag.from_rows(
+        [{"pid": i, "price": float(rng.randint(1, 100))}
+         for i in range(n_parts)],
+        {"pid": "int", "price": "real"})
+    return lineitem, part
+
+
+def _pipeline(lineitem: FlatBag, part: FlatBag, use_kernel: bool = False):
+    j = X.fk_join(lineitem, part, ("pid",), ("pid",),
+                  use_kernel=use_kernel)
+    j = j.with_columns(total=j.col("qty") * j.col("price"))
+    agg = X.sum_by(j, ("odate", "pid"), ("total",), use_kernel=use_kernel)
+    return X.nest_level(agg, ("odate",), ("pid", "total"), "lbl",
+                        use_kernel=use_kernel)
+
+
+def run(n: int = 20000, n_parts: int = 512, pallas_n: int = 1000):
+    # pallas variant runs tiny on CPU: interpret mode executes the grid
+    # as a Python loop, so it only demonstrates wiring here; the real
+    # number needs a TPU (kernels.ops.detect_backend flips INTERPRET)
+    for label, order_aware, use_kernel, nn, iters in (
+            ("fused", True, False, n, 3),
+            ("unfused", False, False, n, 3),
+            ("fused_pallas", True, True, pallas_n, 1)):
+        # fresh bags per variant: caches must not leak across variants
+        lineitem, part = _make_bags(nn, n_parts)
+        with X.order_awareness(order_aware):
+            us = time_fn(lambda: _pipeline(lineitem, part,
+                                           use_kernel=use_kernel),
+                         iters=iters)
+            X.reset_sort_stats()
+            _pipeline(lineitem, part, use_kernel=use_kernel)
+            sorts = X.SORT_STATS.get("lexsort", 0) \
+                + X.SORT_STATS.get("build_argsort", 0)
+        emit(f"pipeline_{label}", us, f"n={nn} sorts_per_call={sorts}")
+
+    # correctness tie: fused == unfused on the same data
+    lineitem, part = _make_bags(2000, 64, seed=1)
+    fused = _pipeline(lineitem, part)
+    with X.order_awareness(False):
+        li2, p2 = _make_bags(2000, 64, seed=1)
+        unfused = _pipeline(li2, p2)
+
+    def _freeze(out):
+        parents, children = out
+        lbl = {r["lbl"]: r["odate"] for r in parents.to_rows()}
+        return sorted((lbl[r["lbl"]], r["pid"], r["total"])
+                      for r in children.to_rows())
+
+    assert _freeze(fused) == _freeze(unfused), "fused executor mismatch"
+
+
+if __name__ == "__main__":
+    run()

@@ -1,12 +1,19 @@
 """Benchmark driver — one section per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV (paper Fig. 7, Fig. 8, Fig. 9,
-Appendix D, Appendix E.1), then the roofline summary pointer.
+Appendix D, Appendix E.1), then the roofline summary pointer, and
+writes a machine-readable ``BENCH_<timestamp>.json`` next to the CSV
+output so the perf trajectory is trackable across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-skew]
 """
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
+
+from benchmarks import common
 
 
 def main() -> None:
@@ -14,13 +21,21 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-skew", action="store_true",
                     help="skip the 8-virtual-device subprocess benchmark")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<timestamp>.json")
     args = ap.parse_args()
+    # fail fast on an unwritable destination, not after the full run
+    os.makedirs(args.out_dir, exist_ok=True)
 
     print("name,us_per_call,derived")
     sections = []
-    from benchmarks import biomedical, representation, succinct, tpch_nested
+    from benchmarks import (biomedical, fused_pipeline, representation,
+                            succinct, tpch_nested)
     sections.append(("tpch_nested (Fig.7)",
                      lambda: tpch_nested.run(scale=30 if args.quick else 60)))
+    sections.append(("fused_pipeline (order-aware executor)",
+                     lambda: fused_pipeline.run(
+                         n=5000 if args.quick else 20000)))
     sections.append(("biomedical E2E (Fig.9)",
                      lambda: biomedical.run(n_samples=6 if args.quick else 10)))
     sections.append(("succinct (App.D)", succinct.run))
@@ -34,13 +49,30 @@ def main() -> None:
     failed = []
     for name, fn in sections:
         print(f"# --- {name} ---", flush=True)
+        common.set_section(name)
         try:
             fn()
         except Exception:
             traceback.print_exc()
             failed.append(name)
+        finally:
+            common.set_section(None)
     print("# --- roofline (assignment) ---")
     print("# see: PYTHONPATH=src python -m benchmarks.roofline")
+
+    stamp = time.strftime("%Y%m%d_%H%M%S")
+    by_section = {}
+    for rec in common.RECORDS:
+        by_section.setdefault(rec["section"] or "unsectioned", {})[
+            rec["name"]] = {"us_per_call": rec["us_per_call"],
+                            "derived": rec["derived"]}
+    payload = {"timestamp": stamp, "quick": args.quick,
+               "failed_sections": failed, "sections": by_section}
+    out_path = f"{args.out_dir}/BENCH_{stamp}.json"
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}")
+
     if failed:
         print(f"# FAILED sections: {failed}")
         sys.exit(1)

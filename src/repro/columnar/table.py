@@ -49,11 +49,31 @@ class StringEncoder:
 
 @jax.tree_util.register_pytree_node_class
 class FlatBag:
-    """Struct-of-arrays bag: ``data[col] : (capacity,)`` + ``valid``."""
+    """Struct-of-arrays bag: ``data[col] : (capacity,)`` + ``valid``.
 
-    def __init__(self, data: Dict[str, jnp.ndarray], valid: jnp.ndarray):
+    ``props`` (columnar.props.PhysicalProps) caches physical properties
+    — packed keys, delivered sort orders, build-side argsorts. It is
+    deliberately NOT part of the pytree: crossing a jit / shard_map
+    boundary drops the cache (it is always recomputable), which keeps
+    traced arrays from leaking out of their trace.
+    """
+
+    def __init__(self, data: Dict[str, jnp.ndarray], valid: jnp.ndarray,
+                 props=None):
         self.data = dict(data)
         self.valid = valid
+        self._props = props
+
+    @property
+    def props(self):
+        if self._props is None:
+            from .props import PhysicalProps
+            self._props = PhysicalProps()
+        return self._props
+
+    def with_props(self, props) -> "FlatBag":
+        """Same bag, explicit physical properties (shares arrays)."""
+        return FlatBag(self.data, self.valid, props)
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
@@ -83,18 +103,29 @@ class FlatBag:
     def with_columns(self, **cols) -> "FlatBag":
         data = dict(self.data)
         data.update(cols)
-        return FlatBag(data, self.valid)
+        props = None
+        if self._props is not None:
+            props = self._props.after_new_columns(
+                [c for c in cols if c in self.data])
+        return FlatBag(data, self.valid, props)
 
     def select_columns(self, names: Sequence[str]) -> "FlatBag":
-        return FlatBag({n: self.data[n] for n in names}, self.valid)
+        props = None
+        if self._props is not None:
+            props = self._props.restrict_columns(names)
+        return FlatBag({n: self.data[n] for n in names}, self.valid, props)
 
     def drop_columns(self, names: Sequence[str]) -> "FlatBag":
         drop = set(names)
-        return FlatBag({n: a for n, a in self.data.items() if n not in drop},
-                       self.valid)
+        keep = [n for n in self.data if n not in drop]
+        props = None
+        if self._props is not None:
+            props = self._props.restrict_columns(keep)
+        return FlatBag({n: self.data[n] for n in keep}, self.valid, props)
 
     def mask(self, keep: jnp.ndarray) -> "FlatBag":
-        return FlatBag(self.data, self.valid & keep)
+        props = self._props.after_mask() if self._props is not None else None
+        return FlatBag(self.data, self.valid & keep, props)
 
     def row_bytes(self) -> int:
         """Bytes per valid row (the shuffle-accounting unit)."""

@@ -25,8 +25,8 @@ from repro.exec import ops as X
 from . import interpreter as I
 from . import nrc as N
 from .materialization import Manifest, ShreddedProgram, mat_input_name
-from .plans import ExecSettings, MapP, Plan, eval_plan, push_aggregation, \
-    required_columns
+from .plans import ExecSettings, MapP, Plan, annotate_orders, eval_plan, \
+    push_aggregation, push_order, required_columns
 from .unnesting import Catalog, NestSpec, StandardPlan, compile_flat_query
 
 
@@ -112,6 +112,8 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
         plan = compile_flat_query(a.expr, catalog)
         if optimize:
             plan = push_aggregation(plan)
+            plan = push_order(plan)
+            plan = annotate_orders(plan)
             plan = required_columns(plan, None)
         plans.append((a.name, plan))
     return CompiledProgram(plans, sp)
@@ -179,7 +181,7 @@ def run_standard(sp: StandardPlan, env: Dict[str, FlatBag],
             child_cols = tuple(agg_keys) + tuple(agg_vals)
             parents, children = X.nest_level(
                 agg, spec.group_cols, child_cols, spec.label_col,
-                child_valid_col="__cv")
+                child_valid_col="__cv", use_kernel=settings.use_kernel)
             out_children = FlatBag(
                 {"label": children.col(spec.label_col),
                  **{c: children.col(c) for c in child_cols}},
@@ -191,7 +193,7 @@ def run_standard(sp: StandardPlan, env: Dict[str, FlatBag],
             child_cols = tuple(out for out, _ in spec.rename)
             parents, children = X.nest_level(
                 bag2, spec.group_cols, child_cols, spec.label_col,
-                child_valid_col="__cv")
+                child_valid_col="__cv", use_kernel=settings.use_kernel)
             out_children = FlatBag(
                 {"label": children.col(spec.label_col),
                  **{c: children.col(c) for c in child_cols}},
@@ -234,6 +236,12 @@ def unshred_parts(parts: Dict[tuple, FlatBag]) -> Dict[tuple, CSRLevel]:
             continue
         key = bag.col("label").astype(jnp.int64)
         key = jnp.where(bag.valid, key, X.I64_MAX)
+        if X.ORDER_AWARE and bag.props.invalid_last \
+                and bag.props.sorted_prefix(("label",)):
+            # dictionary already clustered by label (Gamma_u children of
+            # an invalid-last input): the cogroup sort is free
+            out[path] = CSRLevel(bag, key)
+            continue
         order = jnp.argsort(key)
         data = {n: a[order] for n, a in bag.data.items()}
         out[path] = CSRLevel(FlatBag(data, bag.valid[order]), key[order])

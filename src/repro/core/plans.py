@@ -101,6 +101,20 @@ class OuterUnnestP(Plan):
     rowid_col: Optional[str] = None
 
 
+@dataclass
+class FusedJoinAggP(Plan):
+    """Physical fusion of a unique-build JoinP feeding Gamma+ (the
+    ``join -> sum_by`` chain of every shredded benchmark plan). The
+    evaluator runs join and aggregation as one pipeline: the join output
+    stays row-aligned with the probe side, so its delivered ordering and
+    packed-key caches flow into the aggregation and the probe side is
+    sorted at most once (asserted by the SORT_STATS fusion tests)."""
+    join: JoinP
+    keys: tuple
+    vals: tuple
+    local_preagg: bool = False
+
+
 def plan_pretty(p: Plan, indent: int = 0) -> str:
     pad = "  " * indent
     if isinstance(p, ScanP):
@@ -136,6 +150,9 @@ def plan_pretty(p: Plan, indent: int = 0) -> str:
         return (f"{pad}OuterUnnest[{p.child_bag} as {p.alias}, "
                 f"{p.parent_label}={p.alias}.{p.child_label}]\n"
                 f"{plan_pretty(p.parent, indent+1)}")
+    if isinstance(p, FusedJoinAggP):
+        return (f"{pad}FusedJoinAgg[keys={p.keys} vals={p.vals}]\n"
+                f"{plan_pretty(p.join, indent+1)}")
     return f"{pad}<{type(p).__name__}>"
 
 
@@ -173,17 +190,9 @@ def eval_col_expr(e: N.Expr, bag: FlatBag) -> jnp.ndarray:
         # may themselves be 64-bit labels, so shift-packing is unsound;
         # construction and lookup sides evaluate the same expression, so
         # equality is preserved (collision odds ~2^-64, DESIGN §7).
-        vals = [eval_col_expr(v, bag).astype(jnp.int64)
-                for _, v in e.captures]
-        if len(vals) == 1:
-            return vals[0]
-        from repro.exec.ops import _mix64
-        k = _mix64(vals[0])
-        golden = jnp.uint64(0x9E3779B97F4A7C15)
-        for v in vals[1:]:
-            salted = (v.astype(jnp.uint64) + golden).astype(jnp.int64)
-            k = _mix64(k ^ _mix64(salted))
-        return k
+        from repro.exec.hashing import combine64
+        return combine64([eval_col_expr(v, bag).astype(jnp.int64)
+                          for _, v in e.captures])
     raise TypeError(f"eval_col_expr: {type(e).__name__} ({N.pretty(e)})")
 
 
@@ -216,11 +225,27 @@ class ExecSettings:
 
 def _scan(env: Dict[str, FlatBag], name: str, alias: str,
           with_rowid: bool = False) -> FlatBag:
+    """Scan an environment bag under an alias. Memoized on the source
+    bag's physical props: every ScanP of the same (bag, alias) across
+    the assignment sequence returns ONE FlatBag instance, so key caches
+    and build-side argsorts accumulate across the whole query bundle
+    (a dictionary joined in three assignments argsorts once)."""
     bag = env[name]
+    memo_key = (alias, with_rowid)
+    if X.ORDER_AWARE:
+        hit = bag.props.scan_memo.get(memo_key)
+        if hit is not None:
+            return hit
     data = {f"{alias}.{c}": bag.data[c] for c in bag.data}
     if with_rowid:
         data[f"{alias}.__rowid"] = jnp.arange(bag.capacity, dtype=jnp.int64)
-    return FlatBag(data, bag.valid)
+    props = None
+    if X.ORDER_AWARE:
+        props = bag.props.renamed({c: f"{alias}.{c}" for c in bag.data})
+    out = FlatBag(data, bag.valid, props)
+    if X.ORDER_AWARE:
+        bag.props.scan_memo[memo_key] = out
+    return out
 
 
 def eval_plan(p: Plan, env: Dict[str, FlatBag],
@@ -267,8 +292,18 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
         bag, _ = X.flatten_child(parent, child, p.parent_label,
                                  f"{p.alias}.{p.child_label}", out_cap,
                                  outer=True, matched_col=p.matched_col,
-                                 rowid_col=p.rowid_col)
+                                 rowid_col=p.rowid_col,
+                                 use_kernel=s.use_kernel)
         return bag
+    if isinstance(p, FusedJoinAggP):
+        left = eval_plan(p.join.left, env, s)
+        right = eval_plan(p.join.right, env, s)
+        joined = _exec_join(p.join, left, right, s)
+        if s.dist is not None:
+            return s.dist.sum_by(joined, p.keys, p.vals,
+                                 local_preagg=p.local_preagg,
+                                 use_kernel=s.use_kernel)
+        return X.sum_by(joined, p.keys, p.vals, use_kernel=s.use_kernel)
     raise TypeError(f"eval_plan: {type(p).__name__}")
 
 
@@ -280,7 +315,8 @@ def _exec_join(p: JoinP, left: FlatBag, right: FlatBag,
                            broadcast=p.broadcast, skew_aware=p.skew_aware,
                            expansion=p.expansion)
     if p.unique_right:
-        bag = X.fk_join(left, right, p.left_on, p.right_on, how=p.how)
+        bag = X.fk_join(left, right, p.left_on, p.right_on, how=p.how,
+                        use_kernel=s.use_kernel)
         if p.how == "left_outer" and p.matched_col != "__matched":
             bag.data[p.matched_col] = bag.data.pop("__matched")
         return bag
@@ -288,7 +324,8 @@ def _exec_join(p: JoinP, left: FlatBag, right: FlatBag,
     # cardinality (1 label -> whole inner bag), so size by max of both
     out_cap = int(max(left.capacity, right.capacity) * max(p.expansion, 1.0))
     bag, _ = X.general_join(left, right, p.left_on, p.right_on, out_cap,
-                            how=p.how, matched_col=p.matched_col)
+                            how=p.how, matched_col=p.matched_col,
+                            use_kernel=s.use_kernel)
     return bag
 
 
@@ -334,7 +371,7 @@ def _pushdown(p: Plan, needed: Optional[set]) -> Plan:
         rn = None if needed is None else set(needed) | set(p.right_on)
         return JoinP(_pushdown(p.left, ln), _pushdown(p.right, rn),
                      p.left_on, p.right_on, p.how, p.unique_right,
-                     p.expansion, p.broadcast, p.skew_aware)
+                     p.expansion, p.broadcast, p.skew_aware, p.matched_col)
     if isinstance(p, SumAggP):
         cn = set(p.keys) | set(p.vals)
         return SumAggP(_pushdown(p.child, cn), p.keys, p.vals,
@@ -349,7 +386,16 @@ def _pushdown(p: Plan, needed: Optional[set]) -> Plan:
     if isinstance(p, OuterUnnestP):
         pn = None if needed is None else set(needed) | {p.parent_label}
         return OuterUnnestP(_pushdown(p.parent, pn), p.child_bag, p.alias,
-                            p.parent_label, p.child_label, p.expansion)
+                            p.parent_label, p.child_label, p.expansion,
+                            p.matched_col, p.rowid_col)
+    if isinstance(p, FusedJoinAggP):
+        cn = set(p.keys) | set(p.vals)
+        j = p.join
+        nj = JoinP(_pushdown(j.left, cn | set(j.left_on)),
+                   _pushdown(j.right, cn | set(j.right_on)),
+                   j.left_on, j.right_on, j.how, j.unique_right,
+                   j.expansion, j.broadcast, j.skew_aware, j.matched_col)
+        return FusedJoinAggP(nj, p.keys, p.vals, p.local_preagg)
     raise TypeError(type(p).__name__)
 
 
@@ -395,7 +441,7 @@ def push_aggregation(p: Plan) -> Plan:
             inner = SumAggP(j.left, keys_below, p.vals)
             new_join = JoinP(inner, j.right, j.left_on, j.right_on, j.how,
                              j.unique_right, j.expansion, j.broadcast,
-                             j.skew_aware)
+                             j.skew_aware, j.matched_col)
             return SumAggP(new_join, p.keys, p.vals)
     # recurse
     for attr in ("child", "left", "right", "parent"):
@@ -423,4 +469,122 @@ def _plan_columns(p: Plan) -> Optional[set]:
         return l | r
     if isinstance(p, DeDupP):
         return _plan_columns(p.child)
+    if isinstance(p, FusedJoinAggP):
+        return set(p.keys) | set(p.vals)
     return None
+
+
+# ---------------------------------------------------------------------------
+# physical ordering pass: annotate required/delivered orders, reorder
+# key tuples for prefix sharing, fuse join->Gamma+ chains
+# ---------------------------------------------------------------------------
+
+def delivered_order(p: Plan) -> Optional[tuple]:
+    """Ordering (column tuple, lexicographic over valid rows) the plan's
+    output delivers at runtime — mirrors the FlatBag.props.sorted_by
+    propagation of the physical operators."""
+    if isinstance(p, SelectP):
+        return delivered_order(p.child)   # masking preserves order
+    if isinstance(p, MapP):
+        d = delivered_order(p.child)
+        if d is None:
+            return None
+        if p.extend:
+            over = {c for c, _ in p.outputs}
+            return d if not (set(d) & over) else None
+        # non-extend: order columns survive via bare Var passthrough
+        passthru = {e.name: out for out, e in p.outputs
+                    if isinstance(e, N.Var)}
+        pref = []
+        for c in d:
+            if c not in passthru:
+                break
+            pref.append(passthru[c])
+        return tuple(pref) or None
+    if isinstance(p, JoinP):
+        return delivered_order(p.left)    # output is probe-side aligned
+    if isinstance(p, (SumAggP, FusedJoinAggP)):
+        return tuple(p.keys)
+    if isinstance(p, DeDupP):
+        return tuple(p.cols) if p.cols else None
+    if isinstance(p, OuterUnnestP):
+        return delivered_order(p.parent)  # left-major expansion
+    return None
+
+
+def required_order(p: Plan) -> Optional[tuple]:
+    """Ordering the operator itself wants from its (probe-side) input —
+    grouping ops want their key columns clustered."""
+    if isinstance(p, (SumAggP, FusedJoinAggP)):
+        return tuple(p.keys)
+    if isinstance(p, DeDupP):
+        return tuple(p.cols) if p.cols else None
+    return None
+
+
+def annotate_orders(p: Plan) -> Plan:
+    """EXPLAIN support: attach ``p.required_ord`` / ``p.delivered_ord``
+    to every node (the fusion tests and plan dumps read these)."""
+    p.required_ord = required_order(p)
+    p.delivered_ord = delivered_order(p)
+    for attr in ("child", "left", "right", "parent", "join"):
+        if hasattr(p, attr):
+            annotate_orders(getattr(p, attr))
+    return p
+
+
+def _prefix_reorder(keys: tuple, desired: Optional[tuple]) -> tuple:
+    """Reorder a grouping key tuple (set semantics) so the columns the
+    PARENT wants ordered come first, making the delivered ordering a
+    usable prefix upstream. No-op when there is no overlap."""
+    if not desired:
+        return tuple(keys)
+    ks = set(keys)
+    head = [c for c in desired if c in ks]
+    return tuple(head) + tuple(c for c in keys if c not in set(head))
+
+
+def push_order(p: Plan, desired: Optional[tuple] = None) -> Plan:
+    """Order-aware physical rewrite (run after push_aggregation, before
+    projection pushdown):
+
+    * grouping key tuples are reordered so a downstream grouping's keys
+      form a *prefix* of the delivered lexicographic ordering — chains
+      like Gamma+(G+A) -> Gamma_u(G) or dedup(K) above sum_by(K+...)
+      then share one sort at runtime;
+    * a Gamma+ directly above a unique-build join fuses into
+      ``FusedJoinAggP`` — the one-pipeline join+aggregate whose probe
+      side is sorted exactly once.
+    """
+    if isinstance(p, SumAggP):
+        keys = _prefix_reorder(p.keys, desired)
+        child = push_order(p.child, keys)
+        if isinstance(child, JoinP) and child.unique_right:
+            return FusedJoinAggP(child, keys, p.vals, p.local_preagg)
+        return SumAggP(child, keys, p.vals, p.local_preagg)
+    if isinstance(p, DeDupP):
+        cols = _prefix_reorder(p.cols, desired) if p.cols else None
+        return DeDupP(push_order(p.child, cols), cols)
+    if isinstance(p, SelectP):
+        return SelectP(push_order(p.child, desired), p.pred)
+    if isinstance(p, MapP):
+        if p.extend:
+            over = {c for c, _ in p.outputs}
+            down = tuple(c for c in desired or () if c not in over) or None
+            return MapP(push_order(p.child, down), p.outputs, extend=True)
+        # translate desired through bare-Var passthrough outputs
+        srcs = {out: e.name for out, e in p.outputs if isinstance(e, N.Var)}
+        down = tuple(srcs[c] for c in desired or () if c in srcs) or None
+        return MapP(push_order(p.child, down), p.outputs)
+    if isinstance(p, JoinP):
+        return JoinP(push_order(p.left, desired),
+                     push_order(p.right, tuple(p.right_on)),
+                     p.left_on, p.right_on, p.how, p.unique_right,
+                     p.expansion, p.broadcast, p.skew_aware, p.matched_col)
+    if isinstance(p, OuterUnnestP):
+        return OuterUnnestP(push_order(p.parent, desired), p.child_bag,
+                            p.alias, p.parent_label, p.child_label,
+                            p.expansion, p.matched_col, p.rowid_col)
+    if isinstance(p, UnionP):
+        return UnionP(push_order(p.left, None), push_order(p.right, None))
+    return p

@@ -23,15 +23,6 @@ from repro.exec import ops as X
 I64_MAX = X.I64_MAX
 
 
-def mix64(k: jnp.ndarray) -> jnp.ndarray:
-    """splitmix64 finalizer — hash partitioning and sampling strides."""
-    k = k.astype(jnp.uint64)
-    k = (k ^ (k >> 30)) * jnp.uint64(0xBF58476D1CE4E5B9)
-    k = (k ^ (k >> 27)) * jnp.uint64(0x94D049BB133111EB)
-    k = k ^ (k >> 31)
-    return k.astype(jnp.int64)
-
-
 def heavy_keys_local(key: jnp.ndarray, valid: jnp.ndarray,
                      sample: int = 256, threshold: float = 0.025,
                      max_heavy: Optional[int] = None) -> jnp.ndarray:

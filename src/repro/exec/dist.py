@@ -28,6 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.columnar.table import FlatBag
 from repro.core import skew as SK
 from . import ops as X
+from .hashing import mix64
 
 
 class DistContext:
@@ -58,13 +59,20 @@ class DistContext:
                  keep: Optional[jnp.ndarray] = None) -> FlatBag:
         """Hash-repartition rows by key over the partition axis.
         ``keep`` optionally restricts which rows participate (others are
-        dropped — used by skew-aware ops to exchange only light rows)."""
+        dropped — used by skew-aware ops to exchange only light rows).
+
+        Physical props across the exchange: repartition destroys any
+        delivered sort order, but the packed key *travels with the rows*
+        (one extra int64 lane, metered below), so the receiving side's
+        key cache is pre-seeded and the post-exchange aggregation /
+        join packs nothing."""
         cap = bag.capacity
         Pn = self.P
+        key_cols = tuple(key_cols)
         bucket = max(int(cap * self.cap_factor) // Pn, 1)
         key = X.pack_keys(bag, key_cols)
         valid = bag.valid if keep is None else (bag.valid & keep)
-        dest = (SK.mix64(key) % Pn).astype(jnp.int32)
+        dest = (mix64(key) % Pn).astype(jnp.int32)
         dest = jnp.where(valid, dest, 0)
         onehot = (dest[:, None] == jnp.arange(Pn)[None, :]) & valid[:, None]
         pos = jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1
@@ -72,7 +80,9 @@ class DistContext:
         ok = valid & (pos < bucket)
         self._add("overflow_rows", jnp.sum(valid & (pos >= bucket)))
         self._add("shuffle_rows", jnp.sum(ok))
-        self._add("shuffle_bytes", jnp.sum(ok) * bag.row_bytes())
+        # order-aware exchanges ship the packed key as one extra lane
+        key_lane = 8 if X.ORDER_AWARE else 0
+        self._add("shuffle_bytes", jnp.sum(ok) * (bag.row_bytes() + key_lane))
 
         pos_safe = jnp.where(ok, pos, bucket)  # out-of-bounds -> dropped
 
@@ -81,17 +91,19 @@ class DistContext:
             return buf.at[dest, pos_safe].set(jnp.where(ok, col, 0),
                                               mode="drop")
 
-        data = {n: scatter(a) for n, a in bag.data.items()}
-        vbuf = jnp.zeros((Pn, bucket), bool).at[dest, pos_safe].set(
-            ok, mode="drop")
-        out_data = {}
-        for n, a in data.items():
-            recv = jax.lax.all_to_all(a, self.axis, split_axis=0,
-                                      concat_axis=0, tiled=False)
-            out_data[n] = recv.reshape(Pn * bucket)
-        vrecv = jax.lax.all_to_all(vbuf, self.axis, split_axis=0,
-                                   concat_axis=0, tiled=False)
-        return FlatBag(out_data, vrecv.reshape(Pn * bucket))
+        def a2a(buf):
+            return jax.lax.all_to_all(buf, self.axis, split_axis=0,
+                                      concat_axis=0,
+                                      tiled=False).reshape(Pn * bucket)
+
+        out_data = {n: a2a(scatter(a)) for n, a in bag.data.items()}
+        vrecv = a2a(jnp.zeros((Pn, bucket), bool).at[dest, pos_safe].set(
+            ok, mode="drop"))
+        props = None
+        if X.ORDER_AWARE:
+            from repro.columnar.props import PhysicalProps
+            props = PhysicalProps(key_cache={key_cols: a2a(scatter(key))})
+        return FlatBag(out_data, vrecv, props)
 
     # -- broadcast (all_gather) -----------------------------------------
     def gather_all(self, bag: FlatBag,

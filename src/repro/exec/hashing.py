@@ -1,0 +1,42 @@
+"""Canonical 64-bit hashing for key packing and hash partitioning.
+
+One home for splitmix64: ``exec.ops`` (key packing), ``core.skew``
+(partition hashing / sampling strides) and ``core.plans`` (columnar
+label construction) all import from here instead of keeping verbatim
+copies.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+GOLDEN = jnp.uint64(0x9E3779B97F4A7C15)
+
+
+def mix64(k: jnp.ndarray) -> jnp.ndarray:
+    """splitmix64 finalizer (bijective on 64 bits)."""
+    k = k.astype(jnp.uint64)
+    k = (k ^ (k >> 30)) * jnp.uint64(0xBF58476D1CE4E5B9)
+    k = (k ^ (k >> 27)) * jnp.uint64(0x94D049BB133111EB)
+    k = k ^ (k >> 31)
+    return k.astype(jnp.int64)
+
+
+def combine64(vals: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Equality-preserving composite key over int64 columns.
+
+    One column: the value itself (exact). Multiple columns: iterated
+    splitmix64 combining — columns may themselves be full-width 64-bit
+    labels, so shift-packing is not sound; hash-combining preserves
+    equality with ~2^-64 pairwise collision odds (DESIGN.md §7).
+    """
+    assert len(vals) >= 1, "empty key"
+    if len(vals) == 1:
+        return vals[0].astype(jnp.int64)
+    k = mix64(vals[0].astype(jnp.int64))
+    for v in vals[1:]:
+        salted = (v.astype(jnp.uint64) + GOLDEN).astype(jnp.int64)
+        k = mix64(k ^ mix64(salted))
+    return k

@@ -13,60 +13,217 @@ operators (Fig. 10) under the TPU static-shape discipline:
   dedup      -> dedup
   mu / mu-bar-> flatten_child / outer_unnest (wide flattening, standard route)
 
-All ops are shape-static and jit-safe. Aggregation can route through the
-Pallas segment_reduce kernel (interpret mode on CPU) or the jnp fallback.
+All ops are shape-static and jit-safe.
+
+Order-awareness (DESIGN.md "Physical properties and fusion"): every
+operator consults and propagates ``FlatBag.props`` instead of
+re-deriving physical work. Grouping ops sort *lexicographically by the
+raw key columns* (not by a packed hash), so a bag sorted by (G, A) is
+also grouped by every prefix — sum_by(G+A) feeding nest_level(G) costs
+one sort total, and a ``join -> sum_by -> nest_level`` pipeline sorts
+the probe side exactly once. ``SORT_STATS`` counts the sorts actually
+performed (the hook the fusion tests assert on); ``ORDER_AWARE`` is the
+global knob benchmarks flip to measure the unfused executor.
+
+Aggregation and join gathers can route through the Pallas kernels
+(interpret mode on CPU) or the jnp fallbacks.
 """
 
 from __future__ import annotations
 
+from contextlib import contextmanager
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.columnar.props import PhysicalProps
 from repro.columnar.table import FlatBag
 
+from .hashing import combine64
+
 I64_MAX = jnp.iinfo(jnp.int64).max
+
+
+# ---------------------------------------------------------------------------
+# physical-property plumbing: knob + sort accounting
+# ---------------------------------------------------------------------------
+
+ORDER_AWARE = True   # False => recompute everything per operator (seed mode)
+
+SORT_STATS: Dict[str, int] = {}
+
+
+def reset_sort_stats() -> None:
+    SORT_STATS.clear()
+
+
+def _count(name: str) -> None:
+    SORT_STATS[name] = SORT_STATS.get(name, 0) + 1
+
+
+@contextmanager
+def order_awareness(enabled: bool):
+    """Scoped ORDER_AWARE toggle (benchmarks compare fused vs unfused)."""
+    global ORDER_AWARE
+    prev = ORDER_AWARE
+    ORDER_AWARE = enabled
+    try:
+        yield
+    finally:
+        ORDER_AWARE = prev
+
+
+def _cache_ok(bag: FlatBag, arr) -> bool:
+    """Refuse to store a traced array on a concrete bag's props: a
+    closure-captured bag would hand the tracer to eager code after the
+    trace ends. (Bags passed as jit arguments rebuild with props=None,
+    so same-trace caching is always safe.)"""
+    from jax.core import Tracer
+    return isinstance(bag.valid, Tracer) or not isinstance(arr, Tracer)
 
 
 # ---------------------------------------------------------------------------
 # key packing
 # ---------------------------------------------------------------------------
 
-def _mix64(k: jnp.ndarray) -> jnp.ndarray:
-    """splitmix64 finalizer (bijective on 64 bits)."""
-    k = k.astype(jnp.uint64)
-    k = (k ^ (k >> 30)) * jnp.uint64(0xBF58476D1CE4E5B9)
-    k = (k ^ (k >> 27)) * jnp.uint64(0x94D049BB133111EB)
-    k = k ^ (k >> 31)
-    return k.astype(jnp.int64)
-
-
 def pack_keys(bag: FlatBag, cols: Sequence[str]) -> jnp.ndarray:
-    """Composite equality key as int64. One column: the value itself
-    (exact). Multiple columns: iterated splitmix64 combining — columns
-    may themselves be full-width 64-bit labels, so shift-packing is not
-    sound; hash-combining preserves equality with ~2^-64 pairwise
-    collision odds (DESIGN.md §7)."""
+    """Composite equality key as int64 (see hashing.combine64), cached
+    per column tuple on the bag's physical props. Values at invalid
+    rows are unspecified — consumers mask by validity."""
+    cols = tuple(cols)
     assert cols, "empty key"
-    arrs = [bag.col(c).astype(jnp.int64) for c in cols]
-    if len(arrs) == 1:
-        return arrs[0]
-    k = _mix64(arrs[0])
-    golden = jnp.uint64(0x9E3779B97F4A7C15)
-    for a in arrs[1:]:
-        a_salted = (a.astype(jnp.uint64) + golden).astype(jnp.int64)
-        k = _mix64(k ^ _mix64(a_salted))
-    return k
+    if ORDER_AWARE:
+        cached = bag.props.key_cache.get(cols)
+        if cached is not None:
+            _count("key_reuse")
+            return cached
+    key = combine64([bag.col(c) for c in cols])
+    if ORDER_AWARE and _cache_ok(bag, key):
+        bag.props.key_cache[cols] = key
+    return key
 
 
-def _sorted_by(bag: FlatBag, key: jnp.ndarray
-               ) -> Tuple[FlatBag, jnp.ndarray, jnp.ndarray]:
-    """Sort rows by (invalid-last, key). Returns (sorted bag, sorted key,
-    permutation)."""
-    order = jnp.lexsort((key, ~bag.valid))
+def _key_arrays(bag: FlatBag, cols: Sequence[str]) -> List[jnp.ndarray]:
+    """Sortable int64 views of key columns. Floats sort by BIT pattern,
+    not by truncated value: grouping only needs equal values adjacent,
+    and bit-equality is exact where an int cast would merge 2.1 and
+    2.9 into one sort key (their raw-value boundaries then depend on
+    sort stability)."""
+    return [_to_i64_bits(bag.col(c)) for c in cols]
+
+
+# ---------------------------------------------------------------------------
+# sorting / grouping (the shared physical work)
+# ---------------------------------------------------------------------------
+
+def _lexsort(bag: FlatBag, cols: Tuple[str, ...]) -> FlatBag:
+    """Sort rows by (invalid-last, cols lexicographic). The result
+    delivers ``sorted_by = cols`` with ``invalid_last``."""
+    _count("lexsort")
+    keys = _key_arrays(bag, cols)
+    order = jnp.lexsort(tuple(reversed(keys)) + (~bag.valid,))
     data = {n: a[order] for n, a in bag.data.items()}
-    return FlatBag(data, bag.valid[order]), key[order], order
+    props = PhysicalProps(sorted_by=cols, invalid_last=True) \
+        if ORDER_AWARE else None
+    return FlatBag(data, bag.valid[order], props)
+
+
+def _presorted_seg_ids(bag: FlatBag, cols: Tuple[str, ...]) -> jnp.ndarray:
+    """Dense group ids for a bag whose VALID rows are already clustered
+    by ``cols``. Invalid rows may be interleaved: a valid row starts a
+    new segment iff any key column differs from the previous *valid*
+    row; invalid rows fold into the running segment (their values are
+    masked out by every consumer)."""
+    cap = bag.capacity
+    idx = jnp.arange(cap)
+    last_valid = jax.lax.cummax(jnp.where(bag.valid, idx, -1))
+    prev_valid = jnp.concatenate(
+        [jnp.full((1,), -1, last_valid.dtype), last_valid[:-1]])
+    has_prev = prev_valid >= 0
+    pv = jnp.clip(prev_valid, 0, cap - 1)
+    differs = jnp.zeros(cap, bool)
+    for c in cols:
+        # compare the SAME int64 bit-view _lexsort orders by: raw float
+        # comparison would split bit-identical NaNs (NaN != NaN) and
+        # merge bit-distinct +0.0/-0.0 that the sort left non-adjacent
+        a = _to_i64_bits(bag.col(c))
+        differs = differs | (a != a[pv])
+    seg_start = bag.valid & (~has_prev | differs)
+    seg_start = seg_start.at[0].set(True)
+    return jnp.cumsum(seg_start.astype(jnp.int32)) - 1
+
+
+def _segments(bag: FlatBag, key_cols: Sequence[str]
+              ) -> Tuple[FlatBag, jnp.ndarray]:
+    """Cluster rows by ``key_cols``; returns (sorted bag, dense group
+    ids). Reuses a delivered ordering when ``key_cols`` is a prefix of
+    the bag's ``sorted_by`` — the fusion that lets sum_by / dedup /
+    nest_level chains on shared keys sort once."""
+    cols = tuple(key_cols)
+    if ORDER_AWARE and bag.props.sorted_prefix(cols):
+        sbag = bag
+        cached = sbag.props.seg_cache.get(cols)
+        if cached is not None:
+            _count("seg_reuse")
+            return sbag, cached
+        _count("sort_skipped")
+    else:
+        sbag = _lexsort(bag, cols)
+    seg_id = _presorted_seg_ids(sbag, cols)
+    if ORDER_AWARE and _cache_ok(sbag, seg_id):
+        sbag.props.seg_cache[cols] = seg_id
+    return sbag, seg_id
+
+
+def _segment_firsts(sbag: FlatBag, seg_id: jnp.ndarray, gather_cols,
+                    use_kernel: bool, val_cols: Sequence[str] = ()
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray],
+                               Dict[str, jnp.ndarray]]:
+    """Shared Gamma tail: per segment, (exists, first-row validity,
+    first-row values of ``gather_cols``, summed ``val_cols``).
+
+    With ``use_kernel`` this is ONE fused Pallas pass (segment-sum +
+    first-row gather) instead of segment_min + separate gathers +
+    per-column segment_sum. The kernel accumulates in f32 (the MXU
+    discipline, DESIGN.md), which would silently truncate integer
+    sums past 2^24 — so integer value columns keep the exact jnp
+    segment_sum path."""
+    cap = sbag.capacity
+    if use_kernel:
+        from repro.kernels import ops as kops
+        fval_cols = [v for v in val_cols
+                     if not jnp.issubdtype(sbag.col(v).dtype, jnp.integer)]
+        vals = [jnp.where(sbag.valid, sbag.col(v), 0).astype(jnp.float32)
+                for v in fval_cols]
+        packed = [_to_i64_bits(sbag.col(c)) for c in gather_cols]
+        packed.append(sbag.valid.astype(jnp.int64))
+        sums, fidx, fvals = kops.segment_sum_first(
+            jnp.stack(vals, 1) if vals else
+            jnp.zeros((cap, 1), jnp.float32),
+            jnp.stack(packed, 1), seg_id, cap)
+        exists = fidx < cap
+        first_valid = exists & (fvals[:, -1] != 0)
+        firsts = {c: _from_i64_bits(fvals[:, i], sbag.col(c).dtype)
+                  for i, c in enumerate(gather_cols)}
+        summed = {v: sums[:, i].astype(sbag.col(v).dtype)
+                  for i, v in enumerate(fval_cols)}
+        for v in val_cols:
+            if v not in summed:
+                summed[v] = jax.ops.segment_sum(
+                    jnp.where(sbag.valid, sbag.col(v), 0), seg_id,
+                    num_segments=cap)
+        return exists, first_valid, firsts, summed
+    idx = jnp.arange(cap)
+    first = jax.ops.segment_min(idx, seg_id, num_segments=cap)
+    first_c = jnp.clip(first, 0, cap - 1)
+    exists = first < cap
+    first_valid = exists & sbag.valid[first_c]
+    firsts = {c: sbag.col(c)[first_c] for c in gather_cols}
+    summed = {v: jax.ops.segment_sum(
+        jnp.where(sbag.valid, sbag.col(v), 0), seg_id, num_segments=cap)
+        for v in val_cols}
+    return exists, first_valid, firsts, summed
 
 
 # ---------------------------------------------------------------------------
@@ -86,102 +243,167 @@ def project(bag: FlatBag, cols: Dict[str, jnp.ndarray]) -> FlatBag:
 # aggregation: Gamma+ (sum_by) and dedup
 # ---------------------------------------------------------------------------
 
-def _segments(bag: FlatBag, key_cols: Sequence[str]):
-    key = pack_keys(bag, key_cols)
-    sbag, skey, order = _sorted_by(bag, key)
-    sval = sbag.valid
-    prev_key = jnp.concatenate([skey[:1] - 1, skey[:-1]])
-    prev_val = jnp.concatenate([~sval[:1], sval[:-1]])
-    seg_start = (skey != prev_key) | (sval != prev_val)
-    seg_start = seg_start.at[0].set(True)
-    seg_id = jnp.cumsum(seg_start.astype(jnp.int32)) - 1
-    return sbag, skey, seg_id
-
-
 def sum_by(bag: FlatBag, key_cols: Sequence[str], val_cols: Sequence[str],
            use_kernel: bool = False) -> FlatBag:
     """Gamma+: group by key_cols, sum val_cols. NULL-semantics: invalid
     rows contribute nothing; groups of only-invalid rows are invalid.
-    Output capacity == input capacity."""
-    cap = bag.capacity
-    sbag, skey, seg_id = _segments(bag, key_cols)
-    idx = jnp.arange(cap)
-    first = jax.ops.segment_min(idx, seg_id, num_segments=cap)
-    first_c = jnp.clip(first, 0, cap - 1)
-    exists = first < cap
-    out_valid = exists & sbag.valid[first_c]
-
-    data = {}
-    for kc in key_cols:
-        data[kc] = sbag.col(kc)[first_c]
-    for vc in val_cols:
-        vals = jnp.where(sbag.valid, sbag.col(vc), 0)
-        if use_kernel:
-            from repro.kernels import ops as kops
-            summed = kops.segment_reduce(vals, seg_id, num_segments=cap)
-        else:
-            summed = jax.ops.segment_sum(vals, seg_id, num_segments=cap)
-        data[vc] = summed
-    return FlatBag(data, out_valid)
+    Output capacity == input capacity. Output delivers
+    ``sorted_by = key_cols`` (lexicographic), so downstream grouping on
+    any prefix of the keys reuses this sort."""
+    key_cols, val_cols = tuple(key_cols), tuple(val_cols)
+    sbag, seg_id = _segments(bag, key_cols)
+    exists, out_valid, firsts, summed = _segment_firsts(
+        sbag, seg_id, key_cols, use_kernel, val_cols)
+    data = dict(firsts)
+    data.update(summed)
+    props = None
+    if ORDER_AWARE:
+        props = PhysicalProps(sorted_by=key_cols,
+                              invalid_last=sbag.props.invalid_last)
+    return FlatBag(data, out_valid, props)
 
 
 def dedup(bag: FlatBag, cols: Optional[Sequence[str]] = None) -> FlatBag:
     """Keep one representative row per distinct value of ``cols``."""
-    cols = cols or bag.columns
-    sbag, skey, seg_id = _segments(bag, cols)
+    cols = tuple(cols or bag.columns)
+    sbag, seg_id = _segments(bag, cols)
     prev = jnp.concatenate([jnp.full((1,), -1, seg_id.dtype), seg_id[:-1]])
     keep = (seg_id != prev) & sbag.valid
-    return FlatBag(sbag.data, keep)
+    props = None
+    if ORDER_AWARE:
+        props = PhysicalProps(key_cache=dict(sbag.props.key_cache),
+                              sorted_by=sbag.props.sorted_by,
+                              invalid_last=False)
+    return FlatBag(sbag.data, keep, props)
 
 
 # ---------------------------------------------------------------------------
 # joins
 # ---------------------------------------------------------------------------
 
+def _build_side(right: FlatBag, right_on: Tuple[str, ...]
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(order, sorted_key) for a join build side, cached on the build
+    bag's props so repeated joins against one dictionary argsort once.
+    A single-column build side already sorted on its key (e.g. a
+    sum_by / dedup output) skips the argsort entirely."""
+    if ORDER_AWARE:
+        hit = right.props.build_cache.get(right_on)
+        if hit is not None:
+            _count("build_reuse")
+            return hit
+    rkey = pack_keys(right, right_on)
+    rkey = jnp.where(right.valid, rkey, I64_MAX)
+    # sorted_by order == packed-key order only for a single *integer*
+    # key column (floats sort by bit pattern, hashes not at all)
+    key_is_int = len(right_on) == 1 and jnp.issubdtype(
+        right.col(right_on[0]).dtype, jnp.integer)
+    if ORDER_AWARE and key_is_int and right.props.invalid_last \
+            and right.props.sorted_prefix(right_on):
+        _count("build_sort_skipped")
+        order_r = jnp.arange(right.capacity)
+        srk = rkey
+    else:
+        _count("build_argsort")
+        order_r = jnp.argsort(rkey)
+        srk = rkey[order_r]
+    if ORDER_AWARE and _cache_ok(right, srk):
+        right.props.build_cache[right_on] = (order_r, srk)
+    return order_r, srk
+
+
+def _to_i64_bits(a: jnp.ndarray) -> jnp.ndarray:
+    """Lossless int64 view of a column (for kernel gathers)."""
+    if a.dtype == jnp.int64:
+        return a
+    if a.dtype == jnp.float64:
+        return jax.lax.bitcast_convert_type(a, jnp.int64)
+    if a.dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(a, jnp.int32).astype(jnp.int64)
+    return a.astype(jnp.int64)
+
+
+def _from_i64_bits(a: jnp.ndarray, dtype) -> jnp.ndarray:
+    if dtype == jnp.int64:
+        return a
+    if dtype == jnp.float64:
+        return jax.lax.bitcast_convert_type(a, jnp.float64)
+    if dtype == jnp.float32:
+        return jax.lax.bitcast_convert_type(a.astype(jnp.int32), jnp.float32)
+    return a.astype(dtype)
+
+
+def _gather_columns(arrs: List[jnp.ndarray], idx: jnp.ndarray,
+                    use_kernel: bool) -> List[jnp.ndarray]:
+    """Gather rows of several columns at ``idx``. Kernel path: one
+    blocked one-hot Pallas gather over the int64 bit-views (MXU-shaped
+    instead of scalar-unit random access)."""
+    if not arrs:
+        return []
+    if not use_kernel:
+        return [a[idx] for a in arrs]
+    from repro.kernels import ops as kops
+    packed = jnp.stack([_to_i64_bits(a) for a in arrs], axis=1)
+    out = kops.gather_rows(packed, idx)
+    return [_from_i64_bits(out[:, i], a.dtype) for i, a in enumerate(arrs)]
+
+
 def fk_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
             right_on: Sequence[str], how: str = "inner",
-            right_prefix: str = "") -> FlatBag:
+            right_prefix: str = "", use_kernel: bool = False) -> FlatBag:
     """Equi-join where the right (build) side is unique on its key — the
     shape of every join in the paper's benchmarks (pk/fk). Output rows
-    align with the left side (capacity preserved).
+    align with the left side (capacity preserved), so the probe side's
+    delivered ordering and key caches carry through.
 
     how = "inner" | "left_outer". For left_outer, unmatched rows keep
     left validity and get zero-defaults + a ``__matched`` bool column.
     """
+    left_on, right_on = tuple(left_on), tuple(right_on)
     cap_r = right.capacity
-    rkey = pack_keys(right, right_on)
-    rkey = jnp.where(right.valid, rkey, I64_MAX)
-    order_r = jnp.argsort(rkey)
-    srk = rkey[order_r]
-
+    order_r, srk = _build_side(right, right_on)
     lkey = pack_keys(left, left_on)
-    pos = jnp.searchsorted(srk, lkey)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        pos, _ = kops.merge_positions(srk, lkey)
+    else:
+        pos = jnp.searchsorted(srk, lkey)
     pos_c = jnp.clip(pos, 0, cap_r - 1)
-    ridx = order_r[pos_c]
-    matched = (srk[pos_c] == lkey) & right.valid[ridx] & left.valid
+    ordg, srkg = _gather_columns([order_r, srk], pos_c, use_kernel)
+    ridx = ordg
+    rnames = [n for n in right.data
+              if not (right_prefix + n in left.data and n in right_on)]
+    gathered = _gather_columns(
+        [right.data[n] for n in rnames] + [right.valid], ridx, use_kernel)
+    rvalid = gathered[-1]
+    matched = (srkg == lkey) & rvalid & left.valid
 
     data = dict(left.data)
-    for n, a in right.data.items():
+    for n, g in zip(rnames, gathered[:-1]):
         out_name = right_prefix + n
         if out_name in data:
-            if n in right_on:
-                continue  # equal by join predicate; keep left copy
             raise ValueError(f"join column collision: {out_name}")
-        gathered = a[ridx]
-        data[out_name] = jnp.where(matched, gathered,
-                                   jnp.zeros_like(gathered))
+        data[out_name] = jnp.where(matched, g, jnp.zeros_like(g))
+    props = None
+    if ORDER_AWARE:
+        lp = left.props
+        props = PhysicalProps(
+            key_cache=dict(lp.key_cache), sorted_by=lp.sorted_by,
+            invalid_last=lp.invalid_last if how == "left_outer" else False)
     if how == "inner":
-        return FlatBag(data, matched)
+        return FlatBag(data, matched, props)
     assert how == "left_outer", how
     data["__matched"] = matched
-    return FlatBag(data, left.valid)
+    return FlatBag(data, left.valid, props)
 
 
 def general_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
                  right_on: Sequence[str], out_capacity: int,
                  how: str = "inner", right_prefix: str = "",
                  matched_col: str = "__matched",
-                 rowid_col: Optional[str] = None
+                 rowid_col: Optional[str] = None,
+                 use_kernel: bool = False
                  ) -> Tuple[FlatBag, jnp.ndarray]:
     """M:N equi-join with a static output capacity (the TPU analogue of
     the paper's per-partition memory ceiling). Returns (bag, overflow):
@@ -190,16 +412,19 @@ def general_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
 
     how = "left_outer" keeps unmatched left rows (one output row with
     ``__matched`` False), which is the outer-unnest building block.
+    Output rows are left-major, so the probe side's delivered ordering
+    carries through (values repeat in place).
     """
+    left_on, right_on = tuple(left_on), tuple(right_on)
     cap_r = right.capacity
-    rkey = pack_keys(right, right_on)
-    rkey = jnp.where(right.valid, rkey, I64_MAX)
-    order_r = jnp.argsort(rkey)
-    srk = rkey[order_r]
-
+    order_r, srk = _build_side(right, right_on)
     lkey = pack_keys(left, left_on)
-    lo = jnp.searchsorted(srk, lkey, side="left")
-    hi = jnp.searchsorted(srk, lkey, side="right")
+    if use_kernel:
+        from repro.kernels import ops as kops
+        lo, hi = kops.merge_positions(srk, lkey)
+    else:
+        lo = jnp.searchsorted(srk, lkey, side="left")
+        hi = jnp.searchsorted(srk, lkey, side="right")
     cnt = jnp.where(left.valid, hi - lo, 0)
     if how == "left_outer":
         cnt = jnp.where(left.valid & (cnt == 0), 1, cnt)
@@ -208,30 +433,44 @@ def general_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
     total = offs[-1]
 
     j = jnp.arange(out_capacity)
-    li = jnp.searchsorted(offs, j, side="right")
+    if use_kernel:
+        from repro.kernels import ops as kops
+        _, li = kops.merge_positions(offs, j)
+    else:
+        li = jnp.searchsorted(offs, j, side="right")
     li_c = jnp.clip(li, 0, left.capacity - 1)
-    within = j - start[li_c]
-    has_match = (hi[li_c] - lo[li_c]) > 0
-    ridx = order_r[jnp.clip(lo[li_c] + within, 0, cap_r - 1)]
+    lgather = _gather_columns(
+        [left.data[n] for n in left.data] + [start, lo, hi], li_c,
+        use_kernel)
+    startg, log, hig = lgather[-3:]
+    within = j - startg
+    has_match = (hig - log) > 0
+    ridx_pos = jnp.clip(log + within, 0, cap_r - 1)
+    (ridx,) = _gather_columns([order_r], ridx_pos, use_kernel)
     out_valid = j < total
 
-    data = {n: a[li_c] for n, a in left.data.items()}
-    for n, a in right.data.items():
+    data = {n: g for n, g in zip(left.data, lgather)}
+    rnames = [n for n in right.data
+              if not (right_prefix + n in data and n in right_on)]
+    rgather = _gather_columns([right.data[n] for n in rnames], ridx,
+                              use_kernel)
+    for n, g in zip(rnames, rgather):
         out_name = right_prefix + n
         if out_name in data:
-            if n in right_on:
-                continue
             raise ValueError(f"join column collision: {out_name}")
-        gathered = a[ridx]
-        data[out_name] = jnp.where(out_valid & has_match, gathered,
-                                   jnp.zeros_like(gathered))
+        data[out_name] = jnp.where(out_valid & has_match, g,
+                                   jnp.zeros_like(g))
     if how == "left_outer":
         data[matched_col] = has_match & out_valid
     if rowid_col is not None:
         # the paper's outer-unnest unique ID: one per output tuple
         data[rowid_col] = j.astype(jnp.int64)
     overflow = jnp.maximum(total - out_capacity, 0)
-    return FlatBag(data, out_valid), overflow
+    props = None
+    if ORDER_AWARE:
+        props = PhysicalProps(sorted_by=left.props.sorted_by,
+                              invalid_last=True)
+    return FlatBag(data, out_valid, props), overflow
 
 
 # ---------------------------------------------------------------------------
@@ -241,7 +480,8 @@ def general_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
 def flatten_child(parent: FlatBag, child: FlatBag, parent_label: str,
                   child_label: str, out_capacity: int,
                   outer: bool = True, matched_col: str = "__matched",
-                  rowid_col: Optional[str] = None
+                  rowid_col: Optional[str] = None,
+                  use_kernel: bool = False
                   ) -> Tuple[FlatBag, jnp.ndarray]:
     """mu / outer-unnest: pair each parent row with its child rows (child
     rows carry ``child_label`` pointing at ``parent_label``), gathering
@@ -250,13 +490,13 @@ def flatten_child(parent: FlatBag, child: FlatBag, parent_label: str,
     how = "left_outer" if outer else "inner"
     return general_join(parent, child, [parent_label], [child_label],
                         out_capacity, how=how, matched_col=matched_col,
-                        rowid_col=rowid_col)
+                        rowid_col=rowid_col, use_kernel=use_kernel)
 
 
 def nest_level(bag: FlatBag, group_cols: Sequence[str],
                child_cols: Sequence[str], label_col: str,
-               child_valid_col: Optional[str] = None
-               ) -> Tuple[FlatBag, FlatBag]:
+               child_valid_col: Optional[str] = None,
+               use_kernel: bool = False) -> Tuple[FlatBag, FlatBag]:
     """Gamma_u: regroup a wide bag into (parents, children):
 
       parents  — one row per distinct group_cols, plus ``label_col`` with
@@ -265,25 +505,37 @@ def nest_level(bag: FlatBag, group_cols: Sequence[str],
 
     ``child_valid_col`` (from outer joins) marks rows that represent an
     empty bag: the parent row is kept, the child row is dropped — the
-    paper's NULL -> empty-bag cast in Gamma."""
+    paper's NULL -> empty-bag cast in Gamma.
+
+    When the input already delivers an ordering with ``group_cols`` as a
+    prefix (a sum_by on group_cols + agg keys, say), no sort happens —
+    the fused group/nest pipeline of the shredded plans."""
     cap = bag.capacity
-    sbag, skey, seg_id = _segments(bag, group_cols)
-    idx = jnp.arange(cap)
-    first = jax.ops.segment_min(idx, seg_id, num_segments=cap)
-    first_c = jnp.clip(first, 0, cap - 1)
-    exists = first < cap
-    parent_valid = exists & sbag.valid[first_c]
+    group_cols = tuple(group_cols)
+    sbag, seg_id = _segments(bag, group_cols)
+    exists, parent_valid, firsts, _ = _segment_firsts(
+        sbag, seg_id, group_cols, use_kernel)
 
-    pdata = {c: sbag.col(c)[first_c] for c in group_cols}
+    pdata = dict(firsts)
     pdata[label_col] = jnp.arange(cap, dtype=jnp.int64)
-    parents = FlatBag(pdata, parent_valid)
+    pprops = None
+    if ORDER_AWARE:
+        pprops = PhysicalProps(sorted_by=group_cols,
+                               invalid_last=sbag.props.invalid_last)
+    parents = FlatBag(pdata, parent_valid, pprops)
 
+    label = seg_id.astype(jnp.int64)
     cdata = {c: sbag.col(c) for c in child_cols}
-    cdata[label_col] = seg_id.astype(jnp.int64)
+    cdata[label_col] = label
     child_valid = sbag.valid
     if child_valid_col is not None:
         child_valid = child_valid & sbag.col(child_valid_col)
-    children = FlatBag(cdata, child_valid)
+    cprops = None
+    if ORDER_AWARE:
+        cprops = PhysicalProps(key_cache={(label_col,): label},
+                               sorted_by=(label_col,),
+                               invalid_last=False)
+    children = FlatBag(cdata, child_valid, cprops)
     return parents, children
 
 

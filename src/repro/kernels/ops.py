@@ -15,7 +15,9 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_pallas
+from .gather_join import gather_rows_pallas, merge_positions_pallas
 from .rwkv6_scan import rwkv6_pallas
+from .segment_fused import segment_sum_first_pallas
 from .segment_reduce import segment_reduce_pallas
 
 INTERPRET = True    # CPU container: interpret mode; launcher flips on TPU
@@ -43,6 +45,35 @@ def segment_reduce(values: jnp.ndarray, seg_ids: jnp.ndarray,
                                     interpret=INTERPRET)
     out = out.astype(dtype)
     return out[:, 0] if squeeze else out
+
+
+def segment_sum_first(values: jnp.ndarray, keys: jnp.ndarray,
+                      seg_ids: jnp.ndarray, num_segments: int) -> tuple:
+    """Fused Gamma tail: (segment sums f32, first-row index i32,
+    first-row key values i64) in one pass. values (n, d); keys (n, k)
+    int64 bit-views."""
+    if USE_REF:
+        return ref.segment_sum_first_ref(values, keys, seg_ids,
+                                         num_segments)
+    return segment_sum_first_pallas(values, keys, seg_ids, num_segments,
+                                    interpret=INTERPRET)
+
+
+def merge_positions(sorted_keys: jnp.ndarray, queries: jnp.ndarray) -> tuple:
+    """(lo, hi) = searchsorted(sorted_keys, queries, left/right) — the
+    blocked sorted-merge position kernel of the join inner loop."""
+    if USE_REF:
+        return ref.merge_positions_ref(sorted_keys, queries)
+    return merge_positions_pallas(sorted_keys, queries,
+                                  interpret=INTERPRET)
+
+
+def gather_rows(values: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Blocked one-hot row gather (int64 bit-views); out-of-range
+    indices gather 0."""
+    if USE_REF:
+        return ref.gather_rows_ref(values, idx)
+    return gather_rows_pallas(values, idx, interpret=INTERPRET)
 
 
 def flash_attention(q, k, v, causal: bool = True,

@@ -18,6 +18,41 @@ def segment_reduce_ref(values: jnp.ndarray, seg_ids: jnp.ndarray,
     return jax.ops.segment_sum(vals, ids, num_segments=num_segments)
 
 
+def segment_sum_first_ref(values: jnp.ndarray, keys: jnp.ndarray,
+                          seg_ids: jnp.ndarray, num_segments: int) -> tuple:
+    """Oracle for kernels.segment_fused: (segment sums, first-row index
+    per segment, first-row key values). Empty segments: firstidx ==
+    INT32_MAX, firstvals == 0. Out-of-range seg_ids are dropped."""
+    n = seg_ids.shape[0]
+    sums = segment_reduce_ref(values, seg_ids, num_segments)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    fidx = jax.ops.segment_min(idx, seg_ids, num_segments=num_segments)
+    exists = fidx < n
+    gathered = keys[jnp.clip(fidx, 0, n - 1)]
+    fvals = jnp.where(exists[:, None], gathered, 0)
+    return sums, fidx, fvals
+
+
+def merge_positions_ref(sorted_keys: jnp.ndarray, queries: jnp.ndarray
+                        ) -> tuple:
+    """Oracle for kernels.gather_join.merge_positions: left/right
+    insertion points (the double searchsorted of the join inner loop)."""
+    sorted_keys = sorted_keys.astype(jnp.int64)
+    queries = queries.astype(jnp.int64)
+    lo = jnp.searchsorted(sorted_keys, queries, side="left")
+    hi = jnp.searchsorted(sorted_keys, queries, side="right")
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+def gather_rows_ref(values: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.gather_join.gather_rows: row gather with
+    out-of-range indices mapped to 0."""
+    r = values.shape[0]
+    ok = (idx >= 0) & (idx < r)
+    g = values[jnp.clip(idx, 0, r - 1)]
+    return jnp.where(ok[:, None], g, 0)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, window: Optional[int] = None,
                   softcap: Optional[float] = None,

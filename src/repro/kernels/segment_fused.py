@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused sorted-segment sum + first-row gather.
+
+``sum_by`` and ``nest_level`` share a tail: per segment they need (a)
+the sum of the value columns, (b) the index of the segment's first row
+and (c) that row's key-column values. The jnp path issues a
+``segment_min`` plus one random gather per key column on top of the
+segment sums; this kernel produces all three in ONE pass over the rows:
+
+  grid (segment-block, row-block), row axis fastest/accumulating:
+    sums     += one_hot(seg)^T @ values          (MXU, f32)
+    firstidx  = min(firstidx, first row index of seg in this block)
+    firstvals = key rows where a new minimum was found (masked integer
+                sum — key columns are int64 bit-views, so no f32 pass
+                may touch them)
+
+Empty segments report firstidx == INT32_MAX and zero firstvals, exactly
+like ``ref.segment_sum_first_ref``. Sums accumulate in f32 block order;
+the property tests use integer-valued floats so the bit-for-bit check
+against the ref holds (DESIGN.md records the trade-off).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_BLOCK_ROWS = 256      # rows per grid step
+DEF_BLOCK_SEGS = 128      # segments per grid step (one MXU tile side)
+
+I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _kernel(seg_ref, val_ref, key_ref, sum_ref, fidx_ref, fval_ref, *,
+            block_rows, block_segs):
+    sb = pl.program_id(0)           # segment-block index
+    rb = pl.program_id(1)           # row-block index (fastest; accumulates)
+
+    @pl.when(rb == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        fidx_ref[...] = jnp.full_like(fidx_ref, I32_MAX)
+        fval_ref[...] = jnp.zeros_like(fval_ref)
+
+    segs = seg_ref[...]             # (block_rows,)
+    vals = val_ref[...]             # (block_rows, d) f32
+    keys = key_ref[...]             # (block_rows, k) int64 bit-views
+    local = segs - sb * block_segs
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_rows, block_segs), 1))
+
+    # (block_segs, block_rows) @ (block_rows, d) on the MXU
+    sum_ref[...] += jax.lax.dot_general(
+        onehot.astype(vals.dtype), vals, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(sum_ref.dtype)
+
+    rows = rb * block_rows + jax.lax.broadcasted_iota(
+        jnp.int32, (block_rows, block_segs), 0)
+    cand = jnp.min(jnp.where(onehot, rows, I32_MAX), axis=0)  # (block_segs,)
+    cur = fidx_ref[...][:, 0]
+    upd = cand < cur
+    hit = onehot & (rows == cand[None, :])    # the first row of each seg
+    fv = jnp.sum(jnp.where(hit[:, :, None], keys[:, None, :], 0), axis=0)
+    fidx_ref[...] = jnp.where(upd, cand, cur)[:, None]
+    fval_ref[...] = jnp.where(upd[:, None], fv, fval_ref[...])
+
+
+def segment_sum_first_pallas(values: jnp.ndarray, keys: jnp.ndarray,
+                             seg_ids: jnp.ndarray, num_segments: int,
+                             block_rows: int = DEF_BLOCK_ROWS,
+                             block_segs: int = DEF_BLOCK_SEGS,
+                             interpret: bool = True) -> tuple:
+    """(sums (S, d) f32, firstidx (S,) i32, firstvals (S, k) i64) over
+    sorted ``seg_ids``. Rows with seg_id outside [0, num_segments) are
+    dropped (the invalid-row sentinel convention)."""
+    n, d = values.shape
+    k = keys.shape[1]
+    block_rows = min(block_rows, n)
+    block_segs = min(block_segs, num_segments)
+    n_pad = (-n) % block_rows
+    s_pad = (-num_segments) % block_segs
+    if n_pad:
+        values = jnp.pad(values, ((0, n_pad), (0, 0)))
+        keys = jnp.pad(keys, ((0, n_pad), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, n_pad), constant_values=-1)
+    S = num_segments + s_pad
+    n_tot = n + n_pad
+
+    grid = (S // block_segs, n_tot // block_rows)
+    sums, fidx, fvals = pl.pallas_call(
+        functools.partial(_kernel, block_rows=block_rows,
+                          block_segs=block_segs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda sb, rb: (rb,)),
+            pl.BlockSpec((block_rows, d), lambda sb, rb: (rb, 0)),
+            pl.BlockSpec((block_rows, k), lambda sb, rb: (rb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_segs, d), lambda sb, rb: (sb, 0)),
+            pl.BlockSpec((block_segs, 1), lambda sb, rb: (sb, 0)),
+            pl.BlockSpec((block_segs, k), lambda sb, rb: (sb, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, d), values.dtype),
+            jax.ShapeDtypeStruct((S, 1), jnp.int32),
+            jax.ShapeDtypeStruct((S, k), keys.dtype),
+        ],
+        interpret=interpret,
+    )(seg_ids.astype(jnp.int32), values, keys)
+    return sums[:num_segments], fidx[:num_segments, 0], fvals[:num_segments]

@@ -1,0 +1,151 @@
+"""Minimal stand-in for the ``hypothesis`` API surface this test suite
+uses, for environments where the real package is not installed (the
+TPU container bakes only the jax toolchain; tier-1 must not depend on
+pip). conftest.py registers this module as ``hypothesis`` ONLY when the
+real library is missing — install hypothesis and it wins.
+
+Semantics: deterministic pseudo-random example generation. ``@given``
+draws ``max_examples`` examples from a seeded numpy RandomState (seed
+derived from the test name, stable across runs) and calls the test once
+per example. No shrinking, no database — a failing example prints its
+drawn arguments instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+
+import numpy as np
+
+
+class SearchStrategy:
+    def example_from(self, rng: np.random.RandomState):
+        raise NotImplementedError
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, inner, fn):
+        self.inner, self.fn = inner, fn
+
+    def example_from(self, rng):
+        return self.fn(self.inner.example_from(rng))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def example_from(self, rng):
+        return int(rng.randint(self.lo, self.hi + 1))
+
+
+class _Booleans(SearchStrategy):
+    def example_from(self, rng):
+        return bool(rng.randint(0, 2))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def example_from(self, rng):
+        return float(self.lo + (self.hi - self.lo) * rng.rand())
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, seq):
+        self.seq = list(seq)
+
+    def example_from(self, rng):
+        return self.seq[int(rng.randint(0, len(self.seq)))]
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem, min_size=0, max_size=10):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example_from(self, rng):
+        n = int(rng.randint(self.min_size, self.max_size + 1))
+        return [self.elem.example_from(rng) for _ in range(n)]
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example_from(self, rng):
+        def draw(strategy):
+            return strategy.example_from(rng)
+
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn):
+    @functools.wraps(fn)
+    def make(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+
+    return make
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = lambda min_value, max_value: _Integers(min_value,
+                                                             max_value)
+strategies.booleans = _Booleans
+strategies.floats = lambda min_value, max_value: _Floats(min_value, max_value)
+strategies.sampled_from = _SampledFrom
+strategies.lists = lambda elem, min_size=0, max_size=10: _Lists(
+    elem, min_size, max_size)
+strategies.composite = composite
+strategies.SearchStrategy = SearchStrategy
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        # NOTE: the wrapper must present a ZERO-argument signature —
+        # pytest would otherwise read the wrapped test's parameters as
+        # fixture requests (real hypothesis does the same erasure).
+        def run():
+            n = getattr(run, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            base_seed = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.RandomState((base_seed + i) % (2 ** 31))
+                drawn = [s.example_from(rng) for s in strats]
+                kdrawn = {k: s.example_from(rng)
+                          for k, s in kw_strats.items()}
+                try:
+                    fn(*drawn, **kdrawn)
+                except Exception:
+                    print(f"[hypothesis-shim] falsifying example "
+                          f"#{i}: args={drawn} kwargs={kdrawn}")
+                    raise
+
+        run.__name__ = fn.__name__
+        run.__qualname__ = fn.__qualname__
+        run.__module__ = fn.__module__
+        run.__doc__ = fn.__doc__
+        return run
+
+    return deco
+
+
+HealthCheck = types.SimpleNamespace(all=lambda: [])

@@ -4,3 +4,15 @@ import sys
 # tests see the default single CPU device; multi-device tests spawn
 # subprocesses with their own XLA_FLAGS (per the dry-run isolation rule)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# hypothesis is not baked into the TPU container image; fall back to the
+# deterministic shim so the property tests still run (real lib wins when
+# installed)
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+
+    sys.modules["hypothesis"] = _hypothesis_shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies

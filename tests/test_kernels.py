@@ -37,6 +37,97 @@ def test_segment_reduce_out_of_range_dropped():
     np.testing.assert_allclose(np.asarray(got[:, 0]), [2.0, 1.0])
 
 
+@pytest.mark.parametrize("n,num_segments", [
+    (33, 7),    # n % block_rows != 0, segments % block_segs != 0
+    (32, 7),    # rows aligned, segments ragged
+    (33, 8),    # rows ragged, segments aligned
+    (5, 50),    # more segments than rows (mostly empty)
+])
+def test_segment_reduce_padding_edges(n, num_segments):
+    rng = np.random.RandomState(7)
+    seg = np.sort(rng.randint(0, num_segments, n)).astype(np.int32)
+    vals = rng.randint(0, 50, size=(n, 3)).astype(np.float32)
+    got = segment_reduce_pallas(jnp.asarray(vals), jnp.asarray(seg),
+                                num_segments, block_rows=16, block_segs=8)
+    want = R.segment_reduce_ref(jnp.asarray(vals), jnp.asarray(seg),
+                                num_segments)
+    # integer-valued floats: block accumulation is exact -> bitwise
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_segment_reduce_all_invalid():
+    n, num_segments = 19, 6
+    seg = jnp.full((n,), -1, jnp.int32)   # the invalid-row sentinel
+    vals = jnp.ones((n, 2), jnp.float32)
+    got = segment_reduce_pallas(vals, seg, num_segments, block_rows=8,
+                                block_segs=4)
+    assert (np.asarray(got) == 0).all()
+
+
+# -- fused segment-sum + first-row gather -------------------------------------
+
+from repro.kernels.segment_fused import segment_sum_first_pallas  # noqa: E402
+from repro.kernels.gather_join import (  # noqa: E402
+    gather_rows_pallas, merge_positions_pallas)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 3), st.integers(1, 40),
+       st.integers(1, 3), st.integers(0, 3))
+def test_segment_sum_first_hypothesis(n, d, num_segments, k, seed):
+    rng = np.random.RandomState(seed)
+    seg = np.sort(rng.randint(0, num_segments, n)).astype(np.int32)
+    vals = rng.randint(0, 100, size=(n, d)).astype(np.float32)
+    keys = rng.randint(-2 ** 62, 2 ** 62, size=(n, k)).astype(np.int64)
+    got = segment_sum_first_pallas(jnp.asarray(vals), jnp.asarray(keys),
+                                   jnp.asarray(seg), num_segments,
+                                   block_rows=16, block_segs=8)
+    want = R.segment_sum_first_ref(jnp.asarray(vals), jnp.asarray(keys),
+                                   jnp.asarray(seg), num_segments)
+    for g, w in zip(got, want):
+        assert (np.asarray(g) == np.asarray(w)).all()
+
+
+def test_segment_sum_first_all_invalid():
+    n, S = 13, 5
+    seg = jnp.full((n,), -1, jnp.int32)
+    vals = jnp.ones((n, 2), jnp.float32)
+    keys = jnp.ones((n, 1), jnp.int64)
+    sums, fidx, fvals = segment_sum_first_pallas(vals, keys, seg, S,
+                                                 block_rows=4, block_segs=4)
+    assert (np.asarray(sums) == 0).all()
+    assert (np.asarray(fidx) == np.iinfo(np.int32).max).all()
+    assert (np.asarray(fvals) == 0).all()
+
+
+# -- blocked merge-join positions + one-hot gather ----------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 80), st.integers(0, 3))
+def test_merge_positions_hypothesis(r, n, seed):
+    rng = np.random.RandomState(seed)
+    srk = np.sort(rng.randint(-20, 20, r)).astype(np.int64)
+    q = rng.randint(-25, 25, n).astype(np.int64)
+    lo, hi = merge_positions_pallas(jnp.asarray(srk), jnp.asarray(q),
+                                    block_q=16, block_r=16)
+    rlo, rhi = R.merge_positions_ref(jnp.asarray(srk), jnp.asarray(q))
+    assert (np.asarray(lo) == np.asarray(rlo)).all()
+    assert (np.asarray(hi) == np.asarray(rhi)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 60), st.integers(1, 4),
+       st.integers(0, 3))
+def test_gather_rows_hypothesis(r, n, d, seed):
+    rng = np.random.RandomState(seed)
+    vals = rng.randint(-2 ** 62, 2 ** 62, size=(r, d)).astype(np.int64)
+    idx = rng.randint(-3, r + 3, n).astype(np.int32)   # includes oob
+    got = gather_rows_pallas(jnp.asarray(vals), jnp.asarray(idx),
+                             block_n=16, block_src=16)
+    want = R.gather_rows_ref(jnp.asarray(vals), jnp.asarray(idx))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
 # -- flash attention -----------------------------------------------------------
 
 ATTN_VARIANTS = [
