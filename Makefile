@@ -3,10 +3,17 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick bench
+.PHONY: test bench-quick bench ci
 
 test:
 	$(PY) -m pytest -x -q
+
+# CI gate: tier-1 tests plus the quick benchmark smoke. bench-quick
+# includes the distributed join->sum_by shuffle benchmark, which runs
+# in its own subprocess under --xla_force_host_platform_device_count=8
+# and asserts the packed exchange's elision + correctness — shuffle
+# regressions fail here, not in production.
+ci: test bench-quick
 
 # CPU-friendly perf smoke: runs every benchmark section except the
 # 8-virtual-device skew subprocess, fails on any Python exception, and

@@ -8,9 +8,21 @@
 
 plus the Pallas kernel path for the fused variant. The on/off pair is
 the before/after number for the sort-order-aware executor; it lands in
-BENCH_<timestamp>.json under section "fused_pipeline"."""
+BENCH_<timestamp>.json under section "fused_pipeline".
+
+The DISTRIBUTED variant (8 virtual devices, subprocess) runs the same
+``join -> sum_by`` chain under shard_map and is the headline number for
+the partitioning-aware shuffle: the packed mode ships each side in one
+collective and elides the aggregation's re-exchange entirely (the probe
+rows cross the wire exactly once — asserted through SHUFFLE_STATS),
+vs the legacy per-column exchange of PR 1."""
 
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -43,7 +55,117 @@ def _pipeline(lineitem: FlatBag, part: FlatBag, use_kernel: bool = False):
                         use_kernel=use_kernel)
 
 
-def run(n: int = 20000, n_parts: int = 512, pallas_n: int = 1000):
+_DIST_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json, time
+sys.path.insert(0, r"%(src)s")
+import numpy as np
+import jax
+import repro
+from repro.columnar.table import FlatBag
+from repro.exec.dist import device_mesh_1d, compile_distributed
+
+n = %(n)d
+n_parts = 512
+rng = np.random.RandomState(0)
+lineitem = FlatBag.from_rows(
+    [{"pid": int(rng.randint(0, n_parts)),
+      "odate": int(rng.randint(0, 365)),
+      "qty": float(rng.randint(1, 50))} for _ in range(n)],
+    {"pid": "int", "odate": "int", "qty": "real"})
+part = FlatBag.from_rows(
+    [{"pid": i, "price": float(rng.randint(1, 100))}
+     for i in range(n_parts)],
+    {"pid": "int", "price": "real"})
+PN = 8
+env = {"L": lineitem.resize(((n + PN - 1)//PN)*PN),
+       "R": part.resize(((n_parts + PN - 1)//PN)*PN)}
+mesh = device_mesh_1d(PN)
+
+def fn(env_local, ctx):
+    j = ctx.join(env_local["L"], env_local["R"], ("pid",), ("pid",))
+    j = j.with_columns(total=j.col("qty") * j.col("price"))
+    # same key as the join: the packed shuffle elides this exchange
+    s = ctx.sum_by(j, ("pid", "odate"), ("total",), local_preagg=True)
+    return {"out": s}
+
+out = []
+results = {}
+for mode, kw in (("legacy", dict(shuffle_mode="legacy", cap_factor=8.0)),
+                 ("packed", dict(shuffle_mode="packed", cap_factor=2.0,
+                                 adaptive=True))):
+    t0 = time.perf_counter()
+    runner, res, metrics = compile_distributed(fn, env, mesh, **kw)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    iters = 5
+    for _ in range(iters):
+        res, _m = runner(env)
+        jax.block_until_ready(res)
+    warm = (time.perf_counter() - t0) / iters
+    ob = res["out"]
+    agg = {}
+    for r in ob.to_rows():
+        agg[(r["pid"], r["odate"])] = agg.get((r["pid"], r["odate"]), 0.0) \
+            + r["total"]
+    results[mode] = agg
+    out.append(dict(mode=mode, seconds=warm, cold_seconds=cold,
+                    exchanges=metrics["exchanges"],
+                    elided=metrics["exchanges_elided"],
+                    collectives=metrics["shuffle_collectives"],
+                    overflow=metrics.get("overflow_rows", 0)))
+# correctness: both modes agree with the single-device oracle
+oracle = {}
+for i in range(n):
+    pid = int(np.asarray(lineitem.col("pid"))[i])
+    od = int(np.asarray(lineitem.col("odate"))[i])
+    qty = float(np.asarray(lineitem.col("qty"))[i])
+    price = float(np.asarray(part.col("price"))[pid])
+    oracle[(pid, od)] = oracle.get((pid, od), 0.0) + qty * price
+for mode, agg in results.items():
+    assert set(agg) == set(oracle), mode
+    for k in oracle:
+        assert abs(agg[k] - oracle[k]) < 1e-6 * max(1.0, abs(oracle[k])), \
+            (mode, k)
+# the packed join->sum_by pipeline exchanges the probe rows exactly once:
+# one exchange per join side, the aggregation's re-shuffle elided
+pk = {r["mode"]: r for r in out}
+assert pk["packed"]["exchanges"] == 2 and pk["packed"]["elided"] == 1, pk
+assert pk["legacy"]["exchanges"] == 3 and pk["legacy"]["elided"] == 0, pk
+print("JSON" + json.dumps(out))
+"""
+
+
+def run_dist(n: int = 4000):
+    """Distributed join->sum_by on the same key: packed vs legacy."""
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    script = _DIST_CHILD % {"src": os.path.abspath(src), "n": n}
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=1800)
+    if res.returncode != 0:
+        print(res.stdout[-2000:])
+        print(res.stderr[-2000:])
+        raise RuntimeError("fused_pipeline dist child failed")
+    payload = [l for l in res.stdout.splitlines() if l.startswith("JSON")][0]
+    rows = json.loads(payload[4:])
+    by_mode = {}
+    for r in rows:
+        by_mode[r["mode"]] = r
+        emit(f"dist_join_sum_by_{r['mode']}", r["seconds"] * 1e6,
+             f"n={n};exchanges={r['exchanges']};elided={r['elided']};"
+             f"collectives={r['collectives']};overflow={r['overflow']};"
+             f"coldS={r['cold_seconds']:.2f}")
+    speed = by_mode["legacy"]["seconds"] / max(by_mode["packed"]["seconds"],
+                                               1e-9)
+    emit("dist_join_sum_by_packed_speedup", 0.0,
+         f"x{speed:.2f};collectives {by_mode['legacy']['collectives']}->"
+         f"{by_mode['packed']['collectives']}")
+
+
+def run(n: int = 20000, n_parts: int = 512, pallas_n: int = 1000,
+        dist_n: int = 4000):
     # pallas variant runs tiny on CPU: interpret mode executes the grid
     # as a Python loop, so it only demonstrates wiring here; the real
     # number needs a TPU (kernels.ops.detect_backend flips INTERPRET)
@@ -77,6 +199,10 @@ def run(n: int = 20000, n_parts: int = 512, pallas_n: int = 1000):
                       for r in children.to_rows())
 
     assert _freeze(fused) == _freeze(unfused), "fused executor mismatch"
+
+    # distributed variant (8 virtual devices, own subprocess)
+    if dist_n:
+        run_dist(n=dist_n)
 
 
 if __name__ == "__main__":

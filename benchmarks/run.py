@@ -35,7 +35,8 @@ def main() -> None:
                      lambda: tpch_nested.run(scale=30 if args.quick else 60)))
     sections.append(("fused_pipeline (order-aware executor)",
                      lambda: fused_pipeline.run(
-                         n=5000 if args.quick else 20000)))
+                         n=5000 if args.quick else 20000,
+                         dist_n=2000 if args.quick else 4000)))
     sections.append(("biomedical E2E (Fig.9)",
                      lambda: biomedical.run(n_samples=6 if args.quick else 10)))
     sections.append(("succinct (App.D)", succinct.run))

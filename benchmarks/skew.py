@@ -1,7 +1,11 @@
 """Skew-handling benchmark (paper Fig. 8 + App. E.5): nested-to-nested
 narrow query at level 2 over increasingly skewed data, SHRED vs
-SHRED_SKEW on 8 virtual devices — reporting runtime, shuffled rows and
-overflow (the TPU analogue of Spark's crashed runs).
+SHRED_SKEW on 8 virtual devices — reporting runtime, shuffled rows,
+overflow (the TPU analogue of Spark's crashed runs), and — since the
+partitioning-aware shuffle — collective counts and exchange elisions
+for the packed single-collective path vs the legacy per-column path
+(the PR 1 baseline: one-hot scatter, one all_to_all per column, static
+16x buckets, no elision).
 
 Runs in a subprocess so the virtual-device XLA flag never leaks into
 the parent (single-device) process.
@@ -31,9 +35,14 @@ from repro.core import materialization as M
 from repro.core import nrc as N
 from repro.core.plans import ExecSettings
 from repro.data.generators import TPCH_TYPES, gen_tpch
-from repro.exec.dist import device_mesh_1d, run_distributed
+from repro.exec.dist import device_mesh_1d, compile_distributed
 from benchmarks.common import CATALOG, materialize_nested_input, \
     nested_to_nested_query
+
+MODES = (("legacy", dict(shuffle_mode="legacy", cap_factor=16.0)),
+         ("packed", dict(shuffle_mode="packed", cap_factor=2.0,
+                         adaptive=True)))
+WARM_ITERS = 5
 
 out = []
 for skew in (0.0, 0.8, 1.2, 2.0):
@@ -56,15 +65,26 @@ for skew in (0.0, 0.8, 1.2, 2.0):
         return {k: o[k] for k in names}
     direct = I.eval_expr(q, inputs)
     for aware in (False, True):
-        t0 = time.perf_counter()
-        res, metrics = run_distributed(fn, env, mesh, skew_default=aware,
-                                       cap_factor=16.0)
-        dt = time.perf_counter() - t0
-        parts = {(): res[man.top],
-                 **{p: res[n] for p, n in man.dicts.items()}}
-        ok = I.bags_equal(direct, CG.parts_to_rows(parts, q.ty))
-        out.append(dict(skew=skew, aware=aware, seconds=dt, ok=ok,
-                        **{k: int(v) for k, v in metrics.items()}))
+        for mode, kw in MODES:
+            t0 = time.perf_counter()
+            runner, res, metrics = compile_distributed(
+                fn, env, mesh, skew_default=aware, **kw)
+            cold = time.perf_counter() - t0
+            # steady state: the compiled program re-run on resident data
+            # (the serving case; compile/adaptive-probe cost amortized)
+            t0 = time.perf_counter()
+            for _ in range(WARM_ITERS):
+                res, _m = runner(env)
+                jax.block_until_ready(res)
+            warm = (time.perf_counter() - t0) / WARM_ITERS
+            parts = {(): res[man.top],
+                     **{p: res[n] for p, n in man.dicts.items()}}
+            ok = I.bags_equal(direct, CG.parts_to_rows(parts, q.ty))
+            keep = {k: int(v) for k, v in metrics.items()
+                    if not k.startswith("size_")}
+            out.append(dict(skew=skew, aware=aware, mode=mode,
+                            seconds=warm, cold_seconds=cold, ok=ok,
+                            **keep))
 print("JSON" + json.dumps(out))
 """
 
@@ -84,16 +104,35 @@ def run():
     payload = [l for l in res.stdout.splitlines() if l.startswith("JSON")][0]
     rows = json.loads(payload[4:])
     for r in rows:
-        name = f"skew{r['skew']}_{'aware' if r['aware'] else 'unaware'}"
+        name = (f"skew{r['skew']}_{'aware' if r['aware'] else 'unaware'}"
+                f"_{r['mode']}")
         assert r["ok"], f"{name} produced wrong results"
         emit(name, r["seconds"] * 1e6,
              f"shuffle_rows={r.get('shuffle_rows', 0)};"
              f"overflow={r.get('overflow_rows', 0)};"
+             f"collectives={r.get('shuffle_collectives', 0)};"
+             f"elided={r.get('exchanges_elided', 0)};"
+             f"coldS={r.get('cold_seconds', 0):.2f};"
              f"broadcastB={r.get('broadcast_bytes', 0)}")
-    # headline: shuffle reduction at the highest skew
-    hi = [r for r in rows if r["skew"] == 2.0]
-    red = hi[0]["shuffle_rows"] / max(hi[1]["shuffle_rows"], 1)
+    # headline 1: skew-aware shuffle reduction at the highest skew
+    hi = {(r["aware"], r["mode"]): r for r in rows if r["skew"] == 2.0}
+    red = hi[(False, "packed")]["shuffle_rows"] \
+        / max(hi[(True, "packed")]["shuffle_rows"], 1)
     emit("skew2.0_shuffle_reduction", 0.0, f"x{red:.2f}")
+    # headline 2: packed single-collective shuffle vs the legacy
+    # (PR 1) exchange at skew >= 1.2 — collectives and end-to-end time
+    for skew in (1.2, 2.0):
+        for aware in (False, True):
+            sel = {r["mode"]: r for r in rows
+                   if r["skew"] == skew and r["aware"] == aware}
+            leg, pk = sel["legacy"], sel["packed"]
+            speed = leg["seconds"] / max(pk["seconds"], 1e-9)
+            emit(f"skew{skew}_{'aware' if aware else 'unaware'}"
+                 f"_packed_speedup", 0.0,
+                 f"x{speed:.2f};collectives "
+                 f"{leg['shuffle_collectives']}->"
+                 f"{pk['shuffle_collectives']};"
+                 f"elided={pk['exchanges_elided']}")
 
 
 if __name__ == "__main__":

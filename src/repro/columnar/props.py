@@ -24,6 +24,20 @@ Contract (full table in DESIGN.md "Physical properties and fusion"):
 * ``build_cache[cols]``— ``(order, sorted_key)`` argsort of this bag as
   a join *build* side on ``cols`` (invalid rows keyed I64_MAX, last).
   Validity-dependent.
+* ``partitioning``     — column tuple C such that every VALID row of
+  this bag lives on the partition ``mix64(pack_keys(C)) % P`` inside
+  the enclosing shard_map region. Only ``dist.DistContext.exchange``
+  establishes it; row-local operators preserve it (rows never move
+  between partitions locally) as long as the columns of C survive with
+  unchanged values. Any exchange whose key columns are a *superset* of
+  C is a no-op and is elided (equal keys => equal C-values => same
+  partition). Meaningless outside shard_map, where it is simply never
+  set.
+* ``route_cache[cols]``— ``(order, counts, offsets)`` destination-sort
+  routing of this bag for a hash exchange on ``cols`` over the current
+  partition count. Validity-dependent (dropped by ``after_mask``); lets
+  a dictionary exchanged by several assignments of one query bundle
+  argsort its destinations once.
 * ``scan_memo``        — per-(alias, with_rowid) memo of ScanP outputs,
   letting repeated scans of one environment bag share a single FlatBag
   instance (and therefore its accumulated caches) across assignments.
@@ -40,19 +54,23 @@ from typing import Dict, Optional, Tuple
 
 class PhysicalProps:
     __slots__ = ("key_cache", "sorted_by", "invalid_last", "seg_cache",
-                 "build_cache", "scan_memo")
+                 "build_cache", "partitioning", "route_cache", "scan_memo")
 
     def __init__(self,
                  key_cache: Optional[Dict[Tuple[str, ...], object]] = None,
                  sorted_by: Optional[Tuple[str, ...]] = None,
                  invalid_last: bool = False,
                  seg_cache: Optional[Dict[Tuple[str, ...], object]] = None,
-                 build_cache: Optional[Dict[Tuple[str, ...], tuple]] = None):
+                 build_cache: Optional[Dict[Tuple[str, ...], tuple]] = None,
+                 partitioning: Optional[Tuple[str, ...]] = None,
+                 route_cache: Optional[Dict[Tuple[str, ...], tuple]] = None):
         self.key_cache = key_cache if key_cache is not None else {}
         self.sorted_by = sorted_by
         self.invalid_last = invalid_last
         self.seg_cache = seg_cache if seg_cache is not None else {}
         self.build_cache = build_cache if build_cache is not None else {}
+        self.partitioning = partitioning
+        self.route_cache = route_cache if route_cache is not None else {}
         self.scan_memo: dict = {}
 
     # -- derived views -----------------------------------------------------
@@ -63,14 +81,24 @@ class PhysicalProps:
         return sb is not None and len(cols) <= len(sb) \
             and sb[:len(cols)] == tuple(cols)
 
+    def partitioned_for(self, cols) -> bool:
+        """Would a hash exchange on ``cols`` be a no-op? True when the
+        bag is hash-partitioned on a subset of ``cols``: equal values of
+        ``cols`` imply equal values of the partitioning columns, hence
+        co-location."""
+        return self.partitioning is not None \
+            and set(self.partitioning) <= set(cols)
+
     # -- propagation helpers ----------------------------------------------
 
     def after_mask(self) -> "PhysicalProps":
-        """Validity shrank, row order unchanged: keys and sort order
-        survive; segment/build caches and invalid-last do not."""
+        """Validity shrank, row order unchanged: keys, sort order and
+        partitioning survive (rows do not move); segment/build/route
+        caches and invalid-last do not (validity-dependent)."""
         return PhysicalProps(key_cache=dict(self.key_cache),
                              sorted_by=self.sorted_by,
-                             invalid_last=False)
+                             invalid_last=False,
+                             partitioning=self.partitioning)
 
     def after_new_columns(self, overwritten) -> "PhysicalProps":
         """Columns in ``overwritten`` were replaced (row alignment and
@@ -82,6 +110,8 @@ class PhysicalProps:
 
         sb = self.sorted_by if (self.sorted_by is not None
                                 and keep(self.sorted_by)) else None
+        part = self.partitioning if (self.partitioning is not None
+                                     and keep(self.partitioning)) else None
         return PhysicalProps(
             key_cache={c: v for c, v in self.key_cache.items() if keep(c)},
             sorted_by=sb,
@@ -89,6 +119,9 @@ class PhysicalProps:
             seg_cache={c: v for c, v in self.seg_cache.items()
                        if keep(c)} if sb is not None else None,
             build_cache={c: v for c, v in self.build_cache.items()
+                         if keep(c)},
+            partitioning=part,
+            route_cache={c: v for c, v in self.route_cache.items()
                          if keep(c)})
 
     def restrict_columns(self, names) -> "PhysicalProps":
@@ -111,6 +144,10 @@ class PhysicalProps:
                 else:
                     break
             sb = tuple(pref) if pref else None
+        # partitioning survives only when EVERY column survives (the
+        # hash mixes all of them; there is no prefix weakening)
+        part = self.partitioning if (self.partitioning is not None
+                                     and keep(self.partitioning)) else None
         return PhysicalProps(
             key_cache={c: v for c, v in self.key_cache.items() if keep(c)},
             sorted_by=sb,
@@ -118,6 +155,9 @@ class PhysicalProps:
             seg_cache={c: v for c, v in self.seg_cache.items()
                        if sb is not None and c == sb[:len(c)]},
             build_cache={c: v for c, v in self.build_cache.items()
+                         if keep(c)},
+            partitioning=part,
+            route_cache={c: v for c, v in self.route_cache.items()
                          if keep(c)})
 
     def renamed(self, rename) -> "PhysicalProps":
@@ -132,4 +172,7 @@ class PhysicalProps:
             sorted_by=rn(self.sorted_by) if self.sorted_by else None,
             invalid_last=self.invalid_last,
             seg_cache={rn(c): v for c, v in self.seg_cache.items()},
-            build_cache={rn(c): v for c, v in self.build_cache.items()})
+            build_cache={rn(c): v for c, v in self.build_cache.items()},
+            partitioning=rn(self.partitioning) if self.partitioning
+            else None,
+            route_cache={rn(c): v for c, v in self.route_cache.items()})

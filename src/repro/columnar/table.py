@@ -222,3 +222,26 @@ def concat_bags(a: FlatBag, b: FlatBag) -> FlatBag:
     assert cols == set(a.data) == set(b.data), (a.columns, b.columns)
     data = {n: jnp.concatenate([a.data[n], b.data[n]]) for n in cols}
     return FlatBag(data, jnp.concatenate([a.valid, b.valid]))
+
+
+def concat_compact(a: FlatBag, b: FlatBag, capacity: int):
+    """Union of two bags compacted to a static ``capacity``: valid rows
+    stable-sort to the front, the tail is truncated. Returns
+    ``(bag, dropped)`` where ``dropped`` counts VALID rows that did not
+    fit (0 whenever the valid counts allow the compaction).
+
+    This is the capacity-growth fix for the skew light+heavy unions:
+    plain ``concat_bags`` compounds ``P*bucket + cap`` at every skew op,
+    so nested skew plans balloon; compacting back to the pre-split
+    capacity keeps downstream operators working at input scale. Callers
+    meter ``dropped`` (the overflow valve) and the padding that remains."""
+    cols = set(a.data) & set(b.data)
+    assert cols == set(a.data) == set(b.data), (a.columns, b.columns)
+    if capacity >= a.capacity + b.capacity:
+        return concat_bags(a, b).resize(capacity), jnp.zeros((), jnp.int64)
+    valid = jnp.concatenate([a.valid, b.valid])
+    order = jnp.argsort(~valid, stable=True)[:capacity]
+    data = {n: jnp.concatenate([a.data[n], b.data[n]])[order] for n in cols}
+    total = jnp.sum(valid.astype(jnp.int64))
+    dropped = jnp.maximum(total - capacity, 0)
+    return FlatBag(data, valid[order]), dropped

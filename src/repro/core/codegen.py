@@ -25,8 +25,9 @@ from repro.exec import ops as X
 from . import interpreter as I
 from . import nrc as N
 from .materialization import Manifest, ShreddedProgram, mat_input_name
-from .plans import ExecSettings, MapP, Plan, annotate_orders, eval_plan, \
-    push_aggregation, push_order, required_columns
+from .plans import ExecSettings, MapP, Plan, annotate_orders, \
+    annotate_partitioning, eval_plan, push_aggregation, push_order, \
+    push_partitioning, required_columns
 from .unnesting import Catalog, NestSpec, StandardPlan, compile_flat_query
 
 
@@ -113,8 +114,12 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
         if optimize:
             plan = push_aggregation(plan)
             plan = push_order(plan)
-            plan = annotate_orders(plan)
+            plan = push_partitioning(plan)
             plan = required_columns(plan, None)
+            # annotate last: required_columns rebuilds every node, which
+            # would discard the EXPLAIN attributes
+            plan = annotate_orders(plan)
+            plan = annotate_partitioning(plan)
         plans.append((a.name, plan))
     return CompiledProgram(plans, sp)
 

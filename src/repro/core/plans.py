@@ -72,12 +72,17 @@ class SumAggP(Plan):
     keys: tuple
     vals: tuple
     local_preagg: bool = False   # aggregation pushdown: pre-agg per partition
+    # distributed exchange key (a subset of ``keys`` chosen by
+    # push_partitioning so downstream consumers can reuse the delivered
+    # partitioning); None => exchange on the full key tuple
+    exchange_on: Optional[tuple] = None
 
 
 @dataclass
 class DeDupP(Plan):
     child: Plan
     cols: Optional[tuple] = None
+    exchange_on: Optional[tuple] = None
 
 
 @dataclass
@@ -113,6 +118,7 @@ class FusedJoinAggP(Plan):
     keys: tuple
     vals: tuple
     local_preagg: bool = False
+    exchange_on: Optional[tuple] = None
 
 
 def plan_pretty(p: Plan, indent: int = 0) -> str:
@@ -264,7 +270,35 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
                 for out, e in p.outputs}
         if p.extend:
             return child.with_columns(**cols)
-        return X.project(child, cols)
+        out = X.project(child, cols)
+        if X.ORDER_AWARE:
+            # a projection is row-local (rows and validity unchanged):
+            # physical properties survive for columns that pass through
+            # as bare Vars, under the output name. Entries referencing
+            # any non-passthrough column are dropped, which also guards
+            # against an output name shadowing an unrelated child column.
+            passthru = {e.name: o for o, e in p.outputs
+                        if isinstance(e, N.Var)}
+            cp = child.props
+            sb = []
+            for c in cp.sorted_by or ():
+                if c not in passthru:
+                    break
+                sb.append(passthru[c])
+            key_cache = {tuple(passthru[c] for c in cols_): v
+                         for cols_, v in cp.key_cache.items()
+                         if all(c in passthru for c in cols_)}
+            part = cp.partitioning
+            part = tuple(passthru[c] for c in part) \
+                if part is not None and all(c in passthru for c in part) \
+                else None
+            if sb or key_cache or part:
+                from repro.columnar.props import PhysicalProps
+                out = out.with_props(PhysicalProps(
+                    key_cache=key_cache, sorted_by=tuple(sb) or None,
+                    invalid_last=cp.invalid_last,
+                    partitioning=part))
+        return out
     if isinstance(p, JoinP):
         left = eval_plan(p.left, env, s)
         right = eval_plan(p.right, env, s)
@@ -274,13 +308,14 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
         if s.dist is not None:
             return s.dist.sum_by(child, p.keys, p.vals,
                                  local_preagg=p.local_preagg,
-                                 use_kernel=s.use_kernel)
+                                 use_kernel=s.use_kernel,
+                                 exchange_on=p.exchange_on)
         return X.sum_by(child, p.keys, p.vals, use_kernel=s.use_kernel)
     if isinstance(p, DeDupP):
         child = eval_plan(p.child, env, s)
         cols = p.cols or tuple(child.columns)
         if s.dist is not None:
-            return s.dist.dedup(child, cols)
+            return s.dist.dedup(child, cols, exchange_on=p.exchange_on)
         return X.dedup(child, cols)
     if isinstance(p, UnionP):
         return X.union_all(eval_plan(p.left, env, s),
@@ -302,7 +337,8 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
         if s.dist is not None:
             return s.dist.sum_by(joined, p.keys, p.vals,
                                  local_preagg=p.local_preagg,
-                                 use_kernel=s.use_kernel)
+                                 use_kernel=s.use_kernel,
+                                 exchange_on=p.exchange_on)
         return X.sum_by(joined, p.keys, p.vals, use_kernel=s.use_kernel)
     raise TypeError(f"eval_plan: {type(p).__name__}")
 
@@ -375,12 +411,12 @@ def _pushdown(p: Plan, needed: Optional[set]) -> Plan:
     if isinstance(p, SumAggP):
         cn = set(p.keys) | set(p.vals)
         return SumAggP(_pushdown(p.child, cn), p.keys, p.vals,
-                       p.local_preagg)
+                       p.local_preagg, p.exchange_on)
     if isinstance(p, DeDupP):
         cn = None if p.cols is None else set(p.cols)
         if needed is not None and cn is not None:
             cn |= needed
-        return DeDupP(_pushdown(p.child, cn), p.cols)
+        return DeDupP(_pushdown(p.child, cn), p.cols, p.exchange_on)
     if isinstance(p, UnionP):
         return UnionP(_pushdown(p.left, needed), _pushdown(p.right, needed))
     if isinstance(p, OuterUnnestP):
@@ -395,7 +431,8 @@ def _pushdown(p: Plan, needed: Optional[set]) -> Plan:
                    _pushdown(j.right, cn | set(j.right_on)),
                    j.left_on, j.right_on, j.how, j.unique_right,
                    j.expansion, j.broadcast, j.skew_aware, j.matched_col)
-        return FusedJoinAggP(nj, p.keys, p.vals, p.local_preagg)
+        return FusedJoinAggP(nj, p.keys, p.vals, p.local_preagg,
+                             p.exchange_on)
     raise TypeError(type(p).__name__)
 
 
@@ -587,4 +624,139 @@ def push_order(p: Plan, desired: Optional[tuple] = None) -> Plan:
                             p.expansion, p.matched_col, p.rowid_col)
     if isinstance(p, UnionP):
         return UnionP(push_order(p.left, None), push_order(p.right, None))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# physical partitioning pass: annotate required/delivered hash
+# partitionings and pick exchange keys that maximize elision
+# (mirrors push_order; see exec.dist for the runtime contract)
+# ---------------------------------------------------------------------------
+
+def delivered_partitioning(p: Plan) -> Optional[tuple]:
+    """Column tuple the plan's distributed output is hash-partitioned on
+    (the static mirror of ``FlatBag.props.partitioning``). Approximate
+    in the elision direction only: it may under-report (runtime props
+    are authoritative), never claims a partitioning the executor would
+    not deliver."""
+    if isinstance(p, SelectP):
+        return delivered_partitioning(p.child)   # masking moves no rows
+    if isinstance(p, MapP):
+        d = delivered_partitioning(p.child)
+        if d is None:
+            return None
+        if p.extend:
+            over = {c for c, _ in p.outputs}
+            return d if not (set(d) & over) else None
+        passthru = {e.name: out for out, e in p.outputs
+                    if isinstance(e, N.Var)}
+        if all(c in passthru for c in d):
+            return tuple(passthru[c] for c in d)
+        return None
+    if isinstance(p, JoinP):
+        if p.broadcast:
+            return delivered_partitioning(p.left)  # probe side stays put
+        if p.skew_aware:
+            return None     # light+heavy union mixes placements
+        ld = delivered_partitioning(p.left)
+        if ld is not None and set(ld) <= set(p.left_on):
+            return ld       # probe side elided: placement unchanged
+        return tuple(p.left_on)
+    if isinstance(p, (SumAggP, FusedJoinAggP)):
+        return tuple(p.exchange_on) if p.exchange_on else tuple(p.keys)
+    if isinstance(p, DeDupP):
+        if p.exchange_on:
+            return tuple(p.exchange_on)
+        return tuple(p.cols) if p.cols else None
+    if isinstance(p, OuterUnnestP):
+        return delivered_partitioning(p.parent)  # left-major, row-local
+    return None
+
+
+def required_partitioning(p: Plan) -> Optional[tuple]:
+    """Partitioning the operator wants from its (probe-side) input so
+    its own exchange can be elided."""
+    if isinstance(p, (SumAggP, FusedJoinAggP)):
+        return tuple(p.exchange_on) if p.exchange_on else tuple(p.keys)
+    if isinstance(p, DeDupP):
+        if p.exchange_on:
+            return tuple(p.exchange_on)
+        return tuple(p.cols) if p.cols else None
+    if isinstance(p, JoinP) and not p.broadcast:
+        return tuple(p.left_on)
+    return None
+
+
+def annotate_partitioning(p: Plan) -> Plan:
+    """EXPLAIN support: attach ``p.required_part`` / ``p.delivered_part``
+    to every node (plan dumps and the shuffle tests read these)."""
+    p.required_part = required_partitioning(p)
+    p.delivered_part = delivered_partitioning(p)
+    for attr in ("child", "left", "right", "parent", "join"):
+        if hasattr(p, attr):
+            annotate_partitioning(getattr(p, attr))
+    return p
+
+
+def push_partitioning(p: Plan, desired: Optional[tuple] = None) -> Plan:
+    """Partitioning-aware physical rewrite (run after push_order):
+
+    * grouping ops (Gamma+ / dedup) pick their distributed
+      ``exchange_on`` key: co-location on any subset of the grouping
+      keys is sufficient for correctness, so when the PARENT wants the
+      output partitioned on ``desired`` (a subset of the keys), the
+      exchange uses exactly that tuple — the delivered partitioning then
+      matches downstream and the next exchange elides;
+    * joins push their own join keys down each side, so producers
+      (earlier assignments of the bundle, other grouping ops) deliver
+      pre-partitioned inputs and the join exchanges nothing at runtime.
+    """
+    def pick(keys: tuple) -> tuple:
+        if desired and set(desired) <= set(keys):
+            return tuple(desired)
+        return tuple(keys)
+
+    if isinstance(p, SumAggP):
+        ex = pick(tuple(p.keys))
+        return SumAggP(push_partitioning(p.child, ex), p.keys, p.vals,
+                       p.local_preagg, exchange_on=ex)
+    if isinstance(p, DeDupP):
+        if p.cols is None:
+            return DeDupP(push_partitioning(p.child, None), None)
+        ex = pick(tuple(p.cols))
+        return DeDupP(push_partitioning(p.child, ex), p.cols,
+                      exchange_on=ex)
+    if isinstance(p, FusedJoinAggP):
+        ex = pick(tuple(p.keys))
+        j = p.join
+        nj = JoinP(push_partitioning(j.left, tuple(j.left_on)),
+                   push_partitioning(j.right, tuple(j.right_on)),
+                   j.left_on, j.right_on, j.how, j.unique_right,
+                   j.expansion, j.broadcast, j.skew_aware, j.matched_col)
+        return FusedJoinAggP(nj, p.keys, p.vals, p.local_preagg,
+                             exchange_on=ex)
+    if isinstance(p, JoinP):
+        return JoinP(push_partitioning(p.left, tuple(p.left_on)),
+                     push_partitioning(p.right, tuple(p.right_on)),
+                     p.left_on, p.right_on, p.how, p.unique_right,
+                     p.expansion, p.broadcast, p.skew_aware, p.matched_col)
+    if isinstance(p, SelectP):
+        return SelectP(push_partitioning(p.child, desired), p.pred)
+    if isinstance(p, MapP):
+        if p.extend:
+            over = {c for c, _ in p.outputs}
+            down = tuple(c for c in desired or () if c not in over) or None
+            return MapP(push_partitioning(p.child, down), p.outputs,
+                        extend=True)
+        srcs = {out: e.name for out, e in p.outputs if isinstance(e, N.Var)}
+        down = tuple(srcs[c] for c in desired or () if c in srcs) or None
+        return MapP(push_partitioning(p.child, down), p.outputs)
+    if isinstance(p, OuterUnnestP):
+        return OuterUnnestP(push_partitioning(p.parent, desired),
+                            p.child_bag, p.alias, p.parent_label,
+                            p.child_label, p.expansion, p.matched_col,
+                            p.rowid_col)
+    if isinstance(p, UnionP):
+        return UnionP(push_partitioning(p.left, None),
+                      push_partitioning(p.right, None))
     return p

@@ -70,9 +70,13 @@ def is_member(key: jnp.ndarray, heavy_sorted: jnp.ndarray) -> jnp.ndarray:
     return (heavy_sorted[pos] == key) & (key != I64_MAX)
 
 
-def split_skew(bag: FlatBag, key_cols, heavy_sorted: jnp.ndarray
+def split_skew(bag: FlatBag, key_cols, heavy_sorted: jnp.ndarray,
+               key: Optional[jnp.ndarray] = None
                ) -> Tuple[FlatBag, FlatBag]:
-    """Split a bag into (light, heavy) components of a skew-triple."""
-    key = X.pack_keys(bag, key_cols)
+    """Split a bag into (light, heavy) components of a skew-triple.
+    ``key`` optionally supplies the pre-packed key so the skew path
+    (detect -> split -> exchange) packs each key set exactly once."""
+    if key is None:
+        key = X.pack_keys(bag, key_cols)
     hv = is_member(key, heavy_sorted)
     return bag.mask(~hv), bag.mask(hv)

@@ -1,34 +1,80 @@
-"""Distributed execution under shard_map (DESIGN.md §2, §5).
+"""Distributed execution under shard_map (DESIGN.md §2, §5, and
+"Partitioning-aware shuffle").
 
 Spark's shuffle becomes ``jax.lax.all_to_all`` with *fixed-capacity
 per-destination buckets* (the MoE-dispatch pattern): skewed keys
 overflow their bucket instead of spilling to disk — overflow is counted
 and reported, the TPU-native analogue of the paper's crashed bars.
 
+The default (**packed**) exchange is a sort-based packed shuffle:
+
+* rows are routed by a *destination sort* (argsort by ``hash(key) % P``,
+  cached per key set in ``PhysicalProps.route_cache``) instead of the
+  seed's dense one-hot/cumsum scatter;
+* every column ships in ONE collective — the columns are bit-cast to
+  int64 lanes and stacked into a single ``(P, bucket, n_lanes)`` wire
+  buffer (plus one packed-key lane seeding the receiver's key cache and
+  one validity lane), so an exchange costs exactly one ``all_to_all``
+  regardless of schema width (``kernels/shuffle_pack.py`` provides the
+  Pallas dest-scatter / unpack pair for the TPU path);
+* the receiving bag carries ``partitioning = key_cols`` as a physical
+  property, and every exchange whose key is a superset of a delivered
+  partitioning is **elided** — ``join -> sum_by`` on the same key moves
+  rows across the wire exactly once, and co-partitioned joins exchange
+  neither side (``SHUFFLE_STATS`` counts executed vs elided exchanges);
+* bucket capacities are **adaptive**: each exchange psums its true
+  per-destination row counts once (a ``pmax`` metric per exchange
+  site); ``run_distributed(adaptive=True)`` re-traces with exact bucket
+  sizes whenever a site overflowed, eliminating the overflow-vs-memory
+  tradeoff for light keys while keeping metered overflow as the skew
+  safety valve.
+
+``shuffle_mode="legacy"`` selects the seed path (one-hot scatter, one
+collective per column, no elision) — the benchmarks' baseline.
+
 Broadcast joins use ``all_gather`` of the small side. The skew-aware
 join (paper Fig. 6) exchanges only the light component and gathers the
-heavy rows of the build side, leaving heavy probe rows in place.
+heavy rows of the build side, leaving heavy probe rows in place; the
+light+heavy unions compact back to the pre-split capacity
+(``concat_compact``) instead of compounding buffer growth.
 
-All operators run *inside* shard_map over a 1-D partition axis (the
-mesh's "data"×"pod" axes flattened); a ``DistContext`` carries the axis
-name and a metrics accumulator (shuffle bytes, broadcast bytes,
-overflow rows) whose values are psum'd on exit.
+All operators run *inside* shard_map over a 1-D partition axis; a
+``DistContext`` carries the axis name and a metrics accumulator
+(shuffle bytes, broadcast bytes, overflow rows) whose values are
+psum'd / pmax'd on exit.
 """
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field as dc_field
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.columnar.table import FlatBag
+from repro.columnar.table import FlatBag, concat_bags, concat_compact
 from repro.core import skew as SK
 from . import ops as X
 from .hashing import mix64
+
+
+# ---------------------------------------------------------------------------
+# shuffle accounting (trace-time host counters, the SORT_STATS analogue)
+# ---------------------------------------------------------------------------
+
+SHUFFLE_STATS: Dict[str, int] = {}
+
+
+def reset_shuffle_stats() -> None:
+    SHUFFLE_STATS.clear()
+
+
+def _scount(name: str, n: int = 1) -> None:
+    SHUFFLE_STATS[name] = SHUFFLE_STATS.get(name, 0) + n
+
+
+def _roundup8(n: int) -> int:
+    return max(-(-int(n) // 8) * 8, 1)
 
 
 class DistContext:
@@ -36,41 +82,176 @@ class DistContext:
 
     def __init__(self, axis: str, n_partitions: int,
                  cap_factor: float = 2.0, sample: int = 256,
-                 threshold: float = 0.025, skew_default: bool = False):
+                 threshold: float = 0.025, skew_default: bool = False,
+                 packed: bool = True,
+                 size_plan: Optional[Sequence[int]] = None,
+                 use_kernel: bool = False):
         self.axis = axis
         self.P = n_partitions
         self.cap_factor = cap_factor
         self.sample = sample
         self.threshold = threshold
         self.skew_default = skew_default
+        self.packed = packed
+        self.size_plan = size_plan
+        self.use_kernel = use_kernel
         self.metrics: Dict[str, jnp.ndarray] = {}
+        self.max_metrics: Dict[str, jnp.ndarray] = {}
+        self._n_sites = 0
 
     # -- metering -----------------------------------------------------
     def _add(self, name: str, value):
         self.metrics[name] = self.metrics.get(name, jnp.zeros((), jnp.int64)) \
             + jnp.asarray(value, jnp.int64)
 
+    def _add_max(self, name: str, value):
+        v = jnp.asarray(value, jnp.int64)
+        cur = self.max_metrics.get(name)
+        self.max_metrics[name] = v if cur is None else jnp.maximum(cur, v)
+
     def finalize_metrics(self) -> Dict[str, jnp.ndarray]:
-        return {k: jax.lax.psum(v, self.axis)
-                for k, v in self.metrics.items()}
+        out = {k: jax.lax.psum(v, self.axis)
+               for k, v in self.metrics.items()}
+        out.update({k: jax.lax.pmax(v, self.axis)
+                    for k, v in self.max_metrics.items()})
+        return out
+
+    # -- adaptive sizing sites ----------------------------------------
+    def _size_site(self, default: int) -> Tuple[int, int]:
+        """Claim the next capacity-sizing site (exchange bucket or union
+        capacity). Sites are numbered in trace order, which is
+        deterministic, so a retry with a ``size_plan`` addresses exactly
+        the site that recorded the need."""
+        site = self._n_sites
+        self._n_sites += 1
+        used = int(default)
+        if self.size_plan is not None and site < len(self.size_plan):
+            used = int(self.size_plan[site])
+        SHUFFLE_STATS[f"size_used_{site}"] = used
+        return site, used
 
     # -- exchange (hash repartition) ------------------------------------
     def exchange(self, bag: FlatBag, key_cols: Sequence[str],
-                 keep: Optional[jnp.ndarray] = None) -> FlatBag:
+                 keep: Optional[jnp.ndarray] = None,
+                 key: Optional[jnp.ndarray] = None) -> FlatBag:
         """Hash-repartition rows by key over the partition axis.
         ``keep`` optionally restricts which rows participate (others are
-        dropped — used by skew-aware ops to exchange only light rows).
+        dropped — used by skew-aware ops to exchange only light rows);
+        ``key`` optionally supplies the pre-packed key (the skew path
+        packs each key set once and threads it through).
 
-        Physical props across the exchange: repartition destroys any
-        delivered sort order, but the packed key *travels with the rows*
-        (one extra int64 lane, metered below), so the receiving side's
-        key cache is pre-seeded and the post-exchange aggregation /
-        join packs nothing."""
+        Elision: when the bag is already hash-partitioned on a subset of
+        ``key_cols`` (``PhysicalProps.partitioning``), equal keys are
+        already co-located and the exchange is a no-op.
+
+        Wire format (packed mode): every column bit-cast to an int64
+        lane, stacked with a packed-key lane (pre-seeding the receiving
+        key cache) and a validity lane into one ``(P, bucket, n_lanes)``
+        buffer — one ``all_to_all`` total. Within each (sender, dest)
+        block rows arrive contiguously in sender order; slots past the
+        sender's count arrive zero with validity 0."""
+        key_cols = tuple(key_cols)
+        if not self.packed:
+            return self._exchange_legacy(bag, key_cols, keep, key)
+        if X.ORDER_AWARE and bag.props.partitioned_for(key_cols):
+            _scount("exchange_elided")
+            return bag if keep is None else bag.mask(keep)
+        _scount("exchanges")
         cap = bag.capacity
         Pn = self.P
-        key_cols = tuple(key_cols)
+        valid = bag.valid if keep is None else (bag.valid & keep)
+        if key is None:
+            key = X.pack_keys(bag, key_cols)
+
+        # -- destination-sort routing (cached when validity untouched) --
+        route = None
+        if X.ORDER_AWARE and keep is None:
+            route = bag.props.route_cache.get(key_cols)
+            if route is not None:
+                _scount("route_reuse")
+        if route is None:
+            _scount("route_argsort")
+            dest = (mix64(key) % Pn).astype(jnp.int32)
+            destk = jnp.where(valid, dest, Pn)   # invalid rows sort last
+            order = jnp.argsort(destk)           # stable: sender order kept
+            counts = jax.ops.segment_sum(
+                jnp.ones(cap, jnp.int32), destk, num_segments=Pn + 1)[:Pn]
+            offsets = jnp.cumsum(counts) - counts
+            route = (order, counts, offsets)
+            if X.ORDER_AWARE and keep is None and X._cache_ok(bag, order):
+                bag.props.route_cache[key_cols] = route
+        order, counts, offsets = route
+
+        # -- adaptive bucket sizing -------------------------------------
+        site, bucket = self._size_site(
+            max(int(cap * self.cap_factor) // Pn, 1))
+        self._add_max(f"size_need_{site}", jnp.max(counts))
+
+        sent = jnp.sum(jnp.minimum(counts, bucket))
+        self._add("overflow_rows", jnp.sum(jnp.maximum(counts - bucket, 0)))
+        self._add("shuffle_rows", sent)
+        # order-aware exchanges ship the packed key as one extra lane
+        key_lane = 8 if X.ORDER_AWARE else 0
+        self._add("shuffle_bytes", sent * (bag.row_bytes() + key_lane))
+
+        # -- pack: one int64 lane per column + key + validity -----------
+        names = bag.columns
+        lanes = [X._to_i64_bits(bag.data[n]) for n in names]
+        if X.ORDER_AWARE:
+            lanes.append(key)
+        lanes.append(valid.astype(jnp.int64))
+        mat = jnp.stack(lanes, axis=1)                    # (cap, n_lanes)
+        slot = jnp.arange(Pn * bucket)
+        pdest = slot // bucket
+        within = slot % bucket
+        slot_ok = within < counts[pdest]
+        take = order[jnp.clip(offsets[pdest] + within, 0, cap - 1)]
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+            send = kops.pack_rows(mat, take.astype(jnp.int32), slot_ok)
+        else:
+            send = jnp.where(slot_ok[:, None], mat[take], 0)
+
+        # -- the single collective --------------------------------------
+        _scount("collectives")
+        recv = jax.lax.all_to_all(
+            send.reshape(Pn, bucket, len(lanes)), self.axis,
+            split_axis=0, concat_axis=0, tiled=False
+        ).reshape(Pn * bucket, len(lanes))
+
+        # -- unpack ------------------------------------------------------
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+            cols = kops.unpack_cols(recv)
+
+            def lane(i):
+                return cols[i]
+        else:
+            def lane(i):
+                return recv[:, i]
+
+        out_data = {n: X._from_i64_bits(lane(i), bag.data[n].dtype)
+                    for i, n in enumerate(names)}
+        vrecv = lane(len(lanes) - 1) != 0
+        props = None
+        if X.ORDER_AWARE:
+            from repro.columnar.props import PhysicalProps
+            props = PhysicalProps(key_cache={key_cols: lane(len(names))},
+                                  partitioning=key_cols)
+        return FlatBag(out_data, vrecv, props)
+
+    def _exchange_legacy(self, bag: FlatBag, key_cols: Tuple[str, ...],
+                         keep: Optional[jnp.ndarray],
+                         key: Optional[jnp.ndarray]) -> FlatBag:
+        """Seed-era exchange: dense one-hot/cumsum scatter and one
+        ``all_to_all`` per column — kept as the benchmarks' baseline
+        (``shuffle_mode="legacy"``)."""
+        _scount("exchanges")
+        cap = bag.capacity
+        Pn = self.P
         bucket = max(int(cap * self.cap_factor) // Pn, 1)
-        key = X.pack_keys(bag, key_cols)
+        if key is None:
+            key = X.pack_keys(bag, key_cols)
         valid = bag.valid if keep is None else (bag.valid & keep)
         dest = (mix64(key) % Pn).astype(jnp.int32)
         dest = jnp.where(valid, dest, 0)
@@ -80,7 +261,6 @@ class DistContext:
         ok = valid & (pos < bucket)
         self._add("overflow_rows", jnp.sum(valid & (pos >= bucket)))
         self._add("shuffle_rows", jnp.sum(ok))
-        # order-aware exchanges ship the packed key as one extra lane
         key_lane = 8 if X.ORDER_AWARE else 0
         self._add("shuffle_bytes", jnp.sum(ok) * (bag.row_bytes() + key_lane))
 
@@ -92,6 +272,7 @@ class DistContext:
                                               mode="drop")
 
         def a2a(buf):
+            _scount("collectives")
             return jax.lax.all_to_all(buf, self.axis, split_axis=0,
                                       concat_axis=0,
                                       tiled=False).reshape(Pn * bucket)
@@ -112,10 +293,22 @@ class DistContext:
         self._add("broadcast_bytes",
                   jax.lax.psum(jnp.sum(valid), self.axis)
                   * bag.row_bytes() * (self.P - 1) // self.P)
-        data = {n: jax.lax.all_gather(a, self.axis, tiled=True)
-                for n, a in bag.data.items()}
-        v = jax.lax.all_gather(valid, self.axis, tiled=True)
-        return FlatBag(data, v)
+        if not self.packed:
+            _scount("collectives", len(bag.data) + 1)
+            data = {n: jax.lax.all_gather(a, self.axis, tiled=True)
+                    for n, a in bag.data.items()}
+            v = jax.lax.all_gather(valid, self.axis, tiled=True)
+            return FlatBag(data, v)
+        # packed: same single-collective column batching as exchange
+        names = bag.columns
+        lanes = [X._to_i64_bits(bag.data[n]) for n in names]
+        lanes.append(valid.astype(jnp.int64))
+        _scount("collectives")
+        allmat = jax.lax.all_gather(jnp.stack(lanes, axis=1), self.axis,
+                                    tiled=True)
+        data = {n: X._from_i64_bits(allmat[:, i], bag.data[n].dtype)
+                for i, n in enumerate(names)}
+        return FlatBag(data, allmat[:, -1] != 0)
 
     # -- joins -----------------------------------------------------------
     def join(self, left: FlatBag, right: FlatBag, left_on, right_on,
@@ -129,10 +322,54 @@ class DistContext:
         if skew_aware or self.skew_default:
             return self._skew_join(left, right, left_on, right_on, how,
                                    unique_right, expansion)
-        lex = self.exchange(left, left_on)
-        rex = self.exchange(right, right_on)
+        lk, rk = self._copartition_keys(left, right, left_on, right_on)
+        lex = self._side_exchange(left, lk)
+        rex = self._side_exchange(right, rk)
         return self._local_join(lex, rex, left_on, right_on, how,
                                 unique_right, expansion)
+
+    def _side_exchange(self, bag: FlatBag, key_cols,
+                       keep: Optional[jnp.ndarray] = None,
+                       key: Optional[jnp.ndarray] = None) -> FlatBag:
+        """Exchange one join side on the co-partition key computed by
+        ``_copartition_keys`` (None => already placed: elide)."""
+        if key_cols is None:
+            _scount("exchange_elided")
+            return bag if keep is None else bag.mask(keep)
+        return self.exchange(bag, key_cols, keep=keep, key=key)
+
+    def _copartition_keys(self, left: FlatBag, right: FlatBag,
+                          left_on, right_on):
+        """Pick the exchange key for each join side so the two sides end
+        up co-partitioned with as little movement as possible.
+
+        A side already hash-partitioned on a positional sub-tuple of its
+        join key can stay put; the OTHER side then exchanges on the
+        *corresponding* sub-tuple (matching rows have equal values at
+        those positions, hence the same hash). When both sides deliver
+        the same positional selection, the join exchanges neither.
+        Returns ``(left_key, right_key)`` with ``None`` meaning elide."""
+        left_on, right_on = tuple(left_on), tuple(right_on)
+        if not (self.packed and X.ORDER_AWARE):
+            return left_on, right_on
+
+        def sel(part, on):
+            if not part:
+                return None
+            try:
+                return tuple(on.index(c) for c in part)
+            except ValueError:
+                return None
+
+        li = sel(left.props.partitioning, left_on)
+        ri = sel(right.props.partitioning, right_on)
+        if li is not None and ri is not None and li == ri:
+            return None, None
+        if li is not None:
+            return None, tuple(right_on[i] for i in li)
+        if ri is not None:
+            return tuple(left_on[i] for i in ri), None
+        return left_on, right_on
 
     def _local_join(self, left, right, left_on, right_on, how,
                     unique_right, expansion):
@@ -149,63 +386,99 @@ class DistContext:
                    unique_right, expansion):
         """Paper Fig. 6: split the probe side by heavy keys; exchange the
         light component; leave heavy probe rows in place and broadcast
-        the matching build rows."""
-        hk = self.heavy_keys(left, left_on)
+        the matching build rows. Each key set is packed once and
+        threaded through detection, split and exchange."""
+        left_on, right_on = tuple(left_on), tuple(right_on)
         lkey = X.pack_keys(left, left_on)
+        hk = self.heavy_keys(left, left_on, key=lkey)
         heavy_mask = SK.is_member(lkey, hk) & left.valid
-        # light plan: standard exchange join
-        lex = self.exchange(left, left_on, keep=~heavy_mask)
-        rex = self.exchange(right, right_on)
+        # light plan: standard exchange join (co-partition aware)
+        lk, rk = self._copartition_keys(left, right, left_on, right_on)
+        rkey = X.pack_keys(right, right_on)
+        lex = self._side_exchange(left, lk, keep=~heavy_mask,
+                                  key=lkey if lk == left_on else None)
+        rex = self._side_exchange(right, rk,
+                                  key=rkey if rk == right_on else None)
         light = self._local_join(lex, rex, left_on, right_on, how,
                                  unique_right, expansion)
         # heavy plan: heavy probe rows stay; broadcast matching build rows
-        rkey = X.pack_keys(right, right_on)
         r_heavy = SK.is_member(rkey, hk)
         rall = self.gather_all(right, keep=r_heavy)
         heavy = self._local_join(left.mask(heavy_mask), rall, left_on,
                                  right_on, how, unique_right, expansion)
-        from repro.columnar.table import concat_bags
-        return concat_bags(light, heavy)
+        return self._union_compact(light, heavy)
+
+    def _union_compact(self, light: FlatBag, heavy: FlatBag) -> FlatBag:
+        """Union the light/heavy results of a skew op. Packed mode
+        compacts back to the larger of the two capacities (adaptively
+        regrown when the valid counts demand more) instead of letting
+        every skew op compound ``P*bucket + cap``; the padding that
+        remains and any dropped rows are metered."""
+        if not self.packed:
+            return concat_bags(light, heavy)
+        site, target = self._size_site(max(light.capacity, heavy.capacity))
+        need = jnp.sum(light.valid.astype(jnp.int64)) \
+            + jnp.sum(heavy.valid.astype(jnp.int64))
+        self._add_max(f"size_need_{site}", need)
+        out, dropped = concat_compact(light, heavy, target)
+        self._add("compact_dropped_rows", dropped)
+        self._add("union_padding_rows", jnp.maximum(target - need, 0))
+        return out
 
     # -- heavy-key detection (sampled, then gathered) ---------------------
-    def heavy_keys(self, bag: FlatBag, key_cols) -> jnp.ndarray:
-        key = X.pack_keys(bag, key_cols)
+    def heavy_keys(self, bag: FlatBag, key_cols,
+                   key: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        if key is None:
+            key = X.pack_keys(bag, key_cols)
         local = SK.heavy_keys_local(key, bag.valid, sample=self.sample,
                                     threshold=self.threshold)
         self._add("broadcast_bytes", local.shape[0] * 8 * (self.P - 1))
+        _scount("collectives")
         allc = jax.lax.all_gather(local, self.axis, tiled=True)
         return SK.merge_heavy(allc)
 
     # -- aggregation -------------------------------------------------------
     def sum_by(self, bag: FlatBag, keys, vals, local_preagg: bool = True,
-               use_kernel: bool = False) -> FlatBag:
+               use_kernel: bool = False,
+               exchange_on: Optional[Sequence[str]] = None) -> FlatBag:
         """Gamma+ : optional local pre-aggregation (aggregation pushdown,
         §3.3 — executed "locally at each partition"), exchange by key,
         final local aggregation. Aggregation is inherently skew-resilient
-        (paper §5: 'Gamma+ mitigates skew-effects by default')."""
+        (paper §5: 'Gamma+ mitigates skew-effects by default').
+
+        ``exchange_on`` (planner hint, ``push_partitioning``) narrows
+        the exchange key to a subset of the grouping keys — co-location
+        on a subset is sufficient for grouping, and a well-chosen subset
+        lets downstream consumers reuse the delivered partitioning."""
+        keys = tuple(keys)
         if local_preagg:
             bag = X.sum_by(bag, keys, vals, use_kernel=use_kernel)
-        ex = self.exchange(bag, keys)
+        ex_key = tuple(exchange_on) if exchange_on else keys
+        assert set(ex_key) <= set(keys), (ex_key, keys)
+        ex = self.exchange(bag, ex_key)
         return X.sum_by(ex, keys, vals, use_kernel=use_kernel)
 
-    def dedup(self, bag: FlatBag, cols) -> FlatBag:
+    def dedup(self, bag: FlatBag, cols,
+              exchange_on: Optional[Sequence[str]] = None) -> FlatBag:
+        cols = tuple(cols)
         local = X.dedup(bag, cols)
-        ex = self.exchange(local, cols)
+        ex_key = tuple(exchange_on) if exchange_on else cols
+        assert set(ex_key) <= set(cols), (ex_key, cols)
+        ex = self.exchange(local, ex_key)
         return X.dedup(ex, cols)
 
     # -- BagToDict (skew-aware label repartition, Fig. 6 last row) --------
     def bag_to_dict(self, bag: FlatBag, skew_aware: bool = True) -> FlatBag:
         if not skew_aware:
             return self.exchange(bag, ("label",))
-        hk = self.heavy_keys(bag, ("label",))
         key = X.pack_keys(bag, ("label",))
+        hk = self.heavy_keys(bag, ("label",), key=key)
         heavy_mask = SK.is_member(key, hk) & bag.valid
-        light = self.exchange(bag, ("label",), keep=~heavy_mask)
+        light = self.exchange(bag, ("label",), keep=~heavy_mask, key=key)
         heavy = bag.mask(heavy_mask)
         # heavy labels keep their current location (skew resilience);
-        # pad the light exchange output to align capacities, then union.
-        from repro.columnar.table import concat_bags
-        return concat_bags(light, heavy)
+        # compact the light+heavy union back toward pre-split capacity.
+        return self._union_compact(light, heavy)
 
 
 # ---------------------------------------------------------------------------
@@ -222,36 +495,124 @@ def _bag_specs(tree, axis: str):
     return jax.tree.map(lambda _: P(axis), tree)
 
 
-def run_distributed(fn: Callable[[Dict[str, FlatBag], DistContext], dict],
-                    env: Dict[str, FlatBag], mesh: Mesh,
-                    axis: str = "data", cap_factor: float = 2.0,
-                    skew_default: bool = False,
-                    threshold: float = 0.025,
-                    jit: bool = True) -> Tuple[dict, Dict[str, int]]:
-    """Run ``fn(env_local, ctx)`` SPMD over ``mesh[axis]``.
+def _merge_host_stats(metrics: Dict[str, int],
+                      stats: Dict[str, int]) -> Dict[str, int]:
+    """Fold the trace-time SHUFFLE_STATS snapshot into device metrics."""
+    metrics = dict(metrics)
+    metrics["shuffle_collectives"] = stats.get("collectives", 0)
+    metrics["exchanges"] = stats.get("exchanges", 0)
+    metrics["exchanges_elided"] = stats.get("exchange_elided", 0)
+    return metrics
+
+
+class DistRunner:
+    """A compiled distributed program with its capacity plan resolved.
+
+    ``compile_distributed`` returns one of these after the adaptive
+    sizing loop converges; calling it re-executes the SAME jitted
+    shard_map (warm path — no retrace), which is the steady-state
+    serving case the benchmarks time. ``stats`` is the host-side
+    SHUFFLE_STATS snapshot of the final trace (collectives, elisions,
+    per-site sizes) and is merged into every call's metrics."""
+
+    def __init__(self, sm, stats: Dict[str, int]):
+        self._sm = sm
+        self.stats = stats
+
+    def __call__(self, env) -> Tuple[dict, Dict[str, int]]:
+        out, metrics = self._sm(env)
+        return out, _merge_host_stats(
+            {k: int(v) for k, v in metrics.items()}, self.stats)
+
+
+def compile_distributed(
+        fn: Callable[[Dict[str, FlatBag], DistContext], dict],
+        env: Dict[str, FlatBag], mesh: Mesh,
+        axis: str = "data", cap_factor: float = 2.0,
+        skew_default: bool = False,
+        threshold: float = 0.025,
+        jit: bool = True,
+        shuffle_mode: str = "packed",
+        use_kernel: bool = False,
+        adaptive: bool = False,
+        max_retries: int = 3
+) -> Tuple[DistRunner, dict, Dict[str, int]]:
+    """Compile ``fn(env_local, ctx)`` SPMD over ``mesh[axis]`` and run
+    it once. Returns ``(runner, outputs, metrics)`` — call ``runner``
+    again for warm executions of the same program.
 
     Every FlatBag in env is row-sharded over the axis (capacities must
-    divide the axis size). Returns (outputs, metrics)."""
+    divide the axis size).
+
+    ``adaptive=True`` turns on adaptive capacity: the run records, per
+    sizing site (exchange bucket / skew-union capacity), the true
+    required size as a pmax metric; if any site was undersized the
+    program is re-traced with a ``size_plan`` pinning each such site to
+    its exact need (rounded up to a multiple of 8) and re-run, up to
+    ``max_retries`` times. Light keys therefore never trade overflow
+    against memory; persistent overflow (a site that keeps growing past
+    the retry budget) stays metered in ``overflow_rows`` /
+    ``compact_dropped_rows``.
+
+    Host-side trace counters (``SHUFFLE_STATS``) from the final attempt
+    are merged into the returned metrics: ``shuffle_collectives``,
+    ``exchanges``, ``exchanges_elided``.
+    """
     n = mesh.shape[axis]
     for k, b in env.items():
         assert b.capacity % n == 0, (
             f"bag {k} capacity {b.capacity} not divisible by {n} partitions")
+    assert shuffle_mode in ("packed", "legacy"), shuffle_mode
 
     from jax.experimental.shard_map import shard_map
-
-    def inner(env_local):
-        ctx = DistContext(axis, n, cap_factor=cap_factor,
-                          sample=256, threshold=threshold,
-                          skew_default=skew_default)
-        out = fn(env_local, ctx)
-        return out, ctx.finalize_metrics()
 
     in_specs = (P(axis),)            # pytree-prefix: every bag leaf sharded
     out_specs = (P(axis), P())       # outputs sharded, metrics replicated
 
-    sm = shard_map(inner, mesh=mesh, in_specs=in_specs,
-                   out_specs=out_specs, check_rep=False)
-    if jit:
-        sm = jax.jit(sm)
-    out, metrics = sm(env)
-    return out, {k: int(v) for k, v in metrics.items()}
+    size_plan: Optional[Tuple[int, ...]] = None
+    attempt = 0
+    while True:
+        reset_shuffle_stats()
+
+        def inner(env_local, _plan=size_plan):
+            ctx = DistContext(axis, n, cap_factor=cap_factor,
+                              sample=256, threshold=threshold,
+                              skew_default=skew_default,
+                              packed=(shuffle_mode == "packed"),
+                              size_plan=_plan, use_kernel=use_kernel)
+            out = fn(env_local, ctx)
+            return out, ctx.finalize_metrics()
+
+        sm = shard_map(inner, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+        if jit:
+            sm = jax.jit(sm)
+        out, metrics = sm(env)
+        host = dict(SHUFFLE_STATS)
+        runner = DistRunner(sm, host)
+        metrics = _merge_host_stats({k: int(v) for k, v in metrics.items()},
+                                    host)
+        if not adaptive or shuffle_mode != "packed" \
+                or attempt >= max_retries:
+            break
+        needs = {int(k.rsplit("_", 1)[1]): v for k, v in metrics.items()
+                 if k.startswith("size_need_")}
+        used = {int(k.rsplit("_", 1)[1]): v for k, v in host.items()
+                if k.startswith("size_used_")}
+        grow = {s: v for s, v in needs.items() if v > used.get(s, v)}
+        if not grow:
+            break
+        n_sites = max(used) + 1 if used else 0
+        size_plan = tuple(
+            _roundup8(grow[s]) if s in grow else used.get(s, 1)
+            for s in range(n_sites))
+        attempt += 1
+    return runner, out, metrics
+
+
+def run_distributed(fn: Callable[[Dict[str, FlatBag], DistContext], dict],
+                    env: Dict[str, FlatBag], mesh: Mesh,
+                    **kwargs) -> Tuple[dict, Dict[str, int]]:
+    """One-shot ``compile_distributed`` (see there for the knobs)."""
+    _, out, metrics = compile_distributed(fn, env, mesh, **kwargs)
+    return out, metrics

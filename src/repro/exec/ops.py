@@ -104,6 +104,16 @@ def pack_keys(bag: FlatBag, cols: Sequence[str]) -> jnp.ndarray:
     return key
 
 
+def _part_if(bag: FlatBag, cols) -> Optional[Tuple[str, ...]]:
+    """The bag's hash-partitioning, propagated to an output whose
+    columns ``cols`` keep their values: survives iff every partitioning
+    column is among them (local ops never move rows across partitions)."""
+    part = bag.props.partitioning if ORDER_AWARE else None
+    if part is not None and set(part) <= set(cols):
+        return part
+    return None
+
+
 def _key_arrays(bag: FlatBag, cols: Sequence[str]) -> List[jnp.ndarray]:
     """Sortable int64 views of key columns. Floats sort by BIT pattern,
     not by truncated value: grouping only needs equal values adjacent,
@@ -124,7 +134,8 @@ def _lexsort(bag: FlatBag, cols: Tuple[str, ...]) -> FlatBag:
     keys = _key_arrays(bag, cols)
     order = jnp.lexsort(tuple(reversed(keys)) + (~bag.valid,))
     data = {n: a[order] for n, a in bag.data.items()}
-    props = PhysicalProps(sorted_by=cols, invalid_last=True) \
+    props = PhysicalProps(sorted_by=cols, invalid_last=True,
+                          partitioning=_part_if(bag, bag.data)) \
         if ORDER_AWARE else None
     return FlatBag(data, bag.valid[order], props)
 
@@ -259,7 +270,8 @@ def sum_by(bag: FlatBag, key_cols: Sequence[str], val_cols: Sequence[str],
     props = None
     if ORDER_AWARE:
         props = PhysicalProps(sorted_by=key_cols,
-                              invalid_last=sbag.props.invalid_last)
+                              invalid_last=sbag.props.invalid_last,
+                              partitioning=_part_if(sbag, key_cols))
     return FlatBag(data, out_valid, props)
 
 
@@ -273,7 +285,8 @@ def dedup(bag: FlatBag, cols: Optional[Sequence[str]] = None) -> FlatBag:
     if ORDER_AWARE:
         props = PhysicalProps(key_cache=dict(sbag.props.key_cache),
                               sorted_by=sbag.props.sorted_by,
-                              invalid_last=False)
+                              invalid_last=False,
+                              partitioning=_part_if(sbag, sbag.data))
     return FlatBag(sbag.data, keep, props)
 
 
@@ -390,7 +403,8 @@ def fk_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
         lp = left.props
         props = PhysicalProps(
             key_cache=dict(lp.key_cache), sorted_by=lp.sorted_by,
-            invalid_last=lp.invalid_last if how == "left_outer" else False)
+            invalid_last=lp.invalid_last if how == "left_outer" else False,
+            partitioning=_part_if(left, left.data))
     if how == "inner":
         return FlatBag(data, matched, props)
     assert how == "left_outer", how
@@ -469,7 +483,8 @@ def general_join(left: FlatBag, right: FlatBag, left_on: Sequence[str],
     props = None
     if ORDER_AWARE:
         props = PhysicalProps(sorted_by=left.props.sorted_by,
-                              invalid_last=True)
+                              invalid_last=True,
+                              partitioning=_part_if(left, left.data))
     return FlatBag(data, out_valid, props), overflow
 
 
@@ -521,7 +536,8 @@ def nest_level(bag: FlatBag, group_cols: Sequence[str],
     pprops = None
     if ORDER_AWARE:
         pprops = PhysicalProps(sorted_by=group_cols,
-                               invalid_last=sbag.props.invalid_last)
+                               invalid_last=sbag.props.invalid_last,
+                               partitioning=_part_if(sbag, group_cols))
     parents = FlatBag(pdata, parent_valid, pprops)
 
     label = seg_id.astype(jnp.int64)
@@ -534,7 +550,8 @@ def nest_level(bag: FlatBag, group_cols: Sequence[str],
     if ORDER_AWARE:
         cprops = PhysicalProps(key_cache={(label_col,): label},
                                sorted_by=(label_col,),
-                               invalid_last=False)
+                               invalid_last=False,
+                               partitioning=_part_if(sbag, child_cols))
     children = FlatBag(cdata, child_valid, cprops)
     return parents, children
 

@@ -19,6 +19,7 @@ from .gather_join import gather_rows_pallas, merge_positions_pallas
 from .rwkv6_scan import rwkv6_pallas
 from .segment_fused import segment_sum_first_pallas
 from .segment_reduce import segment_reduce_pallas
+from .shuffle_pack import pack_rows_pallas, unpack_cols_pallas
 
 INTERPRET = True    # CPU container: interpret mode; launcher flips on TPU
 USE_REF = False
@@ -74,6 +75,22 @@ def gather_rows(values: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     if USE_REF:
         return ref.gather_rows_ref(values, idx)
     return gather_rows_pallas(values, idx, interpret=INTERPRET)
+
+
+def pack_rows(values: jnp.ndarray, idx: jnp.ndarray,
+              ok: jnp.ndarray) -> jnp.ndarray:
+    """Packed-shuffle dest-scatter: out[j] = values[idx[j]] where ok[j]
+    (else 0). values (n, d) int64 bit-view lanes."""
+    if USE_REF:
+        return ref.pack_rows_ref(values, idx, ok)
+    return pack_rows_pallas(values, idx, ok, interpret=INTERPRET)
+
+
+def unpack_cols(buf: jnp.ndarray) -> jnp.ndarray:
+    """Packed-shuffle unpack: (rows, lanes) -> (lanes, rows)."""
+    if USE_REF:
+        return ref.unpack_cols_ref(buf)
+    return unpack_cols_pallas(buf, interpret=INTERPRET)
 
 
 def flash_attention(q, k, v, causal: bool = True,

@@ -53,6 +53,23 @@ def gather_rows_ref(values: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(ok[:, None], g, 0)
 
 
+def pack_rows_ref(values: jnp.ndarray, idx: jnp.ndarray,
+                  ok: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.shuffle_pack.pack_rows: masked row gather that
+    fills the packed shuffle send buffer. Slots with ``ok`` False or an
+    out-of-range index come back 0."""
+    r = values.shape[0]
+    good = ok.astype(bool) & (idx >= 0) & (idx < r)
+    g = values[jnp.clip(idx, 0, r - 1)]
+    return jnp.where(good[:, None], g, 0)
+
+
+def unpack_cols_ref(buf: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.shuffle_pack.unpack_cols: (rows, lanes) wire
+    buffer to (lanes, rows) contiguous columns."""
+    return buf.T
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, window: Optional[int] = None,
                   softcap: Optional[float] = None,

@@ -1,0 +1,117 @@
+"""Pallas TPU kernels for the packed single-collective shuffle
+(``dist.DistContext.exchange``, DESIGN.md "Partitioning-aware shuffle").
+
+The packed exchange routes rows by a destination sort, then ships every
+column of the bag in ONE ``all_to_all`` as a ``(P, bucket, n_lanes)``
+int64 buffer (narrow dtypes bit-cast to int64 lanes). Two kernels turn
+the pack/unpack around that collective into blocked vector work:
+
+* ``pack_rows_pallas`` — the dest-scatter: build the send buffer from
+  the routing. The routing precomputes, per send-buffer slot ``j``,
+  which source row lands there (``idx[j]``) and whether the slot is
+  real (``ok[j]``), so the scatter becomes a slot-major blocked masked
+  one-hot gather — dense (block_m x block_src) compare tiles with
+  masked *integer* accumulation, exact for int64 bit-views (an f32
+  one-hot matmul would truncate 64-bit labels and float64 payloads).
+* ``unpack_cols_pallas`` — the receiving side: blocked transpose of the
+  ``(rows, lanes)`` wire buffer into ``(lanes, rows)`` so each lane
+  unpacks into a contiguous column before its dtype bit-cast.
+
+Both are bit-for-bit equal to their jnp oracles (``ref.pack_rows_ref``,
+``ref.unpack_cols_ref``): comparisons, masked integer sums and
+transposes have no rounding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_BLOCK_M = 128      # send-buffer slots per grid step
+DEF_BLOCK_SRC = 128    # source rows per grid step (accumulation axis)
+DEF_BLOCK_T = 256      # wire-buffer rows per transpose grid step
+
+
+def _pack_kernel(idx_ref, ok_ref, val_ref, out_ref, *, block_m, block_src):
+    rb = pl.program_id(1)           # source-block index (accumulates)
+
+    @pl.when(rb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]              # (block_m,) i32 source row per slot
+    ok = ok_ref[...]                # (block_m,) i32 slot is real
+    vals = val_ref[...]             # (block_src, d) int64 lanes
+    local = idx - rb * block_src
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, block_src), 1)) & (ok[:, None] != 0)
+    # masked integer sum: exactly one (or zero) contribution per slot
+    out_ref[...] += jnp.sum(
+        jnp.where(onehot[:, :, None], vals[None, :, :], 0), axis=1)
+
+
+def pack_rows_pallas(values: jnp.ndarray, idx: jnp.ndarray,
+                     ok: jnp.ndarray,
+                     block_m: int = DEF_BLOCK_M,
+                     block_src: int = DEF_BLOCK_SRC,
+                     interpret: bool = True) -> jnp.ndarray:
+    """out[j, :] = values[idx[j], :] where ``ok[j]`` and idx in range,
+    else 0 — the dest-scatter that fills the packed send buffer."""
+    r, d = values.shape
+    m = idx.shape[0]
+    block_m = min(block_m, m)
+    block_src = min(block_src, r)
+    m_pad = (-m) % block_m
+    r_pad = (-r) % block_src
+    if m_pad:
+        idx = jnp.pad(idx, (0, m_pad), constant_values=-1)
+        ok = jnp.pad(ok, (0, m_pad))
+    if r_pad:
+        values = jnp.pad(values, ((0, r_pad), (0, 0)))
+
+    grid = ((m + m_pad) // block_m, (r + r_pad) // block_src)
+    out = pl.pallas_call(
+        functools.partial(_pack_kernel, block_m=block_m,
+                          block_src=block_src),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m,), lambda mb, rb: (mb,)),
+            pl.BlockSpec((block_m,), lambda mb, rb: (mb,)),
+            pl.BlockSpec((block_src, d), lambda mb, rb: (rb, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda mb, rb: (mb, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + m_pad, d), values.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), ok.astype(jnp.int32), values)
+    return out[:m]
+
+
+def _unpack_kernel(buf_ref, out_ref):
+    out_ref[...] = buf_ref[...].T
+
+
+def unpack_cols_pallas(buf: jnp.ndarray,
+                       block_t: int = DEF_BLOCK_T,
+                       interpret: bool = True) -> jnp.ndarray:
+    """(rows, lanes) wire buffer -> (lanes, rows): each lane becomes a
+    contiguous column, ready for its dtype bit-cast."""
+    m, d = buf.shape
+    block_t = min(block_t, m)
+    m_pad = (-m) % block_t
+    if m_pad:
+        buf = jnp.pad(buf, ((0, m_pad), (0, 0)))
+
+    grid = ((m + m_pad) // block_t,)
+    out = pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_t, d), lambda mb: (mb, 0))],
+        out_specs=pl.BlockSpec((d, block_t), lambda mb: (0, mb)),
+        out_shape=jax.ShapeDtypeStruct((d, m + m_pad), buf.dtype),
+        interpret=interpret,
+    )(buf)
+    return out[:, :m]

@@ -129,6 +129,179 @@ def test_distributed_sum_by_and_dedup():
 
 
 @pytest.mark.slow
+def test_exchange_roundtrip_property():
+    """Hypothesis property (via the tier-1 shim): the packed exchange
+    preserves the multiset of valid rows for random dtypes / validity
+    patterns, and overflows nothing at generous capacity."""
+    out = run_sub("""
+        import collections
+        import jax.numpy as jnp
+        import _hypothesis_shim as hyp
+        st = hyp.strategies
+        from repro.columnar.table import FlatBag
+        mesh = device_mesh_1d(8)
+
+        def fn(env, ctx):
+            return {"out": ctx.exchange(env["bag"], ("k",))}
+
+        @hyp.settings(max_examples=6, deadline=None)
+        @hyp.given(st.integers(1, 12),
+                   st.sampled_from(["int", "real", "string", "bool"]),
+                   st.integers(0, 3), st.floats(0.2, 1.0))
+        def check(n_keys, kind, seed, valid_frac):
+            cap = 48
+            rng = np.random.RandomState(seed)
+            keys = jnp.asarray(rng.randint(0, n_keys, cap), jnp.int64)
+            if kind == "int":
+                v = jnp.asarray(rng.randint(-50, 50, cap), jnp.int64)
+            elif kind == "real":
+                v = jnp.asarray(rng.randn(cap), jnp.float64)
+            elif kind == "string":
+                v = jnp.asarray(rng.randint(0, 5, cap), jnp.int32)
+            else:
+                v = jnp.asarray(rng.randint(0, 2, cap), bool)
+            valid = jnp.asarray(rng.rand(cap) < valid_frac)
+            bag = FlatBag({"k": keys, "v": v}, valid)
+            before = collections.Counter(
+                (int(k), float(x)) for k, x, ok in
+                zip(keys, v.astype(jnp.float64), valid) if ok)
+            out, m = run_distributed(fn, {"bag": bag}, mesh,
+                                     cap_factor=16.0)
+            ob = out["out"]
+            after = collections.Counter(
+                (int(k), float(x)) for k, x, ok in
+                zip(ob.col("k"), ob.col("v").astype(jnp.float64),
+                    ob.valid) if ok)
+            assert before == after, (kind, seed, before, after)
+            assert m["overflow_rows"] == 0, m
+            assert m["shuffle_collectives"] == 1, m
+
+        check()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_exchange_overflow_edge_and_adaptive():
+    out = run_sub("""
+        from repro.columnar.table import FlatBag
+        rows = [{"k": 0, "v": float(i)} for i in range(64)]
+        bag = FlatBag.from_rows(rows, {"k": "int", "v": "real"},
+                                capacity=64)
+        mesh = device_mesh_1d(8)
+        def fn(env, ctx):
+            return {"out": ctx.exchange(env["bag"], ("k",))}
+        # bucket exactly equal to the per-sender count: everything fits
+        out, m = run_distributed(fn, {"bag": bag}, mesh, cap_factor=8.0)
+        assert m["overflow_rows"] == 0 and m["shuffle_rows"] == 64, m
+        # one short: each of the 8 senders drops exactly one row
+        out, m = run_distributed(fn, {"bag": bag}, mesh, cap_factor=7.0)
+        assert m["overflow_rows"] == 8 and m["shuffle_rows"] == 56, m
+        # adaptive capacity: starts undersized, regrows to the true max
+        out, m = run_distributed(fn, {"bag": bag}, mesh, cap_factor=1.0,
+                                 adaptive=True)
+        got = sorted(r["v"] for r in out["out"].to_rows())
+        assert got == [float(i) for i in range(64)], got
+        assert m["overflow_rows"] == 0 and m["size_need_0"] == 8, m
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_exchange_elision_and_shuffle_stats():
+    """Partitioning-aware elision: join -> sum_by on the same key moves
+    probe rows across the wire exactly once; co-partitioned joins
+    exchange neither side; legacy mode does neither optimization."""
+    out = run_sub("""
+        from repro.columnar.table import FlatBag
+        L = FlatBag.from_rows([{"k": i % 7, "v": float(i)}
+                               for i in range(64)],
+                              {"k": "int", "v": "real"}, capacity=64)
+        R = FlatBag.from_rows([{"k": i, "w": float(10 * i)}
+                               for i in range(8)],
+                              {"k": "int", "w": "real"}, capacity=8)
+        mesh = device_mesh_1d(8)
+        want = {}
+        for i in range(64):
+            want[i % 7] = want.get(i % 7, 0.0) + float(i)
+
+        def fn(env, ctx):
+            j = ctx.join(env["L"], env["R"], ("k",), ("k",))
+            return {"out": ctx.sum_by(j, ("k",), ("v",),
+                                      local_preagg=False)}
+
+        for mode, n_ex, n_el in (("packed", 2, 1), ("legacy", 3, 0)):
+            out, m = run_distributed(fn, {"L": L, "R": R}, mesh,
+                                     cap_factor=16.0, shuffle_mode=mode)
+            got = sorted((r["k"], r["v"]) for r in out["out"].to_rows())
+            assert got == sorted(want.items()), (mode, got)
+            assert m["exchanges"] == n_ex, (mode, m)
+            assert m["exchanges_elided"] == n_el, (mode, m)
+        # a pre-partitioned probe flows through sum_by AND dedup with no
+        # further exchange: one wire crossing for the whole pipeline
+        def fn2(env, ctx):
+            a = ctx.exchange(env["L"], ("k",))
+            s = ctx.sum_by(a, ("k",), ("v",), local_preagg=False)
+            return {"out": ctx.dedup(s, ("k",))}
+        out, m = run_distributed(fn2, {"L": L, "R": R}, mesh,
+                                 cap_factor=16.0)
+        got = sorted(r["k"] for r in out["out"].to_rows())
+        assert got == list(range(7)), got
+        assert m["exchanges"] == 1 and m["exchanges_elided"] == 2, m
+        # co-partitioned join: neither side moves again
+        def fn3(env, ctx):
+            a = ctx.exchange(env["L"], ("k",))
+            b = ctx.exchange(env["R"], ("k",))
+            j = ctx.join(a, b, ("k",), ("k",))
+            return {"out": ctx.sum_by(j, ("k",), ("v",),
+                                      local_preagg=False)}
+        out, m = run_distributed(fn3, {"L": L, "R": R}, mesh,
+                                 cap_factor=16.0)
+        got = sorted((r["k"], r["v"]) for r in out["out"].to_rows())
+        assert got == sorted(want.items()), got
+        assert m["exchanges"] == 2 and m["exchanges_elided"] == 3, m
+        # routing reuse: exchanging the SAME bag on the same key twice
+        # argsorts the destinations once (props.route_cache)
+        from repro.exec import dist as D
+        def fn4(env, ctx):
+            a = ctx.exchange(env["L"], ("k",))
+            b = ctx.exchange(env["L"], ("k",))
+            return {"a": a, "b": b}
+        out, m = run_distributed(fn4, {"L": L, "R": R}, mesh,
+                                 cap_factor=16.0)
+        assert m["exchanges"] == 2, m
+        assert D.SHUFFLE_STATS.get("route_argsort", 0) == 1, \
+            dict(D.SHUFFLE_STATS)
+        assert D.SHUFFLE_STATS.get("route_reuse", 0) == 1, \
+            dict(D.SHUFFLE_STATS)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_exchange_packed_kernel_path():
+    out = run_sub("""
+        from repro.columnar.table import FlatBag
+        rows = [{"k": i % 13, "v": float(i)} for i in range(64)]
+        bag = FlatBag.from_rows(rows, {"k": "int", "v": "real"},
+                                capacity=64)
+        mesh = device_mesh_1d(8)
+        def fn(env, ctx):
+            return {"out": ctx.exchange(env["bag"], ("k",))}
+        out, m = run_distributed(fn, {"bag": bag}, mesh, cap_factor=4.0,
+                                 use_kernel=True)
+        got = sorted((r["k"], r["v"]) for r in out["out"].to_rows())
+        want = sorted((r["k"], r["v"]) for r in rows)
+        assert got == want, (got, want)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_heavy_key_detection():
     out = run_sub("""
         import jax.numpy as jnp

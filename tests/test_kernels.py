@@ -128,6 +128,45 @@ def test_gather_rows_hypothesis(r, n, d, seed):
     assert (np.asarray(got) == np.asarray(want)).all()
 
 
+# -- packed-shuffle dest-scatter + column unpack ------------------------------
+
+from repro.kernels.shuffle_pack import (  # noqa: E402
+    pack_rows_pallas, unpack_cols_pallas)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 60), st.integers(1, 4),
+       st.integers(0, 3))
+def test_pack_rows_hypothesis(r, m, d, seed):
+    rng = np.random.RandomState(seed)
+    vals = rng.randint(-2 ** 62, 2 ** 62, size=(r, d)).astype(np.int64)
+    idx = rng.randint(-3, r + 3, m).astype(np.int32)   # includes oob
+    ok = rng.randint(0, 2, m).astype(bool)
+    got = pack_rows_pallas(jnp.asarray(vals), jnp.asarray(idx),
+                           jnp.asarray(ok), block_m=16, block_src=16)
+    want = R.pack_rows_ref(jnp.asarray(vals), jnp.asarray(idx),
+                           jnp.asarray(ok))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_pack_rows_all_masked():
+    vals = jnp.ones((9, 2), jnp.int64)
+    idx = jnp.arange(9, dtype=jnp.int32)
+    ok = jnp.zeros((9,), bool)
+    got = pack_rows_pallas(vals, idx, ok, block_m=4, block_src=4)
+    assert (np.asarray(got) == 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 70), st.integers(1, 5), st.integers(0, 3))
+def test_unpack_cols_hypothesis(m, d, seed):
+    rng = np.random.RandomState(seed)
+    buf = rng.randint(-2 ** 62, 2 ** 62, size=(m, d)).astype(np.int64)
+    got = unpack_cols_pallas(jnp.asarray(buf), block_t=16)
+    want = R.unpack_cols_ref(jnp.asarray(buf))
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
 # -- flash attention -----------------------------------------------------------
 
 ATTN_VARIANTS = [
