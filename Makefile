@@ -3,17 +3,23 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick bench ci
+.PHONY: test bench-quick bench serve-smoke ci
 
 test:
 	$(PY) -m pytest -x -q
 
-# CI gate: tier-1 tests plus the quick benchmark smoke. bench-quick
-# includes the distributed join->sum_by shuffle benchmark, which runs
-# in its own subprocess under --xla_force_host_platform_device_count=8
-# and asserts the packed exchange's elision + correctness — shuffle
-# regressions fail here, not in production.
-ci: test bench-quick
+# CI gate: tier-1 tests plus the quick benchmark smoke plus the
+# serving smoke. bench-quick includes the distributed join->sum_by
+# shuffle benchmark, which runs in its own subprocess under
+# --xla_force_host_platform_device_count=8 and asserts the packed
+# exchange's elision + correctness — shuffle regressions fail here,
+# not in production. serve-smoke asserts the plan-cache warm path
+# performs ZERO jax retracing (codegen.TRACE_STATS) and that
+# cross-assignment CSE evaluates a shared join subplan exactly once.
+ci: test bench-quick serve-smoke
+
+serve-smoke:
+	$(PY) -m benchmarks.serving --smoke
 
 # CPU-friendly perf smoke: runs every benchmark section except the
 # 8-virtual-device skew subprocess, fails on any Python exception, and

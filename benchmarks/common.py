@@ -29,12 +29,26 @@ def set_section(name: Optional[str]):
     CURRENT_SECTION = name
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float, derived: str = "",
+         compile_ms: Optional[float] = None,
+         warm_ms: Optional[float] = None, **extra):
+    """Emit one benchmark record. ``compile_ms`` / ``warm_ms`` split
+    one-time compilation (shredding + plan passes + tracing + XLA) from
+    the warm per-call time, so plan-cache wins are visible as separate
+    fields in the BENCH_<timestamp>.json perf trajectory."""
     line = f"{name},{us_per_call:.1f},{derived}"
+    rec = {"section": CURRENT_SECTION, "name": name,
+           "us_per_call": round(float(us_per_call), 1),
+           "derived": derived}
+    if compile_ms is not None:
+        rec["compile_ms"] = round(float(compile_ms), 2)
+        line += f",compile_ms={rec['compile_ms']}"
+    if warm_ms is not None:
+        rec["warm_ms"] = round(float(warm_ms), 3)
+        line += f",warm_ms={rec['warm_ms']}"
+    rec.update(extra)
     ROWS.append(line)
-    RECORDS.append({"section": CURRENT_SECTION, "name": name,
-                    "us_per_call": round(float(us_per_call), 1),
-                    "derived": derived})
+    RECORDS.append(rec)
     print(line, flush=True)
 
 

@@ -155,8 +155,9 @@ def run_dist(n: int = 4000):
         by_mode[r["mode"]] = r
         emit(f"dist_join_sum_by_{r['mode']}", r["seconds"] * 1e6,
              f"n={n};exchanges={r['exchanges']};elided={r['elided']};"
-             f"collectives={r['collectives']};overflow={r['overflow']};"
-             f"coldS={r['cold_seconds']:.2f}")
+             f"collectives={r['collectives']};overflow={r['overflow']}",
+             compile_ms=r["cold_seconds"] * 1e3,
+             warm_ms=r["seconds"] * 1e3)
     speed = by_mode["legacy"]["seconds"] / max(by_mode["packed"]["seconds"],
                                                1e-9)
     emit("dist_join_sum_by_packed_speedup", 0.0,

@@ -30,9 +30,13 @@ def main() -> None:
     print("name,us_per_call,derived")
     sections = []
     from benchmarks import (biomedical, fused_pipeline, representation,
-                            succinct, tpch_nested)
+                            serving, succinct, tpch_nested)
     sections.append(("tpch_nested (Fig.7)",
                      lambda: tpch_nested.run(scale=30 if args.quick else 60)))
+    sections.append(("serving (plan-cache query service)",
+                     lambda: serving.run(
+                         n_orders=300 if args.quick else 2000,
+                         invocations=20 if args.quick else 50)))
     sections.append(("fused_pipeline (order-aware executor)",
                      lambda: fused_pipeline.run(
                          n=5000 if args.quick else 20000,
@@ -64,9 +68,12 @@ def main() -> None:
     stamp = time.strftime("%Y%m%d_%H%M%S")
     by_section = {}
     for rec in common.RECORDS:
+        # keep every emitted field (us_per_call, derived, and the
+        # compile_ms/warm_ms split) in the perf-trajectory file
+        payload_rec = {k: v for k, v in rec.items()
+                       if k not in ("section", "name")}
         by_section.setdefault(rec["section"] or "unsectioned", {})[
-            rec["name"]] = {"us_per_call": rec["us_per_call"],
-                            "derived": rec["derived"]}
+            rec["name"]] = payload_rec
     payload = {"timestamp": stamp, "quick": args.quick,
                "failed_sections": failed, "sections": by_section}
     out_path = f"{args.out_dir}/BENCH_{stamp}.json"

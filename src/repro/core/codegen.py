@@ -1,10 +1,24 @@
 """Code generation (paper §3.2/§4.6) — running compiled plans over the
 columnar backend, locally or distributed.
 
-* ``run_flat_program``  — executes a materialized shredded program
-  (output of ``materialization.shred_program``): compiles each
-  assignment with ``compile_flat_query`` (+ optimizer passes), evaluates
-  in sequence, returns the environment of FlatBags.
+* ``compile_program``   — compiles a materialized shredded program
+  (output of ``materialization.shred_program``) into a ``ProgramGraph``:
+  per-assignment plan passes, then the whole-program passes (dead
+  assignment/column elimination driven by what ``unshred_parts``
+  consumes, cross-assignment CSE — see core.plans).
+* ``run_flat_program``  — evaluates the compiled node sequence eagerly,
+  returning the environment of FlatBags (interpreter-style path; the
+  serving path is ``jit_program``).
+* ``jit_program``       — one topologically scheduled ``jax.jit``
+  callable for the whole program: shared subplans evaluate once, dead
+  intermediates are freed by XLA inside the single computation, and
+  ``N.Param`` bindings arrive as runtime arguments so a warm executable
+  re-runs with new parameters without any tracing (``TRACE_STATS``
+  counts traces; the serving benchmark asserts it stays flat).
+* ``compile_program_distributed`` — the same scheduler routed through
+  ``exec.dist.compile_distributed`` / ``DistRunner``: local and
+  distributed execution share one ProgramGraph and the plan passes run
+  once per program, not once per assignment.
 * ``run_standard``      — executes a StandardPlan (wide flattening +
   bottom-up Gamma_u nest rebuild), returning nested *parts*.
 * ``columnar_shred_inputs`` — value-shreds nested Python rows into
@@ -18,6 +32,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.columnar.table import FlatBag
@@ -25,8 +40,10 @@ from repro.exec import ops as X
 from . import interpreter as I
 from . import nrc as N
 from .materialization import Manifest, ShreddedProgram, mat_input_name
-from .plans import ExecSettings, MapP, Plan, annotate_orders, \
-    annotate_partitioning, eval_plan, push_aggregation, push_order, \
+from .plans import ExecSettings, MapP, Plan, ProgramGraph, \
+    annotate_orders, annotate_partitioning, build_program_graph, \
+    collect_params, cse_program, dce_program, eval_plan, \
+    prune_program_columns, push_aggregation, push_order, \
     push_partitioning, required_columns
 from .unnesting import Catalog, NestSpec, StandardPlan, compile_flat_query
 
@@ -35,15 +52,24 @@ from .unnesting import Catalog, NestSpec, StandardPlan, compile_flat_query
 # schemas / ingest
 # ---------------------------------------------------------------------------
 
-def schema_of(elem: N.TupleT) -> Dict[str, str]:
+def schema_of(elem: N.TupleT, where: str = "") -> Dict[str, str]:
+    """Columnar schema of a flat tuple type. ``where`` names the
+    assignment / input and attribute path for error messages."""
     out = {}
+    ctx = f" (in {where})" if where else ""
     for n, t in elem.fields:
         if isinstance(t, N.LabelT):
             out[n] = "label"
         elif isinstance(t, N.ScalarT):
             out[n] = t.kind
         else:
-            raise TypeError(f"non-flat attribute {n}: {t!r}")
+            raise TypeError(
+                f"schema_of: attribute {n!r}{ctx} has non-flat type "
+                f"{t!r}; a FlatBag column must be scalar- or "
+                f"label-typed — nested bags belong in their own "
+                f"materialized dictionary (R__D_<path>), so this "
+                f"usually means the value was not shredded before "
+                f"ingest (use shred_program / columnar_shred_inputs)")
     return out
 
 
@@ -63,7 +89,7 @@ def columnar_shred_inputs(inputs: Dict[str, list],
         for path, bag_rows in parts.items():
             key = mat_input_name(name, path)
             flat = _flat_elem(ty, path, root=name)
-            schema = schema_of(flat)
+            schema = schema_of(flat, where=f"input {key}")
             if path:
                 schema["label"] = "label"
             env[key] = FlatBag.from_rows(bag_rows, schema,
@@ -92,8 +118,10 @@ def _flat_elem(ty: N.BagT, path: tuple, root: str) -> N.TupleT:
 
 @dataclass
 class CompiledProgram:
-    plans: List[Tuple[str, Plan]]          # (assignment name, plan)
+    plans: List[Tuple[str, Plan]]          # (node name, plan), topo order
     shredded: ShreddedProgram
+    graph: Optional[ProgramGraph] = None   # whole-program DAG (post-passes)
+    outputs: tuple = ()                    # externally consumed names
 
     def pretty(self) -> str:
         from .plans import plan_pretty
@@ -105,33 +133,174 @@ class CompiledProgram:
         return "\n".join(out)
 
 
+def program_outputs(sp: ShreddedProgram) -> tuple:
+    """The names ``unshred_parts`` consumes: every manifest's top bag
+    and materialized dictionaries (order-preserving, deduplicated)."""
+    outs: List[str] = []
+    for man in sp.manifests.values():
+        outs.append(man.top)
+        outs.extend(man.dicts.values())
+    return tuple(dict.fromkeys(outs))
+
+
 def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
-                    optimize: bool = True) -> CompiledProgram:
+                    optimize: bool = True, cse: bool = True,
+                    outputs: Optional[tuple] = None) -> CompiledProgram:
+    """Compile the assignment sequence into a ProgramGraph.
+
+    Per-assignment passes (aggregation/order/partitioning pushdown) run
+    first; then the whole-program passes: dead-assignment elimination
+    and dead-column pruning driven by ``outputs`` (default: everything
+    unshredding consumes — narrow it to prune more aggressively), and
+    cross-assignment CSE so structurally identical subplans between TOP
+    and dictionary assignments are hash-consed into shared nodes."""
     catalog = catalog or Catalog()
-    plans = []
+    named: List[Tuple[str, Plan]] = []
+    roles: Dict[str, str] = {}
     for a in sp.program.assignments:
         plan = compile_flat_query(a.expr, catalog)
         if optimize:
             plan = push_aggregation(plan)
             plan = push_order(plan)
             plan = push_partitioning(plan)
-            plan = required_columns(plan, None)
-            # annotate last: required_columns rebuilds every node, which
-            # would discard the EXPLAIN attributes
-            plan = annotate_orders(plan)
-            plan = annotate_partitioning(plan)
-        plans.append((a.name, plan))
-    return CompiledProgram(plans, sp)
+        named.append((a.name, plan))
+        roles[a.name] = a.role
+    outs = tuple(outputs) if outputs is not None else program_outputs(sp)
+    graph = build_program_graph(named, outs, roles)
+    if optimize:
+        graph = dce_program(graph)
+        graph = prune_program_columns(graph)
+        if cse:
+            graph = cse_program(graph)
+        # annotate last: the pruning pass rebuilds every node, which
+        # would discard the EXPLAIN attributes
+        for nd in graph.nodes:
+            annotate_orders(nd.plan)
+            annotate_partitioning(nd.plan)
+    return CompiledProgram([(nd.name, nd.plan) for nd in graph.nodes],
+                           sp, graph, outs)
 
 
 def run_flat_program(cp: CompiledProgram, env: Dict[str, FlatBag],
                      settings: Optional[ExecSettings] = None
                      ) -> Dict[str, FlatBag]:
+    """Eager evaluation of the program DAG (one eval per node in topo
+    order — shared CSE nodes therefore evaluate once). The jitted
+    serving path is ``jit_program``; both share this schedule."""
     settings = settings or ExecSettings()
     env = dict(env)
     for name, plan in cp.plans:
         env[name] = eval_plan(plan, env, settings)
     return env
+
+
+# ---------------------------------------------------------------------------
+# whole-program jit executable (the plan-cache unit)
+# ---------------------------------------------------------------------------
+
+TRACE_STATS: Dict[str, int] = {}
+"""Host-side trace counter: incremented INSIDE the program function, so
+it only moves when jax actually (re)traces. Warm plan-cache invocations
+must keep it flat — asserted by `make ci` via the serving smoke."""
+
+
+def reset_trace_stats() -> None:
+    TRACE_STATS.clear()
+
+
+@dataclass
+class ProgramExecutable:
+    """One jitted callable for a whole shredded program. Calling it with
+    an environment (and optional parameter bindings for the program's
+    ``N.Param``s) returns the output bags; repeat calls with equal
+    shapes/schemas re-enter the compiled computation with zero tracing
+    and zero plan-pass work."""
+    cp: CompiledProgram
+    outputs: tuple
+    param_defaults: Dict[str, object]
+    _fn: Callable
+    raw_fn: Callable                       # un-jitted (vmap/debug entry)
+    # names accepted by bind() beyond the referenced params: lifted
+    # constants whose expression the dead-code/column passes eliminated
+    # (they bind to nothing, silently). Anything outside defaults +
+    # accepted is a caller typo and raises.
+    accepted: frozenset = frozenset()
+
+    def bind(self, params: Optional[Dict[str, object]] = None
+             ) -> Dict[str, jnp.ndarray]:
+        """Full binding dict for a call: defaults overridden by
+        ``params``."""
+        p = dict(self.param_defaults)
+        if params:
+            unknown = set(params) - set(p) - self.accepted
+            assert not unknown, (
+                f"unknown parameter(s) {sorted(unknown)}; this program "
+                f"binds {sorted(p)}"
+                + (f" and tolerates eliminated {sorted(self.accepted)}"
+                   if self.accepted else ""))
+            p.update({k: v for k, v in params.items() if k in p})
+        return {k: jnp.asarray(v) for k, v in p.items()}
+
+    def __call__(self, env: Dict[str, FlatBag],
+                 params: Optional[Dict[str, object]] = None
+                 ) -> Dict[str, FlatBag]:
+        return self._fn(env, self.bind(params))
+
+
+def jit_program(cp: CompiledProgram,
+                settings: Optional[ExecSettings] = None,
+                jit: bool = True, donate_env: bool = False
+                ) -> ProgramExecutable:
+    """Compile the program DAG into ONE topologically scheduled jitted
+    callable. Dead intermediates never leave the computation (XLA frees
+    them as soon as their last consumer runs); ``donate_env=True``
+    additionally donates the input environment's buffers (one-shot
+    pipelines only — donated bags are unusable afterwards)."""
+    base = settings or ExecSettings()
+    outputs = tuple(cp.outputs) or tuple(n for n, _ in cp.plans)
+
+    def fn(env, params):
+        TRACE_STATS["traces"] = TRACE_STATS.get("traces", 0) + 1
+        s = ExecSettings(use_kernel=base.use_kernel,
+                         default_expansion=base.default_expansion,
+                         dist=None, params=params)
+        local = dict(env)
+        for name, plan in cp.plans:
+            local[name] = eval_plan(plan, local, s)
+        return {o: local[o] for o in outputs}
+
+    cfn = jax.jit(fn, donate_argnums=(0,) if donate_env else ()) \
+        if jit else fn
+    defaults = collect_params(cp.graph) if cp.graph is not None else {}
+    return ProgramExecutable(cp, outputs, defaults, cfn, fn)
+
+
+def compile_program_distributed(
+        cp: CompiledProgram, env: Dict[str, FlatBag], mesh,
+        use_kernel: bool = False, outputs: Optional[tuple] = None,
+        **dist_kwargs):
+    """Run the SAME program schedule under shard_map: one
+    ``exec.dist.compile_distributed`` region evaluates every node of the
+    DAG (shared subplans once, exchanges elided across assignment
+    boundaries via delivered partitionings). Returns
+    ``(DistRunner, outputs, metrics)`` — the runner is the warm path
+    (same jitted shard_map, no retrace), and ``adaptive=True`` resolves
+    bucket capacities before the runner is handed out (the serving
+    warmup). ``N.Param``s evaluate at their lifted defaults here —
+    parameterized serving is a local-path feature for now."""
+    from repro.exec import dist as D
+    outs = tuple(outputs) if outputs is not None \
+        else (tuple(cp.outputs) or tuple(n for n, _ in cp.plans))
+
+    def fn(env_local, ctx):
+        s = ExecSettings(use_kernel=use_kernel, dist=ctx)
+        local = dict(env_local)
+        for name, plan in cp.plans:
+            local[name] = eval_plan(plan, local, s)
+        return {o: local[o] for o in outs}
+
+    return D.compile_distributed(fn, env, mesh, use_kernel=use_kernel,
+                                 **dist_kwargs)
 
 
 # ---------------------------------------------------------------------------

@@ -61,6 +61,8 @@ def eval_expr(e: N.Expr, env: Dict[str, Any]) -> Any:
     """Evaluate an NRC / NRC^{Lbl+lambda} expression under ``env``."""
     if isinstance(e, N.Const):
         return e.value
+    if isinstance(e, N.Param):
+        return env.get("__params__", {}).get(e.name, e.default)
     if isinstance(e, N.Var):
         if e.name not in env:
             raise NameError(f"unbound variable {e.name}")

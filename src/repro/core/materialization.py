@@ -87,7 +87,8 @@ def replace_symbolic_dicts(e: N.Expr, resolver: Resolver) -> N.Expr:
                 body = N.subst(d.body, {d.param.name: lab})
                 return go(_static_match(body))
             raise TypeError(f"Lookup over non-dictionary {type(d).__name__}")
-        if isinstance(x, (N.Const, N.Var, N.EmptyBag, N.InputDictRef)):
+        if isinstance(x, (N.Const, N.Param, N.Var, N.EmptyBag,
+                          N.InputDictRef)):
             return x
         if isinstance(x, N.Field):
             return N.Field(go(x.base), x.attr)

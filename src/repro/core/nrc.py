@@ -240,6 +240,35 @@ class Var(Expr):
 
 
 @dataclass(frozen=True)
+class Param(Expr):
+    """A runtime parameter — a constant lifted out of the query text so
+    one compiled program serves a whole family of parameterized queries
+    (the plan-cache contract, DESIGN.md "Whole-program compilation").
+
+    Scalar-typed only. ``default`` is the value the parameter was lifted
+    from; execution paths substitute it whenever no binding is supplied,
+    so a lifted program evaluated without parameters behaves exactly
+    like the original."""
+    name: str
+    ty: Type
+    default: Any = None
+
+    def __repr__(self) -> str:
+        return f"Param({self.name}={self.default!r})"
+
+
+LIFTABLE_KINDS = ("int", "real", "bool", "date")
+
+
+def liftable_const(e: Expr) -> bool:
+    """Constants eligible for parameter lifting: scalar kinds whose
+    runtime value is a plain number (strings stay inline — they are
+    dictionary-encoded at ingest and have no stable runtime image)."""
+    return (isinstance(e, Const) and isinstance(e.ty, ScalarT)
+            and e.ty.kind in LIFTABLE_KINDS)
+
+
+@dataclass(frozen=True)
 class Field(Expr):
     base: Expr
     attr: str
@@ -589,7 +618,7 @@ class Program:
 
 def children(e: Expr) -> list:
     """Immediate sub-expressions of a node."""
-    if isinstance(e, (Const, Var, EmptyBag, InputDictRef)):
+    if isinstance(e, (Const, Var, Param, EmptyBag, InputDictRef)):
         return []
     if isinstance(e, Field):
         return [e.base]
@@ -706,7 +735,7 @@ def subst(e: Expr, mapping: Mapping[str, Expr]) -> Expr:
         return e
     if isinstance(e, Var):
         return mapping.get(e.name, e)
-    if isinstance(e, (Const, EmptyBag, InputDictRef)):
+    if isinstance(e, (Const, Param, EmptyBag, InputDictRef)):
         return e
     if isinstance(e, Field):
         base = subst(e.base, mapping)
@@ -766,7 +795,7 @@ def inline_lets(e: Expr) -> Expr:
     """Recursively inline let bindings (paper Fig. 5 NORMALIZE)."""
     if isinstance(e, LetE):
         return inline_lets(subst(e.body, {e.var.name: inline_lets(e.value)}))
-    if isinstance(e, (Const, Var, EmptyBag, InputDictRef)):
+    if isinstance(e, (Const, Var, Param, EmptyBag, InputDictRef)):
         return e
     if isinstance(e, Field):
         base = inline_lets(e.base)
@@ -814,6 +843,141 @@ def inline_lets(e: Expr) -> Expr:
     raise TypeError(f"inline_lets: unknown node {type(e).__name__}")
 
 
+def map_expr(e: Expr, f: Callable[[Expr], Expr]) -> Expr:
+    """Bottom-up rebuild: children first, then ``f`` at every node.
+    ``f`` must preserve the node's type (used by parameter lifting and
+    other local rewrites)."""
+    def go(x: Expr) -> Expr:
+        if isinstance(x, (Const, Var, Param, EmptyBag, InputDictRef)):
+            return f(x)
+        if isinstance(x, Field):
+            return f(Field(go(x.base), x.attr))
+        if isinstance(x, TupleE):
+            return f(TupleE(tuple((n, go(v)) for n, v in x.items)))
+        if isinstance(x, Singleton):
+            return f(Singleton(go(x.elem)))
+        if isinstance(x, GetE):
+            return f(GetE(go(x.bag_expr)))
+        if isinstance(x, ForUnion):
+            return f(ForUnion(x.var, go(x.source), go(x.body)))
+        if isinstance(x, UnionE):
+            return f(UnionE(go(x.left), go(x.right)))
+        if isinstance(x, LetE):
+            return f(LetE(x.var, go(x.value), go(x.body)))
+        if isinstance(x, IfThen):
+            return f(IfThen(go(x.cond), go(x.then),
+                            go(x.els) if x.els is not None else None))
+        if isinstance(x, Cmp):
+            return f(Cmp(x.op, go(x.left), go(x.right)))
+        if isinstance(x, BoolOp):
+            return f(BoolOp(x.op, go(x.left), go(x.right)))
+        if isinstance(x, Not):
+            return f(Not(go(x.inner)))
+        if isinstance(x, Arith):
+            return f(Arith(x.op, go(x.left), go(x.right)))
+        if isinstance(x, DeDup):
+            return f(DeDup(go(x.bag_expr)))
+        if isinstance(x, GroupBy):
+            return f(GroupBy(go(x.bag_expr), x.keys))
+        if isinstance(x, SumBy):
+            return f(SumBy(go(x.bag_expr), x.keys, x.values))
+        if isinstance(x, NewLabel):
+            return f(NewLabel(x.tag,
+                              tuple((n, go(v)) for n, v in x.captures)))
+        if isinstance(x, MatchLabel):
+            return f(MatchLabel(go(x.label), x.tag, x.params, go(x.body)))
+        if isinstance(x, LambdaE):
+            return f(LambdaE(x.param, go(x.body)))
+        if isinstance(x, LookupE):
+            return f(LookupE(go(x.dict_expr), go(x.label)))
+        if isinstance(x, MatLookup):
+            return f(MatLookup(go(x.matdict), go(x.label)))
+        raise TypeError(f"map_expr: unknown node {type(x).__name__}")
+
+    return go(e)
+
+
+def lift_constants(e: Expr, prefix: str = "__p",
+                   values: Optional[list] = None) -> tuple:
+    """Replace every liftable constant with a ``Param`` named by its
+    pre-order position; appends the lifted values to ``values``.
+    Returns ``(lifted_expr, values)``.
+
+    Two queries that differ only in liftable constant values lift to the
+    SAME expression with the SAME parameter names — the basis of the
+    plan-cache fingerprint (serve.query_service)."""
+    vals: list = values if values is not None else []
+
+    def f(x: Expr) -> Expr:
+        if liftable_const(x):
+            p = Param(f"{prefix}{len(vals)}", x.ty, default=x.value)
+            vals.append(x.value)
+            return p
+        return x
+
+    # map_expr is bottom-up, which does not give pre-order numbering;
+    # numbering only needs to be DETERMINISTIC, and bottom-up
+    # left-to-right is.
+    return map_expr(e, f), vals
+
+
+def expr_fingerprint(e: Expr) -> tuple:
+    """Structural fingerprint of an expression: a nested tuple that is
+    equal iff the expressions are structurally identical (types
+    included, Param defaults excluded). Hashable."""
+    if isinstance(e, Const):
+        return ("const", e.value, repr(e.ty))
+    if isinstance(e, Param):
+        return ("param", e.name, repr(e.ty))
+    if isinstance(e, Var):
+        return ("var", e.name, repr(e.ty))
+    if isinstance(e, Field):
+        return ("field", expr_fingerprint(e.base), e.attr)
+    if isinstance(e, TupleE):
+        return ("tuple",) + tuple((n, expr_fingerprint(v))
+                                  for n, v in e.items)
+    if isinstance(e, EmptyBag):
+        return ("empty", repr(e.ty))
+    if isinstance(e, ForUnion):
+        return ("for", e.var.name, expr_fingerprint(e.source),
+                expr_fingerprint(e.body))
+    if isinstance(e, LetE):
+        return ("let", e.var.name, expr_fingerprint(e.value),
+                expr_fingerprint(e.body))
+    if isinstance(e, IfThen):
+        return ("if", expr_fingerprint(e.cond), expr_fingerprint(e.then),
+                expr_fingerprint(e.els) if e.els is not None else None)
+    if isinstance(e, (Cmp, BoolOp, Arith)):
+        return (type(e).__name__, e.op, expr_fingerprint(e.left),
+                expr_fingerprint(e.right))
+    if isinstance(e, GroupBy):
+        return ("groupby", expr_fingerprint(e.bag_expr), e.keys)
+    if isinstance(e, SumBy):
+        return ("sumby", expr_fingerprint(e.bag_expr), e.keys, e.values)
+    if isinstance(e, NewLabel):
+        return ("newlabel", e.tag,
+                tuple((n, expr_fingerprint(v)) for n, v in e.captures))
+    if isinstance(e, MatchLabel):
+        return ("match", expr_fingerprint(e.label), e.tag,
+                tuple(p.name for p in e.params), expr_fingerprint(e.body))
+    if isinstance(e, LambdaE):
+        return ("lam", e.param.name, expr_fingerprint(e.body))
+    if isinstance(e, InputDictRef):
+        return ("idict", e.name, e.path)
+    if isinstance(e, (Singleton, GetE, Not, DeDup, UnionE, LookupE,
+                      MatLookup)):
+        return (type(e).__name__,) + tuple(expr_fingerprint(c)
+                                           for c in children(e))
+    raise TypeError(f"expr_fingerprint: unknown node {type(e).__name__}")
+
+
+def program_fingerprint(p: Program) -> tuple:
+    """Structural fingerprint of a whole program (assignment names,
+    roles and expression structures)."""
+    return tuple((a.name, a.role, a.path, expr_fingerprint(a.expr))
+                 for a in p.assignments)
+
+
 # ---------------------------------------------------------------------------
 # Pretty printer (debugging / plan inspection)
 # ---------------------------------------------------------------------------
@@ -823,6 +987,8 @@ def pretty(e: Expr, indent: int = 0) -> str:
 
     if isinstance(e, Const):
         return repr(e.value)
+    if isinstance(e, Param):
+        return f"${e.name}"
     if isinstance(e, Var):
         return e.name
     if isinstance(e, Field):

@@ -121,10 +121,40 @@ class FusedJoinAggP(Plan):
     exchange_on: Optional[tuple] = None
 
 
+@dataclass
+class RefP(Plan):
+    """Reference to a previously evaluated program node (a named
+    assignment or a CSE-extracted shared subplan). Evaluates to the
+    environment bag under a column rename:
+
+    * ``rename``    — exact (old_col, new_col) pairs for explicitly
+      named output columns (projections, derived keys);
+    * ``alias_map`` — (old_alias, new_alias) pairs applied by prefix to
+      scan-aliased columns (``old.attr`` -> ``new.attr``) whose full
+      set is only known at runtime.
+
+    Physical props are renamed, never copied — consumers of one shared
+    node share its accumulated key/build/route caches."""
+    name: str
+    rename: tuple = ()
+    alias_map: tuple = ()
+
+
 def plan_pretty(p: Plan, indent: int = 0) -> str:
     pad = "  " * indent
     if isinstance(p, ScanP):
         return f"{pad}Scan({p.bag} as {p.alias})"
+    if isinstance(p, _PrunedScan):
+        return (f"{pad}Scan({p.inner.bag} as {p.inner.alias}; "
+                f"keep={sorted(p.keep)})")
+    if isinstance(p, RefP):
+        mods = []
+        if p.alias_map:
+            mods += [f"{a}->{b}" for a, b in p.alias_map]
+        if p.rename:
+            mods += [f"{a}->{b}" for a, b in p.rename]
+        return f"{pad}Ref({p.name}" + (f"; {', '.join(mods)}" if mods
+                                       else "") + ")"
     if isinstance(p, SelectP):
         return f"{pad}Select[{N.pretty(p.pred)}]\n{plan_pretty(p.child, indent+1)}"
     if isinstance(p, MapP):
@@ -166,29 +196,40 @@ def plan_pretty(p: Plan, indent: int = 0) -> str:
 # scalar column expressions -> jnp
 # ---------------------------------------------------------------------------
 
-def eval_col_expr(e: N.Expr, bag: FlatBag) -> jnp.ndarray:
+def eval_col_expr(e: N.Expr, bag: FlatBag,
+                  params: Optional[Dict[str, jnp.ndarray]] = None
+                  ) -> jnp.ndarray:
     if isinstance(e, N.Var):
         return bag.col(e.name)
     if isinstance(e, N.Const):
         return jnp.asarray(e.value)
+    if isinstance(e, N.Param):
+        if params is not None and e.name in params:
+            return jnp.asarray(params[e.name])
+        assert e.default is not None, (
+            f"unbound parameter {e.name} with no default")
+        return jnp.asarray(e.default)
     if isinstance(e, N.Arith):
-        l, r = eval_col_expr(e.left, bag), eval_col_expr(e.right, bag)
+        l = eval_col_expr(e.left, bag, params)
+        r = eval_col_expr(e.right, bag, params)
         return {"+": l + r, "-": l - r, "*": l * r,
                 "/": l / jnp.where(r == 0, 1, r)}[e.op]
     if isinstance(e, N.Cmp):
-        l, r = eval_col_expr(e.left, bag), eval_col_expr(e.right, bag)
+        l = eval_col_expr(e.left, bag, params)
+        r = eval_col_expr(e.right, bag, params)
         return {"==": l == r, "!=": l != r, "<": l < r, "<=": l <= r,
                 ">": l > r, ">=": l >= r}[e.op]
     if isinstance(e, N.BoolOp):
-        l, r = eval_col_expr(e.left, bag), eval_col_expr(e.right, bag)
+        l = eval_col_expr(e.left, bag, params)
+        r = eval_col_expr(e.right, bag, params)
         return (l & r) if e.op == "&&" else (l | r)
     if isinstance(e, N.Not):
-        return ~eval_col_expr(e.inner, bag)
+        return ~eval_col_expr(e.inner, bag, params)
     if isinstance(e, N.IfThen):
-        c = eval_col_expr(e.cond, bag)
-        t = eval_col_expr(e.then, bag)
+        c = eval_col_expr(e.cond, bag, params)
+        t = eval_col_expr(e.then, bag, params)
         assert e.els is not None, "scalar if needs else in columnar exec"
-        f = eval_col_expr(e.els, bag)
+        f = eval_col_expr(e.els, bag, params)
         return jnp.where(c, t, f)
     if isinstance(e, N.NewLabel):
         # columnar labels: one capture -> the key itself (exact);
@@ -197,7 +238,7 @@ def eval_col_expr(e: N.Expr, bag: FlatBag) -> jnp.ndarray:
         # construction and lookup sides evaluate the same expression, so
         # equality is preserved (collision odds ~2^-64, DESIGN §7).
         from repro.exec.hashing import combine64
-        return combine64([eval_col_expr(v, bag).astype(jnp.int64)
+        return combine64([eval_col_expr(v, bag, params).astype(jnp.int64)
                           for _, v in e.captures])
     raise TypeError(f"eval_col_expr: {type(e).__name__} ({N.pretty(e)})")
 
@@ -220,6 +261,20 @@ def col_expr_deps(e: N.Expr) -> set:
 # evaluation
 # ---------------------------------------------------------------------------
 
+EVAL_STATS: Dict[str, int] = {}
+"""Host-side operator-evaluation counters (trace-time under jit, like
+``exec.ops.SORT_STATS``). The CSE tests assert a shared join subplan
+evaluates exactly once via ``EVAL_STATS['join']``."""
+
+
+def reset_eval_stats() -> None:
+    EVAL_STATS.clear()
+
+
+def _ecount(name: str) -> None:
+    EVAL_STATS[name] = EVAL_STATS.get(name, 0) + 1
+
+
 @dataclass
 class ExecSettings:
     """Execution knobs shared by local and distributed evaluation."""
@@ -227,6 +282,10 @@ class ExecSettings:
     default_expansion: float = 1.0
     # distributed context (None => local, single partition)
     dist: Optional[object] = None   # repro.exec.dist.DistContext
+    # runtime parameter bindings for N.Param column expressions
+    # (parameterized plan-cache execution; None => every Param falls
+    # back to its lifted default)
+    params: Optional[Dict[str, object]] = None
 
 
 def _scan(env: Dict[str, FlatBag], name: str, alias: str,
@@ -259,15 +318,20 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
     s = s or ExecSettings()
     if isinstance(p, ScanP):
         return _scan(env, p.bag, p.alias, p.with_rowid)
+    if isinstance(p, _PrunedScan):
+        return _eval_pruned(p, env, s)
+    if isinstance(p, RefP):
+        return _eval_ref(p, env)
     if isinstance(p, SelectP):
         child = eval_plan(p.child, env, s)
-        return X.select(child, eval_col_expr(p.pred, child))
+        return X.select(child, eval_col_expr(p.pred, child, s.params))
     if isinstance(p, MapP):
         child = eval_plan(p.child, env, s)
-        cols = {out: jnp.broadcast_to(eval_col_expr(e, child),
-                                      (child.capacity,)).astype(
-                    eval_col_expr(e, child).dtype)
-                for out, e in p.outputs}
+        cols = {}
+        for out, e in p.outputs:
+            v = eval_col_expr(e, child, s.params)
+            cols[out] = jnp.broadcast_to(v, (child.capacity,)).astype(
+                v.dtype)
         if p.extend:
             return child.with_columns(**cols)
         out = X.project(child, cols)
@@ -305,6 +369,7 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
         return _exec_join(p, left, right, s)
     if isinstance(p, SumAggP):
         child = eval_plan(p.child, env, s)
+        _ecount("sum_by")
         if s.dist is not None:
             return s.dist.sum_by(child, p.keys, p.vals,
                                  local_preagg=p.local_preagg,
@@ -314,15 +379,18 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
     if isinstance(p, DeDupP):
         child = eval_plan(p.child, env, s)
         cols = p.cols or tuple(child.columns)
+        _ecount("dedup")
         if s.dist is not None:
             return s.dist.dedup(child, cols, exchange_on=p.exchange_on)
         return X.dedup(child, cols)
     if isinstance(p, UnionP):
+        _ecount("union")
         return X.union_all(eval_plan(p.left, env, s),
                            eval_plan(p.right, env, s))
     if isinstance(p, OuterUnnestP):
         parent = eval_plan(p.parent, env, s)
         child = _scan(env, p.child_bag, p.alias)
+        _ecount("unnest")
         out_cap = int(child.capacity * p.expansion) + parent.capacity
         bag, _ = X.flatten_child(parent, child, p.parent_label,
                                  f"{p.alias}.{p.child_label}", out_cap,
@@ -334,6 +402,7 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
         left = eval_plan(p.join.left, env, s)
         right = eval_plan(p.join.right, env, s)
         joined = _exec_join(p.join, left, right, s)
+        _ecount("sum_by")
         if s.dist is not None:
             return s.dist.sum_by(joined, p.keys, p.vals,
                                  local_preagg=p.local_preagg,
@@ -343,8 +412,37 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
     raise TypeError(f"eval_plan: {type(p).__name__}")
 
 
+def _eval_ref(p: RefP, env: Dict[str, FlatBag]) -> FlatBag:
+    """Fetch a shared program node's bag, renamed into this use site's
+    column namespace. Arrays and physical-prop caches are shared."""
+    _ecount("ref")
+    if p.name not in env:
+        raise KeyError(
+            f"RefP: program node {p.name!r} not evaluated yet — shared "
+            f"subplans must be scheduled before their first use")
+    bag = env[p.name]
+    exact = dict(p.rename)
+    amap = dict(p.alias_map)
+    mapping = {}
+    for c in bag.data:
+        if c in exact:
+            mapping[c] = exact[c]
+        else:
+            head, sep, tail = c.partition(".")
+            if sep and head in amap:
+                mapping[c] = f"{amap[head]}.{tail}"
+    if not mapping:
+        return bag
+    data = {mapping.get(c, c): a for c, a in bag.data.items()}
+    props = None
+    if X.ORDER_AWARE and bag._props is not None:
+        props = bag.props.renamed(mapping)
+    return FlatBag(data, bag.valid, props)
+
+
 def _exec_join(p: JoinP, left: FlatBag, right: FlatBag,
                s: ExecSettings) -> FlatBag:
+    _ecount("join")
     if s.dist is not None:
         return s.dist.join(left, right, p.left_on, p.right_on, how=p.how,
                            unique_right=p.unique_right,
@@ -369,20 +467,66 @@ def _exec_join(p: JoinP, left: FlatBag, right: FlatBag,
 # optimizer (§3.3): projection pushdown + aggregation pushdown
 # ---------------------------------------------------------------------------
 
-def required_columns(p: Plan, needed: Optional[set] = None) -> Plan:
+def required_columns(p: Plan, needed: Optional[set] = None,
+                     ref_needs: Optional[dict] = None) -> Plan:
     """Projection pushdown: rebuild the plan so scans only carry columns
     that some ancestor actually uses. ``needed=None`` keeps everything
-    (root)."""
-    return _pushdown(p, needed)
+    (root).
+
+    ``ref_needs`` (optional accumulator, used by the program-level
+    dead-column pass): for every ``RefP`` encountered, the columns this
+    plan needs from the referenced node are mapped back through the
+    ref's rename into the *definition-site* namespace and unioned in as
+    ``ref_needs[name] |= cols`` (``None`` = all)."""
+    return _pushdown(p, needed, ref_needs)
 
 
-def _pushdown(p: Plan, needed: Optional[set]) -> Plan:
+def _ref_back(p: "RefP", needed: Optional[set]) -> Optional[set]:
+    """Map use-site column names through a RefP's rename back to the
+    referenced node's own column names. ``None`` passes through."""
+    if needed is None:
+        return None
+    inv_exact = {new: old for old, new in p.rename}
+    inv_alias = {new: old for old, new in p.alias_map}
+    out = set()
+    for c in needed:
+        if c in inv_exact:
+            out.add(inv_exact[c])
+            continue
+        head, sep, tail = c.partition(".")
+        if sep and head in inv_alias:
+            out.add(f"{inv_alias[head]}.{tail}")
+        else:
+            out.add(c)
+    return out
+
+
+def _pushdown(p: Plan, needed: Optional[set],
+              ref_needs: Optional[dict] = None) -> Plan:
+    if isinstance(p, RefP):
+        if ref_needs is not None:
+            back = _ref_back(p, needed)
+            cur = ref_needs.get(p.name, set())
+            ref_needs[p.name] = None if (back is None or cur is None) \
+                else cur | back
+        return p
+    if isinstance(p, _PrunedScan):
+        if needed is None:
+            return p
+        return _PrunedScan(p.inner, frozenset(set(p.keep) & needed))
     if isinstance(p, ScanP):
-        return p if needed is None else _PrunedScan(p, frozenset(needed))
+        if needed is None:
+            return p
+        # a scan only provides alias-prefixed columns: filter the junk
+        # other branches contributed (a join pushes its full needed set
+        # down both sides), keeping pruned-scan column sets canonical
+        pre = p.alias + "."
+        return _PrunedScan(p, frozenset(c for c in needed
+                                        if c.startswith(pre)))
     if isinstance(p, SelectP):
         deps = col_expr_deps(p.pred)
         child_needed = None if needed is None else set(needed) | deps
-        return SelectP(_pushdown(p.child, child_needed), p.pred)
+        return SelectP(_pushdown(p.child, child_needed, ref_needs), p.pred)
     if isinstance(p, MapP):
         if p.extend:
             outs = p.outputs
@@ -393,7 +537,8 @@ def _pushdown(p: Plan, needed: Optional[set]) -> Plan:
                 child_needed = None
             else:
                 child_needed = (set(needed) - {c for c, _ in outs}) | deps
-            return MapP(_pushdown(p.child, child_needed), outs, extend=True)
+            return MapP(_pushdown(p.child, child_needed, ref_needs), outs,
+                        extend=True)
         if needed is not None:
             outs = tuple((c, e) for c, e in p.outputs if c in needed)
         else:
@@ -401,34 +546,38 @@ def _pushdown(p: Plan, needed: Optional[set]) -> Plan:
         deps = set()
         for _, e in outs:
             deps |= col_expr_deps(e)
-        return MapP(_pushdown(p.child, deps), outs)
+        return MapP(_pushdown(p.child, deps, ref_needs), outs)
     if isinstance(p, JoinP):
         ln = None if needed is None else set(needed) | set(p.left_on)
         rn = None if needed is None else set(needed) | set(p.right_on)
-        return JoinP(_pushdown(p.left, ln), _pushdown(p.right, rn),
+        return JoinP(_pushdown(p.left, ln, ref_needs),
+                     _pushdown(p.right, rn, ref_needs),
                      p.left_on, p.right_on, p.how, p.unique_right,
                      p.expansion, p.broadcast, p.skew_aware, p.matched_col)
     if isinstance(p, SumAggP):
         cn = set(p.keys) | set(p.vals)
-        return SumAggP(_pushdown(p.child, cn), p.keys, p.vals,
+        return SumAggP(_pushdown(p.child, cn, ref_needs), p.keys, p.vals,
                        p.local_preagg, p.exchange_on)
     if isinstance(p, DeDupP):
         cn = None if p.cols is None else set(p.cols)
         if needed is not None and cn is not None:
             cn |= needed
-        return DeDupP(_pushdown(p.child, cn), p.cols, p.exchange_on)
+        return DeDupP(_pushdown(p.child, cn, ref_needs), p.cols,
+                      p.exchange_on)
     if isinstance(p, UnionP):
-        return UnionP(_pushdown(p.left, needed), _pushdown(p.right, needed))
+        return UnionP(_pushdown(p.left, needed, ref_needs),
+                      _pushdown(p.right, needed, ref_needs))
     if isinstance(p, OuterUnnestP):
         pn = None if needed is None else set(needed) | {p.parent_label}
-        return OuterUnnestP(_pushdown(p.parent, pn), p.child_bag, p.alias,
+        return OuterUnnestP(_pushdown(p.parent, pn, ref_needs), p.child_bag,
+                            p.alias,
                             p.parent_label, p.child_label, p.expansion,
                             p.matched_col, p.rowid_col)
     if isinstance(p, FusedJoinAggP):
         cn = set(p.keys) | set(p.vals)
         j = p.join
-        nj = JoinP(_pushdown(j.left, cn | set(j.left_on)),
-                   _pushdown(j.right, cn | set(j.right_on)),
+        nj = JoinP(_pushdown(j.left, cn | set(j.left_on), ref_needs),
+                   _pushdown(j.right, cn | set(j.right_on), ref_needs),
                    j.left_on, j.right_on, j.how, j.unique_right,
                    j.expansion, j.broadcast, j.skew_aware, j.matched_col)
         return FusedJoinAggP(nj, p.keys, p.vals, p.local_preagg,
@@ -446,18 +595,6 @@ def _eval_pruned(p: _PrunedScan, env, s) -> FlatBag:
     bag = _scan(env, p.inner.bag, p.inner.alias)
     keep = [c for c in bag.columns if c in p.keep]
     return bag.select_columns(keep)
-
-
-# register pruned scan in evaluator
-_orig_eval_plan = eval_plan
-
-
-def eval_plan(p: Plan, env: Dict[str, FlatBag],          # noqa: F811
-              s: Optional[ExecSettings] = None) -> FlatBag:
-    s = s or ExecSettings()
-    if isinstance(p, _PrunedScan):
-        return _eval_pruned(p, env, s)
-    return _orig_eval_plan(p, env, s)
 
 
 def push_aggregation(p: Plan) -> Plan:
@@ -760,3 +897,454 @@ def push_partitioning(p: Plan, desired: Optional[tuple] = None) -> Plan:
         return UnionP(push_partitioning(p.left, None),
                       push_partitioning(p.right, None))
     return p
+
+
+# ---------------------------------------------------------------------------
+# ProgramGraph: whole-program IR (paper Fig. 5 sequences as an explicit
+# DAG of named subplans with def/use edges). The shredded materialization
+# deliberately produces assignments whose TOP and dictionary plans share
+# large subplans; the passes below make that sharing physical:
+#
+#   * ``cse_program``       — hash-conses structurally identical subplans
+#     ACROSS assignments (modulo alias renaming) into shared nodes
+#     evaluated once, generalizing the per-alias ScanP memoization;
+#   * ``dce_program``       — drops assignments unreachable from the
+#     outputs ``unshred_parts`` actually consumes;
+#   * ``prune_program_columns`` — program-level dead-column elimination:
+#     each non-output assignment only computes columns some downstream
+#     consumer reads;
+#   * ``lift_plan_parameters`` — replaces literal constants with runtime
+#     ``N.Param``s so one compiled executable serves a parameterized
+#     query family (the plan-cache contract, serve.query_service).
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ProgramNode:
+    """One named subplan of a program DAG."""
+    name: str
+    plan: Plan
+    role: str = "plain"      # "top" | "dict" | "plain" | "shared"
+    deps: tuple = ()         # program/env names this plan reads
+
+
+@dataclass
+class ProgramGraph:
+    """Assignments as named subplans, in a valid evaluation order.
+    ``outputs`` are the externally consumed names (what unshredding /
+    the caller reads); everything else is an intermediate the optimizer
+    may prune or share."""
+    nodes: List[ProgramNode]
+    outputs: tuple
+
+    def names(self) -> list:
+        return [nd.name for nd in self.nodes]
+
+    def node(self, name: str) -> ProgramNode:
+        for nd in self.nodes:
+            if nd.name == name:
+                return nd
+        raise KeyError(name)
+
+    def pretty(self) -> str:
+        out = []
+        for nd in self.nodes:
+            out.append(f"{nd.name} <=  # role={nd.role} deps={nd.deps}")
+            out.append(plan_pretty(nd.plan, 1))
+            out.append("")
+        out.append(f"outputs: {self.outputs}")
+        return "\n".join(out)
+
+
+_CHILD_ATTRS = ("child", "left", "right", "parent", "join")
+
+
+def _plan_children(p: Plan) -> list:
+    return [getattr(p, a) for a in _CHILD_ATTRS if hasattr(p, a)]
+
+
+def _walk_plan(p: Plan):
+    yield p
+    for c in _plan_children(p):
+        yield from _walk_plan(c)
+
+
+def plan_deps(p: Plan) -> set:
+    """Environment names a plan reads (def/use edges of the DAG)."""
+    out: set = set()
+    for sub in _walk_plan(p):
+        if isinstance(sub, ScanP):
+            out.add(sub.bag)
+        elif isinstance(sub, _PrunedScan):
+            out.add(sub.inner.bag)
+        elif isinstance(sub, OuterUnnestP):
+            out.add(sub.child_bag)
+        elif isinstance(sub, RefP):
+            out.add(sub.name)
+    return out
+
+
+def build_program_graph(named_plans: Sequence[Tuple[str, Plan]],
+                        outputs: Sequence[str],
+                        roles: Optional[Dict[str, str]] = None
+                        ) -> ProgramGraph:
+    roles = roles or {}
+    nodes = [ProgramNode(name, plan, roles.get(name, "plain"),
+                         tuple(sorted(plan_deps(plan))))
+             for name, plan in named_plans]
+    return ProgramGraph(nodes, tuple(outputs))
+
+
+# -- canonical plan signatures (structural identity modulo alias names) ----
+
+class _Canon:
+    """Canonical renaming context for one subplan: scan aliases and
+    explicitly defined output columns get position-based ids, so two
+    structurally identical subplans that differ only in generated names
+    (fresh loop vars, derived key columns) produce the SAME signature.
+    The alias/column maps double as the rename recipe between a shared
+    definition site and each use site."""
+
+    def __init__(self):
+        self.aliases: Dict[str, str] = {}
+        self.defined: Dict[str, str] = {}
+
+    def define_alias(self, a: str) -> str:
+        if a not in self.aliases:
+            self.aliases[a] = f"@{len(self.aliases)}"
+        return self.aliases[a]
+
+    def define_col(self, c: str) -> str:
+        if c not in self.defined:
+            self.defined[c] = f"#{len(self.defined)}"
+        return self.defined[c]
+
+    def col(self, c: str) -> str:
+        if c in self.defined:
+            return self.defined[c]
+        head, sep, tail = c.partition(".")
+        if sep and head in self.aliases:
+            return f"{self.aliases[head]}.{tail}"
+        return c
+
+    def cols(self, cs) -> tuple:
+        return tuple(self.col(c) for c in cs)
+
+
+def _expr_sig(e: N.Expr, canon: _Canon):
+    if isinstance(e, N.Var):
+        return ("v", canon.col(e.name))
+    if isinstance(e, N.Const):
+        return ("c", e.value, repr(e.ty))
+    if isinstance(e, N.Param):
+        return ("p", e.name)
+    if isinstance(e, (N.Arith, N.Cmp, N.BoolOp)):
+        return (type(e).__name__, e.op, _expr_sig(e.left, canon),
+                _expr_sig(e.right, canon))
+    if isinstance(e, N.Not):
+        return ("not", _expr_sig(e.inner, canon))
+    if isinstance(e, N.IfThen):
+        return ("if", _expr_sig(e.cond, canon), _expr_sig(e.then, canon),
+                _expr_sig(e.els, canon) if e.els is not None else None)
+    if isinstance(e, N.NewLabel):
+        # tag and capture names are trace metadata: the runtime label is
+        # combine64 of the capture values only, so they are excluded —
+        # labels built from equal captures are interchangeable.
+        return ("lbl", tuple(_expr_sig(v, canon) for _, v in e.captures))
+    raise TypeError(f"_expr_sig: {type(e).__name__}")
+
+
+def _plan_sig(p: Plan, canon: _Canon):
+    if isinstance(p, ScanP):
+        canon.define_alias(p.alias)
+        return ("scan", p.bag, p.with_rowid)
+    if isinstance(p, _PrunedScan):
+        # keep sets are EXCLUDED: occurrences that differ only in which
+        # columns projection pushdown kept still merge — the shared
+        # definition widens each scan to the union of its use sites'
+        # keeps (see cse_program), and every operator above is
+        # insensitive to extra carried columns (assignment roots project
+        # explicitly; DeDupP(None) only ever sits above such a root).
+        canon.define_alias(p.inner.alias)
+        return ("pscan", p.inner.bag, p.inner.with_rowid)
+    if isinstance(p, RefP):
+        return ("ref", p.name, tuple(sorted(p.rename)),
+                tuple(sorted(p.alias_map)))
+    if isinstance(p, SelectP):
+        c = _plan_sig(p.child, canon)
+        return ("select", c, _expr_sig(p.pred, canon))
+    if isinstance(p, MapP):
+        c = _plan_sig(p.child, canon)
+        outs = tuple((canon.define_col(o), _expr_sig(e, canon))
+                     for o, e in p.outputs)
+        return ("map", c, outs, p.extend)
+    if isinstance(p, JoinP):
+        l = _plan_sig(p.left, canon)
+        r = _plan_sig(p.right, canon)
+        mc = canon.define_col(p.matched_col) if p.how == "left_outer" \
+            else p.matched_col
+        return ("join", l, r, canon.cols(p.left_on),
+                canon.cols(p.right_on), p.how, p.unique_right,
+                p.expansion, p.broadcast, p.skew_aware, mc)
+    if isinstance(p, SumAggP):
+        c = _plan_sig(p.child, canon)
+        return ("sum", c, canon.cols(p.keys), canon.cols(p.vals),
+                p.local_preagg,
+                canon.cols(p.exchange_on) if p.exchange_on else None)
+    if isinstance(p, DeDupP):
+        c = _plan_sig(p.child, canon)
+        return ("dedup", c, canon.cols(p.cols) if p.cols else None,
+                canon.cols(p.exchange_on) if p.exchange_on else None)
+    if isinstance(p, UnionP):
+        return ("union", _plan_sig(p.left, canon),
+                _plan_sig(p.right, canon))
+    if isinstance(p, OuterUnnestP):
+        par = _plan_sig(p.parent, canon)
+        canon.define_alias(p.alias)
+        return ("unnest", par, p.child_bag, canon.col(p.parent_label),
+                p.child_label, p.expansion, canon.define_col(p.matched_col),
+                canon.define_col(p.rowid_col) if p.rowid_col else None)
+    if isinstance(p, FusedJoinAggP):
+        j = _plan_sig(p.join, canon)
+        return ("fja", j, canon.cols(p.keys), canon.cols(p.vals),
+                p.local_preagg,
+                canon.cols(p.exchange_on) if p.exchange_on else None)
+    raise TypeError(f"_plan_sig: {type(p).__name__}")
+
+
+def plan_signature(p: Plan) -> Tuple[tuple, _Canon]:
+    """Context-free canonical signature of a subplan. Equal signatures
+    mean: evaluating both yields bags identical up to the column rename
+    derived from the two canons (``_renames_between``)."""
+    canon = _Canon()
+    sig = _plan_sig(p, canon)
+    return sig, canon
+
+
+def _renames_between(dcanon: _Canon, ucanon: _Canon
+                     ) -> Tuple[tuple, tuple]:
+    """(rename, alias_map) turning the DEFINITION site's column names
+    into the USE site's names. Both canons come from equal signatures,
+    so their canonical id sets coincide."""
+    dai = {v: k for k, v in dcanon.aliases.items()}
+    uai = {v: k for k, v in ucanon.aliases.items()}
+    alias_map = tuple((dai[c], uai[c]) for c in sorted(dai)
+                      if dai[c] != uai[c])
+    dci = {v: k for k, v in dcanon.defined.items()}
+    uci = {v: k for k, v in ucanon.defined.items()}
+    rename = tuple((dci[c], uci[c]) for c in sorted(dci)
+                   if dci[c] != uci[c])
+    return rename, alias_map
+
+
+_HEAVY_KINDS = (JoinP, SumAggP, DeDupP, OuterUnnestP, FusedJoinAggP)
+
+
+def _cse_eligible(p: Plan) -> bool:
+    """Worth sharing: the subtree performs real physical work (a join /
+    aggregation / dedup / unnest somewhere). Bare scans are already
+    memoized per (bag, alias) by ``_scan``."""
+    return any(isinstance(sub, _HEAVY_KINDS) for sub in _walk_plan(p))
+
+
+def cse_program(graph: ProgramGraph, min_count: int = 2) -> ProgramGraph:
+    """Cross-assignment common-subexpression elimination: structurally
+    identical subplans (modulo alias renaming — ``plan_signature``)
+    appearing ``min_count``+ times anywhere in the program are extracted
+    into shared ``__s<n>`` nodes evaluated once, scheduled immediately
+    before their first use; every occurrence becomes a ``RefP`` carrying
+    the rename into its own column namespace. A ``FusedJoinAggP`` whose
+    embedded join is shared un-fuses into Gamma+ over the shared join
+    (sharing beats fusion: the ref's physical props still carry the
+    probe-side ordering into the aggregation)."""
+    census: Dict[tuple, int] = {}
+    keep_union: Dict[tuple, set] = {}   # (sig, canonical alias) -> cols
+    for nd in graph.nodes:
+        for sub in _walk_plan(nd.plan):
+            if _cse_eligible(sub):
+                sig, canon = plan_signature(sub)
+                census[sig] = census.get(sig, 0) + 1
+                for ps in _walk_plan(sub):
+                    if isinstance(ps, _PrunedScan):
+                        key = (sig, canon.aliases[ps.inner.alias])
+                        keep_union.setdefault(key, set()).update(
+                            canon.col(c) for c in ps.keep)
+
+    shared: Dict[tuple, Tuple[str, _Canon]] = {}
+    out_nodes: List[ProgramNode] = []
+
+    def widen_keeps(body: Plan, sig, dcanon: _Canon) -> None:
+        """Grow the shared definition's pruned scans to the union of
+        every use site's keep set (translated back from canonical to
+        definition-site names)."""
+        inv = {v: k for k, v in dcanon.aliases.items()}
+        for ps in _walk_plan(body):
+            if isinstance(ps, _PrunedScan):
+                u = keep_union.get((sig, dcanon.aliases[ps.inner.alias]))
+                if not u:
+                    continue
+                keep = set()
+                for c in u:
+                    head, sep, tail = c.partition(".")
+                    keep.add(f"{inv[head]}.{tail}"
+                             if sep and head in inv else c)
+                ps.keep = frozenset(keep)
+
+    def make_ref(p: Plan, sig, canon: _Canon) -> RefP:
+        if sig not in shared:
+            name = f"__s{len(shared)}"
+            shared[sig] = (name, canon)
+            widen_keeps(p, sig, canon)
+            body = rewrite_children(p)
+            out_nodes.append(ProgramNode(
+                name, body, "shared", tuple(sorted(plan_deps(body)))))
+        sname, dcanon = shared[sig]
+        rename, alias_map = _renames_between(dcanon, canon)
+        return RefP(sname, rename=rename, alias_map=alias_map)
+
+    def rewrite(p: Plan) -> Plan:
+        if _cse_eligible(p):
+            sig, canon = plan_signature(p)
+            if census.get(sig, 0) >= min_count:
+                return make_ref(p, sig, canon)
+        if isinstance(p, FusedJoinAggP):
+            jsig, jcanon = plan_signature(p.join)
+            if census.get(jsig, 0) >= min_count:
+                ref = make_ref(p.join, jsig, jcanon)
+                return SumAggP(ref, p.keys, p.vals, p.local_preagg,
+                               p.exchange_on)
+        return rewrite_children(p)
+
+    def rewrite_children(p: Plan) -> Plan:
+        for attr in _CHILD_ATTRS:
+            if hasattr(p, attr):
+                if attr == "join":      # FusedJoinAggP: keep the fused
+                    rewrite_children(getattr(p, attr))  # join, share below
+                else:
+                    setattr(p, attr, rewrite(getattr(p, attr)))
+        return p
+
+    for nd in graph.nodes:
+        plan = rewrite(nd.plan)
+        out_nodes.append(ProgramNode(nd.name, plan, nd.role,
+                                     tuple(sorted(plan_deps(plan)))))
+    return ProgramGraph(out_nodes, graph.outputs)
+
+
+# -- dead-assignment / dead-column elimination ------------------------------
+
+def dce_program(graph: ProgramGraph) -> ProgramGraph:
+    """Drop assignments unreachable from the program outputs via the
+    def/use edges (e.g. a pipeline stage whose manifest nobody reads)."""
+    by_name = {nd.name: nd for nd in graph.nodes}
+    live: set = set()
+    stack = list(graph.outputs)
+    while stack:
+        n = stack.pop()
+        if n in live or n not in by_name:
+            continue
+        live.add(n)
+        stack.extend(by_name[n].deps)
+    return ProgramGraph([nd for nd in graph.nodes if nd.name in live],
+                        graph.outputs)
+
+
+def _scan_needs(p: Plan) -> Dict[str, Optional[set]]:
+    """Per environment bag, the attributes a plan reads (None = all)."""
+    out: Dict[str, Optional[set]] = {}
+
+    def add(bag: str, attrs: Optional[set]):
+        cur = out.get(bag, set())
+        out[bag] = None if (attrs is None or cur is None) else cur | attrs
+
+    for sub in _walk_plan(p):
+        if isinstance(sub, _PrunedScan):
+            pre = sub.inner.alias + "."
+            add(sub.inner.bag,
+                {c[len(pre):] for c in sub.keep
+                 if c.startswith(pre) and c[len(pre):] != "__rowid"})
+        elif isinstance(sub, ScanP):
+            add(sub.bag, None)
+        elif isinstance(sub, OuterUnnestP):
+            add(sub.child_bag, None)
+    return out
+
+
+def prune_program_columns(graph: ProgramGraph) -> ProgramGraph:
+    """Program-level dead-column elimination: walking the DAG in reverse
+    evaluation order, each non-output assignment is re-pruned so it only
+    computes the columns its downstream consumers (plans scanning it, or
+    shared-node refs) actually read. Output assignments keep everything
+    (``unshred_parts`` consumes their full schema)."""
+    needed: Dict[str, Optional[set]] = {o: None for o in graph.outputs}
+    rebuilt: List[ProgramNode] = []
+    for nd in reversed(graph.nodes):
+        my = needed.get(nd.name, set())
+        ref_needs: Dict[str, Optional[set]] = {}
+        plan = required_columns(nd.plan, my, ref_needs)
+        for bag, attrs in _scan_needs(plan).items():
+            cur = needed.get(bag, set())
+            needed[bag] = None if (attrs is None or cur is None) \
+                else cur | attrs
+        for name, attrs in ref_needs.items():
+            cur = needed.get(name, set())
+            needed[name] = None if (attrs is None or cur is None) \
+                else cur | attrs
+        rebuilt.append(ProgramNode(nd.name, plan, nd.role,
+                                   tuple(sorted(plan_deps(plan)))))
+    rebuilt.reverse()
+    return ProgramGraph(rebuilt, graph.outputs)
+
+
+# -- parameter lifting / collection ----------------------------------------
+
+def lift_plan_parameters(graph: ProgramGraph,
+                         prefix: str = "__c") -> Dict[str, object]:
+    """Replace liftable literal constants inside plan expressions with
+    ``N.Param`` nodes (in place); returns {param_name: default}. A plan
+    compiled from the lifted graph executes a whole family of queries —
+    bind different values via ``ExecSettings.params``. Structural
+    constants are kept inline: the ``__one`` cross-product key and
+    constant-only predicates (their value decides plan shape, not a
+    runtime comparison operand)."""
+    defaults: Dict[str, object] = {}
+
+    def lift_e(e: N.Expr) -> N.Expr:
+        def f(x: N.Expr) -> N.Expr:
+            if N.liftable_const(x):
+                name = f"{prefix}{len(defaults)}"
+                defaults[name] = x.value
+                return N.Param(name, x.ty, default=x.value)
+            return x
+        return N.map_expr(e, f)
+
+    for nd in graph.nodes:
+        for sub in _walk_plan(nd.plan):
+            if isinstance(sub, SelectP) and not isinstance(sub.pred,
+                                                           N.Const):
+                sub.pred = lift_e(sub.pred)
+            elif isinstance(sub, MapP):
+                sub.outputs = tuple(
+                    (o, e if o == "__one" else lift_e(e))
+                    for o, e in sub.outputs)
+    return defaults
+
+
+def collect_params(graph: ProgramGraph) -> Dict[str, object]:
+    """{param_name: default} over every N.Param referenced by the
+    program's plan expressions."""
+    out: Dict[str, object] = {}
+
+    def visit(e: N.Expr):
+        if isinstance(e, N.Param):
+            out[e.name] = e.default
+        for c in N.children(e):
+            visit(c)
+
+    for nd in graph.nodes:
+        for sub in _walk_plan(nd.plan):
+            if isinstance(sub, SelectP):
+                visit(sub.pred)
+            elif isinstance(sub, MapP):
+                for _, e in sub.outputs:
+                    visit(e)
+    return out

@@ -124,8 +124,9 @@ class Shredder:
     # -- main dispatch ---------------------------------------------------
     def shred(self, e: N.Expr, env: ShredEnv) -> Tuple[N.Expr, DictTreeLike]:
         """Returns (F(e), D(e))."""
-        # line 1: constants
-        if isinstance(e, N.Const):
+        # line 1: constants (runtime parameters shred like constants —
+        # they are scalar-typed and carry no dictionary tree)
+        if isinstance(e, (N.Const, N.Param)):
             return e, EMPTY_TREE
         if isinstance(e, N.EmptyBag):
             return N.EmptyBag(N.flat_type(e.ty)), EMPTY_TREE

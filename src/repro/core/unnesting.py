@@ -104,6 +104,16 @@ class Comp:
     head: Optional[N.TupleE]
 
 
+def _split_conj(c: N.Expr) -> List[N.Expr]:
+    """Flatten a conjunction into its conjuncts, so an equi-join key
+    buried inside ``a && b`` is recognized by the join-key extraction
+    (the rest stays behind as ordinary selections). Without this the
+    planner silently falls back to a capacity-bounded cross product."""
+    if isinstance(c, N.BoolOp) and c.op == "&&":
+        return _split_conj(c.left) + _split_conj(c.right)
+    return [c]
+
+
 def normalize(e: N.Expr) -> Comp:
     """Normalize a flat bag expression to generators+predicates+head."""
     gens: List[_Gen] = []
@@ -138,7 +148,7 @@ def normalize(e: N.Expr) -> Comp:
                 inner = N.subst(src.body, {src.params[0].name: src.label})
                 return go(N.ForUnion(v, inner, x.body), sub)
             if isinstance(src, N.IfThen) and src.els is None:
-                preds.append(src.cond)
+                preds.extend(_split_conj(src.cond))
                 return go(N.ForUnion(v, src.then, x.body), sub)
             if isinstance(src, (N.ForUnion, N.Singleton)):
                 head_inner = go(src, sub)
@@ -167,7 +177,7 @@ def normalize(e: N.Expr) -> Comp:
             raise TypeError(
                 f"normalize: unsupported generator source {type(src).__name__}")
         if isinstance(x, N.IfThen) and x.els is None:
-            preds.append(N.subst(x.cond, sub))
+            preds.extend(_split_conj(N.subst(x.cond, sub)))
             return go(x.then, sub)
         if isinstance(x, N.Singleton):
             elem = N.subst(x.elem, sub)

@@ -1,1 +1,2 @@
 from .engine import ServeEngine, Request  # noqa: F401
+from .query_service import QueryService, lift_program  # noqa: F401

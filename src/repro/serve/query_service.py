@@ -1,0 +1,265 @@
+"""QueryService — a parameterized plan-cache front end for the
+whole-program shredded compiler (DESIGN.md "Whole-program compilation
+and the query service").
+
+Serving heavy repeated query traffic means the expensive work — NRC
+shredding, materialization, plan passes, jax tracing, XLA compilation —
+must happen once per *query family*, not once per invocation. The
+service realizes that with a three-part cache key:
+
+  * **program structure** — the submitted NRC program with every
+    liftable constant replaced by a positional ``N.Param``
+    (``nrc.lift_constants``). Two submissions that differ only in
+    constant values fingerprint identically; the values ride along as
+    runtime parameter bindings, so a warm hit performs ZERO tracing
+    (``codegen.TRACE_STATS`` stays flat — asserted by ``make ci``).
+  * **schema** — per environment bag, its column names and dtypes.
+  * **capacity class** — bag capacities rounded up to the next power of
+    two; submissions whose bags differ only in row count inside one
+    class hit the same executable (bags are padded up on entry, and
+    every operator masks by validity).
+
+Misses compile via ``codegen.compile_program`` (cross-assignment CSE,
+dead-code elimination) into a single ``jit_program`` executable — or,
+with a mesh, through ``codegen.compile_program_distributed`` with
+``adaptive=True``, so the warmup run resolves exact exchange-bucket
+capacities (PR 2's adaptive retrace) before the warm runner is cached.
+
+``execute_many`` batches concurrent invocations of one family: the
+parameter vectors stack into a leading batch axis and the SAME program
+function runs under ``jax.vmap`` — one compiled computation serves the
+whole batch.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field as dc_field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.columnar.table import FlatBag
+from repro.core import codegen as CG
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.plans import ExecSettings
+from repro.core.unnesting import Catalog
+
+
+def lift_program(program: N.Program) -> Tuple[N.Program, list]:
+    """Lift every liftable constant of every assignment into positional
+    ``__p<i>`` parameters (numbering shared across assignments, in
+    deterministic traversal order). Returns (lifted program, values)."""
+    vals: list = []
+    assigns = []
+    for a in program.assignments:
+        e, vals = N.lift_constants(a.expr, values=vals)
+        assigns.append(N.Assignment(a.name, e, a.role, a.path,
+                                    a.parent, a.label_attr))
+    return N.Program(assigns), vals
+
+
+def _class_capacity(n: int) -> int:
+    c = 1
+    while c < n:
+        c <<= 1
+    return c
+
+
+@dataclass
+class CacheEntry:
+    key: tuple
+    cp: CG.CompiledProgram
+    sp: M.ShreddedProgram
+    exe: Optional[CG.ProgramExecutable]      # local path
+    runner: Optional[object]                 # dist path (DistRunner)
+    param_names: tuple
+    class_caps: Dict[str, int]
+    hits: int = 0
+    batch_fns: Dict[int, object] = dc_field(default_factory=dict)
+
+    def manifest(self, source: str) -> M.Manifest:
+        return self.sp.manifests[source]
+
+
+class QueryService:
+    """Compile-once / serve-many front end. See module docstring.
+
+    ``mesh=None`` serves through the local single-jit path (parameter
+    bindings supported, capacity classes rounded to powers of two);
+    with a mesh, programs compile through the distributed scheduler and
+    constant values join the cache key (the shard_map region bakes them
+    in as trace constants)."""
+
+    def __init__(self, input_types: Dict[str, N.BagT],
+                 catalog: Optional[Catalog] = None,
+                 settings: Optional[ExecSettings] = None,
+                 domain_elimination: bool = True,
+                 mesh=None, dist_kwargs: Optional[dict] = None,
+                 max_entries: int = 64):
+        self.input_types = dict(input_types)
+        self.catalog = catalog or Catalog()
+        self.settings = settings or ExecSettings()
+        self.domain_elim = domain_elimination
+        self.mesh = mesh
+        self.dist_kwargs = dict(dist_kwargs or {})
+        self.max_entries = max_entries
+        self._cache: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0,
+                      "batch_calls": 0}
+
+    # -- ingestion helper --------------------------------------------------
+    def shred_inputs(self, inputs: Dict[str, list],
+                     capacities: Optional[Dict[str, int]] = None,
+                     encoders: Optional[dict] = None
+                     ) -> Dict[str, FlatBag]:
+        return CG.columnar_shred_inputs(inputs, self.input_types,
+                                        capacities, encoders)
+
+    # -- fingerprinting ----------------------------------------------------
+    def fingerprint(self, program: N.Program, env: Dict[str, FlatBag]
+                    ) -> Tuple[tuple, N.Program, list, Dict[str, int]]:
+        """(cache key, lifted program, parameter values, class caps)."""
+        lifted, values = lift_program(program)
+        prog_fp = N.program_fingerprint(lifted)
+        class_caps = {}
+        schema = []
+        for name in sorted(env):
+            bag = env[name]
+            cap = bag.capacity if self.mesh is not None \
+                else _class_capacity(bag.capacity)
+            class_caps[name] = cap
+            schema.append((name, cap,
+                           tuple((c, str(bag.data[c].dtype))
+                                 for c in bag.columns)))
+        key = (prog_fp, tuple(schema),
+               ("dist", tuple(values)) if self.mesh is not None
+               else "local")
+        return key, lifted, values, class_caps
+
+    # -- cache management --------------------------------------------------
+    def _lookup(self, program: N.Program, env: Dict[str, FlatBag]
+                ) -> Tuple[CacheEntry, Dict[str, object],
+                           Dict[str, FlatBag]]:
+        key, lifted, values, class_caps = self.fingerprint(program, env)
+        env_c = {name: bag if bag.capacity == class_caps[name]
+                 else bag.resize(class_caps[name])
+                 for name, bag in env.items()}
+        entry = self._cache.get(key)
+        if entry is not None:
+            self.stats["hits"] += 1
+            entry.hits += 1
+            self._cache.move_to_end(key)
+        else:
+            self.stats["misses"] += 1
+            entry = self._compile(key, lifted, env_c, class_caps,
+                                  len(values))
+            self._cache[key] = entry
+            if len(self._cache) > self.max_entries:
+                self._cache.popitem(last=False)
+                self.stats["evictions"] += 1
+        params = {f"__p{i}": v for i, v in enumerate(values)}
+        return entry, params, env_c
+
+    def _compile(self, key: tuple, lifted: N.Program,
+                 env_c: Dict[str, FlatBag],
+                 class_caps: Dict[str, int],
+                 n_params: int = 0) -> CacheEntry:
+        sp = M.shred_program(lifted, self.input_types,
+                             domain_elimination=self.domain_elim)
+        cp = CG.compile_program(sp, self.catalog)
+        if self.mesh is not None:
+            runner, _, _ = CG.compile_program_distributed(
+                cp, env_c, self.mesh,
+                use_kernel=self.settings.use_kernel, **self.dist_kwargs)
+            return CacheEntry(key, cp, sp, None, runner, (),
+                              dict(class_caps))
+        exe = CG.jit_program(cp, self.settings)
+        # every positionally lifted name is a legal binding, even when
+        # its expression died in DCE/pruning (binds to nothing)
+        exe.accepted = frozenset(f"__p{i}" for i in range(n_params))
+        return CacheEntry(key, cp, sp, exe, None,
+                          tuple(sorted(exe.param_defaults)),
+                          dict(class_caps))
+
+    # -- execution ---------------------------------------------------------
+    def execute(self, program: N.Program, env: Dict[str, FlatBag]
+                ) -> Dict[str, FlatBag]:
+        """Run one program invocation; returns the output bags (every
+        manifest top + dictionary). Warm path: cache hit, parameter
+        rebind, zero shredding / plan passes / tracing."""
+        entry, params, env_c = self._lookup(program, env)
+        if entry.runner is not None:
+            out, _metrics = entry.runner(env_c)
+            return out
+        return entry.exe(env_c, params)
+
+    def execute_many(self, programs: Sequence[N.Program],
+                     env: Dict[str, FlatBag]) -> List[Dict[str, FlatBag]]:
+        """Batch concurrent invocations of ONE query family: all
+        programs must fingerprint identically (same structure, differing
+        only in lifted constant values). The parameter vectors stack
+        into a batch axis and the program function runs once under
+        ``jax.vmap`` over the shared environment."""
+        assert programs, "empty batch"
+        assert self.mesh is None, (
+            "execute_many is a local-path feature (vmap over params)")
+        self.stats["batch_calls"] += 1
+        entry, params0, env_c = self._lookup(programs[0], env)
+        binds = [entry.exe.bind(params0)]
+        for prog in programs[1:]:
+            key, _, values, _ = self.fingerprint(prog, env)
+            assert key == entry.key, (
+                "execute_many: programs are not one parameterized "
+                "family (structure/schema/capacity-class mismatch)")
+            binds.append(entry.exe.bind(
+                {f"__p{i}": v for i, v in enumerate(values)}))
+        if not binds[0]:
+            # no parameters anywhere: identical invocations
+            out = entry.exe(env_c)
+            return [out for _ in binds]
+        stacked = {k: jnp.stack([b[k] for b in binds]) for k in binds[0]}
+        B = len(binds)
+        vfn = entry.batch_fns.get(B)
+        if vfn is None:
+            vfn = jax.jit(jax.vmap(entry.exe.raw_fn, in_axes=(None, 0)))
+            entry.batch_fns[B] = vfn
+        batched = vfn(env_c, stacked)
+        return [_slice_outputs(batched, i) for i in range(B)]
+
+    def warmup(self, program: N.Program, env: Dict[str, FlatBag]
+               ) -> Dict[str, FlatBag]:
+        """Populate the cache (and, on the dist path, resolve adaptive
+        capacities — pass ``dist_kwargs=dict(adaptive=True)``) by
+        running the program once."""
+        return self.execute(program, env)
+
+    # -- results -----------------------------------------------------------
+    def unshred(self, program: N.Program, env: Dict[str, FlatBag],
+                outputs: Dict[str, FlatBag], source: str) -> list:
+        """Host-side nested rows of one submitted query's result (test /
+        debugging convenience; production consumers read the columnar
+        parts directly). Peeks at the cache without touching stats or
+        LRU order; an evicted entry's manifest is recovered by
+        re-shredding only (no plan compile)."""
+        key, lifted, _, _ = self.fingerprint(program, env)
+        entry = self._cache.get(key)
+        if entry is not None:
+            man = entry.manifest(source)
+        else:
+            sp = M.shred_program(lifted, self.input_types,
+                                 domain_elimination=self.domain_elim)
+            man = sp.manifests[source]
+        parts = {(): outputs[man.top]}
+        for path, name in man.dicts.items():
+            parts[path] = outputs[name]
+        return CG.parts_to_rows(parts, man.ty)
+
+
+def _slice_outputs(batched: Dict[str, FlatBag], i: int
+                   ) -> Dict[str, FlatBag]:
+    return {name: FlatBag({c: a[i] for c, a in bag.data.items()},
+                          bag.valid[i])
+            for name, bag in batched.items()}

@@ -1,0 +1,264 @@
+"""Cross-assignment CSE + whole-program compilation: a join subplan
+shared by TOP + two dictionary assignments of one bundle evaluates
+exactly once (counter-asserted via plans.EVAL_STATS), with
+interpreter-vs-compiled parity on the nested outputs, through both the
+eager scheduler (run_flat_program) and the single-jit executable."""
+
+import numpy as np
+import pytest
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core import plans as P
+from repro.core.unnesting import Catalog
+
+PART_T = N.bag(N.tuple_t(pid=N.INT, pname=N.INT, price=N.REAL))
+ORD_T = N.bag(N.tuple_t(odate=N.INT,
+                        oparts=N.bag(N.tuple_t(pid=N.INT, qty=N.REAL))))
+INPUT_TYPES = {"Ord": ORD_T, "Part": PART_T}
+CATALOG = Catalog(unique_keys={"Part__F": ("pid",)})
+
+
+def shared_join_query():
+    """TOP + two dictionaries; both dictionaries materialize from the
+    SAME oparts-Part join (one aggregated, one plain), which domain
+    elimination turns into two assignments containing structurally
+    identical join subplans (differing only in generated alias names)."""
+    Part = N.Var("Part", PART_T)
+    Ord = N.Var("Ord", ORD_T)
+
+    def joined(x, mk):
+        return N.for_in("op", x.oparts, lambda op:
+            N.for_in("p", Part, lambda p:
+                N.IfThen(op.pid.eq(p.pid), N.Singleton(mk(op, p)))))
+
+    def tops(x):
+        inner = joined(x, lambda op, p: N.record(pname=p.pname,
+                                                 total=op.qty * p.price))
+        return N.SumBy(inner, keys=("pname",), values=("total",))
+
+    def lines(x):
+        return joined(x, lambda op, p: N.record(pname=p.pname,
+                                                qty=op.qty))
+
+    return N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate, tops=tops(x), lines=lines(x))))
+
+
+def gen_data(n_orders=12, seed=0):
+    rng = np.random.RandomState(seed)
+    orders = [{"odate": 20200000 + i,
+               "oparts": [{"pid": int(rng.randint(1, 10)),
+                           "qty": float(rng.randint(1, 5))}
+                          for _ in range(rng.randint(0, 5))]}
+              for i in range(n_orders)]
+    parts = [{"pid": i, "pname": 100 + i,
+              "price": float(rng.randint(1, 20))}
+             for i in range(1, 11)]
+    return {"Ord": orders, "Part": parts}
+
+
+@pytest.fixture(scope="module")
+def bundle():
+    q = shared_join_query()
+    prog = N.Program([N.Assignment("Q", q)])
+    sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+    return q, sp
+
+
+@pytest.fixture(scope="module")
+def data():
+    return gen_data()
+
+
+def _nested_rows(sp, env, q):
+    man = sp.manifests["Q"]
+    parts = {(): env[man.top]}
+    for path, name in man.dicts.items():
+        parts[path] = env[name]
+    return CG.parts_to_rows(parts, q.ty)
+
+
+def test_shared_join_evaluates_once(bundle, data):
+    q, sp = bundle
+    cp = CG.compile_program(sp, CATALOG)
+    # the bundle has TOP + 2 dictionary assignments, and CSE extracted
+    # a shared node for the join both dictionaries contain
+    names = [n for n, _ in cp.plans]
+    assert any(n.startswith("__s") for n in names), cp.pretty()
+    man = sp.manifests["Q"]
+    assert man.top in names and len(man.dicts) == 2
+
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    P.reset_eval_stats()
+    out = CG.run_flat_program(cp, env)
+    assert P.EVAL_STATS.get("join", 0) == 1, P.EVAL_STATS
+    assert P.EVAL_STATS.get("ref", 0) == 2, P.EVAL_STATS
+
+    # without CSE the same join executes once per dictionary
+    cp2 = CG.compile_program(sp, CATALOG, cse=False)
+    env2 = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    P.reset_eval_stats()
+    out2 = CG.run_flat_program(cp2, env2)
+    assert P.EVAL_STATS.get("join", 0) == 2, P.EVAL_STATS
+
+    # CSE on/off agree with each other and with the oracle
+    direct = I.eval_expr(q, data)
+    assert I.bags_equal(direct, _nested_rows(sp, out, q))
+    assert I.bags_equal(direct, _nested_rows(sp, out2, q))
+
+
+def test_jit_program_matches_eager(bundle, data):
+    """Compiled single-jit executable == eager scheduler, bit-for-bit,
+    and warm re-invocation does not retrace."""
+    q, sp = bundle
+    cp = CG.compile_program(sp, CATALOG)
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    eager = CG.run_flat_program(cp, dict(env))
+
+    CG.reset_trace_stats()
+    exe = CG.jit_program(cp)
+    out = exe(env)
+    assert CG.TRACE_STATS.get("traces") == 1
+    for name in out:
+        a, b = out[name], eager[name]
+        assert np.array_equal(np.asarray(a.valid), np.asarray(b.valid))
+        for c in b.data:
+            assert np.array_equal(np.asarray(a.data[c]),
+                                  np.asarray(b.data[c])), (name, c)
+    # warm call: same executable, zero retrace
+    exe(env)
+    assert CG.TRACE_STATS.get("traces") == 1
+
+
+def test_shared_node_scheduled_before_uses(bundle):
+    _, sp = bundle
+    cp = CG.compile_program(sp, CATALOG)
+    pos = {n: i for i, (n, _) in enumerate(cp.plans)}
+    for nd in cp.graph.nodes:
+        for d in nd.deps:
+            if d in pos:
+                assert pos[d] < pos[nd.name], (d, nd.name)
+
+
+def test_dce_drops_unconsumed_pipeline_stage(data):
+    """A pipeline whose first query nobody reads is dead when outputs
+    are narrowed to the final manifest."""
+    Ord = N.Var("Ord", ORD_T)
+    q1 = N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate, oparts=x.oparts)))
+    q2 = N.SumBy(
+        N.for_in("x", Ord, lambda x:
+            N.for_in("op", x.oparts, lambda op:
+                N.Singleton(N.record(odate=x.odate, qty=op.qty)))),
+        keys=("odate",), values=("qty",))
+    prog = N.Program([N.Assignment("Q1", q1), N.Assignment("Q2", q2)])
+    sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+    man2 = sp.manifests["Q2"]
+    outputs = tuple([man2.top] + list(man2.dicts.values()))
+    cp = CG.compile_program(sp, CATALOG, outputs=outputs)
+    names = [n for n, _ in cp.plans]
+    assert "Q1" not in names, names
+    # and the narrowed program still runs + matches the oracle
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    out = CG.run_flat_program(cp, env)
+    want = I.eval_expr(q2, data)
+    got = out[man2.top].to_rows()
+    assert I.bags_equal(want, got)
+
+
+def test_program_level_column_pruning(data):
+    """An intermediate assignment consumed only through a narrow scan
+    drops the columns nobody reads."""
+    q = shared_join_query()
+    prog = N.Program([N.Assignment("Q", q)])
+    sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+    man = sp.manifests["Q"]
+    # consume only the top bag: the dictionaries die entirely
+    cp = CG.compile_program(sp, CATALOG, outputs=(man.top,))
+    names = [n for n, _ in cp.plans]
+    assert names == [man.top], names
+
+
+def test_param_in_plan_evaluates_with_bindings(data):
+    """N.Param flows through shredding + compilation and binds at
+    execution time (ExecSettings.params / executable params)."""
+    Part = N.Var("Part", PART_T)
+    Ord = N.Var("Ord", ORD_T)
+    th = N.Param("th", N.REAL, default=5.0)
+
+    def tops(x):
+        inner = N.for_in("op", x.oparts, lambda op:
+            N.for_in("p", Part, lambda p:
+                N.IfThen(N.BoolOp("&&", op.pid.eq(p.pid),
+                                  p.price.ge(th)),
+                         N.Singleton(N.record(pname=p.pname,
+                                              total=op.qty * p.price)))))
+        return N.SumBy(inner, keys=("pname",), values=("total",))
+
+    q = N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate, tops=tops(x))))
+    prog = N.Program([N.Assignment("Q", q)])
+    sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+    cp = CG.compile_program(sp, CATALOG)
+    exe = CG.jit_program(cp)
+    assert exe.param_defaults == {"th": 5.0}
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+
+    for val in (3.0, 12.0):
+        out = exe(env, {"th": val})
+        man = sp.manifests["Q"]
+        parts = {(): out[man.top]}
+        for path, name in man.dicts.items():
+            parts[path] = out[name]
+        got = CG.parts_to_rows(parts, q.ty)
+        want = I.eval_expr(q, dict(data, __params__={"th": val}))
+        assert I.bags_equal(want, got), val
+    # both bindings ran through ONE trace
+    assert CG.TRACE_STATS.get("traces", 0) >= 1
+    # a misspelled parameter name is a caller error, not a silent
+    # fall-back to the default value
+    with pytest.raises(AssertionError, match="unknown parameter"):
+        exe(env, {"thresh": 3.0})
+
+
+def test_lift_plan_parameters(bundle, data):
+    """Plan-level constant lifting: literals become bindable Params,
+    defaults reproduce the original results."""
+    Ord = N.Var("Ord", ORD_T)
+    q = N.SumBy(
+        N.for_in("x", Ord, lambda x:
+            N.for_in("op", x.oparts, lambda op:
+                N.IfThen(op.qty.ge(N.Const(2.0, N.REAL)),
+                         N.Singleton(N.record(odate=x.odate,
+                                              qty=op.qty))))),
+        keys=("odate",), values=("qty",))
+    prog = N.Program([N.Assignment("Q", q)])
+    sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+    cp = CG.compile_program(sp, CATALOG)
+    defaults = P.lift_plan_parameters(cp.graph)
+    assert list(defaults.values()) == [2.0]
+    exe = CG.jit_program(cp)
+    assert exe.param_defaults == defaults
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    out = exe(env)                       # defaults == original constants
+    want = I.eval_expr(q, data)
+    assert I.bags_equal(want, out[sp.manifests["Q"].top].to_rows())
+    # rebind: lowering the threshold must change the result
+    (name,) = defaults
+    out2 = exe(env, {name: 0.0})
+    want2 = I.eval_expr(N.Program([prog.assignments[0]]).assignments[0]
+                        .expr, data)
+    total = sum(r["qty"] for r in out2[sp.manifests["Q"].top].to_rows())
+    assert total >= sum(r["qty"] for r in want2)
+
+
+def test_schema_of_names_offender():
+    bad = N.tuple_t(a=N.INT, b=N.bag(N.tuple_t(c=N.INT)))
+    with pytest.raises(TypeError) as ei:
+        CG.schema_of(bad, where="assignment Q__D_x")
+    msg = str(ei.value)
+    assert "'b'" in msg and "assignment Q__D_x" in msg
+    assert "shredded" in msg

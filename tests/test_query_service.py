@@ -1,0 +1,228 @@
+"""QueryService plan cache: hit on re-invocation with different
+parameter values (zero retracing), miss on schema / capacity-class
+change, correctness parity with run_flat_program, and vmapped batch
+execution."""
+
+import numpy as np
+import pytest
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.unnesting import Catalog
+from repro.serve import QueryService
+from repro.serve.query_service import _class_capacity, lift_program
+
+PART_T = N.bag(N.tuple_t(pid=N.INT, pname=N.INT, price=N.REAL))
+ORD_T = N.bag(N.tuple_t(odate=N.INT,
+                        oparts=N.bag(N.tuple_t(pid=N.INT, qty=N.REAL))))
+INPUT_TYPES = {"Ord": ORD_T, "Part": PART_T}
+CATALOG = Catalog(unique_keys={"Part__F": ("pid",)})
+
+
+def family(min_price: float) -> N.Program:
+    Part = N.Var("Part", PART_T)
+    Ord = N.Var("Ord", ORD_T)
+
+    def tops(x):
+        inner = N.for_in("op", x.oparts, lambda op:
+            N.for_in("p", Part, lambda p:
+                N.IfThen(N.BoolOp("&&", op.pid.eq(p.pid),
+                                  p.price.ge(N.Const(min_price, N.REAL))),
+                         N.Singleton(N.record(pname=p.pname,
+                                              total=op.qty * p.price)))))
+        return N.SumBy(inner, keys=("pname",), values=("total",))
+
+    q = N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate, tops=tops(x))))
+    return N.Program([N.Assignment("Q", q)])
+
+
+def gen_data(n_orders=10, seed=0, max_items=4):
+    rng = np.random.RandomState(seed)
+    orders = [{"odate": 20200000 + i,
+               "oparts": [{"pid": int(rng.randint(1, 10)),
+                           "qty": float(rng.randint(1, 5))}
+                          for _ in range(rng.randint(0, max_items + 1))]}
+              for i in range(n_orders)]
+    parts = [{"pid": i, "pname": 100 + i,
+              "price": float(rng.randint(1, 20))}
+             for i in range(1, 11)]
+    return {"Ord": orders, "Part": parts}
+
+
+@pytest.fixture(scope="module")
+def data():
+    return gen_data()
+
+
+@pytest.fixture()
+def svc():
+    return QueryService(INPUT_TYPES, catalog=CATALOG)
+
+
+def test_lift_program_fingerprint_stable():
+    a, va = lift_program(family(3.0))
+    b, vb = lift_program(family(17.0))
+    assert N.program_fingerprint(a) == N.program_fingerprint(b)
+    assert va != vb and len(va) == len(vb)
+
+
+def test_fingerprint_covers_union():
+    """Bag unions are fingerprintable (a query-service entry point)."""
+    Ord = N.Var("Ord", ORD_T)
+
+    def flat(lo):
+        return N.SumBy(
+            N.for_in("x", Ord, lambda x:
+                N.for_in("op", x.oparts, lambda op:
+                    N.IfThen(op.qty.ge(N.Const(lo, N.REAL)),
+                             N.Singleton(N.record(odate=x.odate,
+                                                  qty=op.qty))))),
+            keys=("odate",), values=("qty",))
+
+    u = N.UnionE(flat(1.0), flat(3.0))
+    a, va = lift_program(N.Program([N.Assignment("Q", u)]))
+    b, vb = lift_program(N.Program([N.Assignment(
+        "Q", N.UnionE(flat(2.0), flat(9.0)))]))
+    assert N.program_fingerprint(a) == N.program_fingerprint(b)
+    assert len(va) == len(vb) == 2
+
+
+def test_cache_hit_with_different_parameters(svc, data):
+    env = svc.shred_inputs(data)
+    CG.reset_trace_stats()
+    svc.execute(family(5.0), env)
+    assert svc.stats == {"hits": 0, "misses": 1, "evictions": 0,
+                         "batch_calls": 0}
+    traces_cold = CG.TRACE_STATS.get("traces", 0)
+    for th in (2.0, 9.0, 16.0):
+        svc.execute(family(th), env)
+    assert svc.stats["hits"] == 3 and svc.stats["misses"] == 1
+    # the warm path performed ZERO retracing
+    assert CG.TRACE_STATS.get("traces", 0) == traces_cold
+
+
+def test_parity_with_run_flat_program(svc, data):
+    """Warm cached invocations match run_flat_program bit-for-bit (same
+    class capacities) and the oracle on nested rows."""
+    env = svc.shred_inputs(data)
+    svc.execute(family(5.0), env)            # populate cache
+    for th in (5.0, 11.0, 2.0):
+        prog = family(th)
+        out = svc.execute(prog, env)
+        sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+        cp = CG.compile_program(sp, CATALOG)
+        ref_env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+        ref_env = {k: b.resize(_class_capacity(b.capacity))
+                   for k, b in ref_env.items()}
+        ref = CG.run_flat_program(cp, ref_env)
+        man = sp.manifests["Q"]
+        for name in [man.top] + list(man.dicts.values()):
+            a, b = out[name], ref[name]
+            assert np.array_equal(np.asarray(a.valid),
+                                  np.asarray(b.valid)), (th, name)
+            for c in b.data:
+                assert np.array_equal(np.asarray(a.data[c]),
+                                      np.asarray(b.data[c])), (th, name, c)
+        rows = svc.unshred(prog, env, out, "Q")
+        direct = I.eval_expr(prog.assignments[0].expr, data)
+        assert I.bags_equal(direct, rows), th
+
+
+def test_cache_miss_on_capacity_class_change(svc, data):
+    env = svc.shred_inputs(data)
+    svc.execute(family(5.0), env)
+    assert svc.stats["misses"] == 1
+    # 30x the rows: different power-of-two class => miss
+    big = dict(data, Ord=data["Ord"] * 30)
+    env_big = svc.shred_inputs(big)
+    svc.execute(family(5.0), env_big)
+    assert svc.stats["misses"] == 2
+    # same class again => hit
+    svc.execute(family(7.0), env_big)
+    assert svc.stats["misses"] == 2 and svc.stats["hits"] >= 1
+
+
+def test_cache_hit_within_capacity_class(svc):
+    """Row-count jitter inside one power-of-two class reuses the
+    executable (bags are padded up to the class capacity)."""
+    svc.execute(family(5.0), svc.shred_inputs(gen_data(10, seed=1)))
+    assert svc.stats["misses"] == 1
+    # same order count, different item draw -> same class caps
+    data2 = gen_data(10, seed=1)
+    data2["Ord"][0]["oparts"] = data2["Ord"][0]["oparts"][:1]
+    env2 = svc.shred_inputs(data2)
+    svc.execute(family(8.0), env2)
+    assert svc.stats["misses"] == 1 and svc.stats["hits"] == 1
+
+
+def test_cache_miss_on_schema_change(svc, data):
+    env = svc.shred_inputs(data)
+    svc.execute(family(5.0), env)
+    assert svc.stats["misses"] == 1
+    # widen one bag's schema: dtype/column fingerprint changes => miss
+    env2 = dict(env)
+    env2["Part__F"] = env["Part__F"].with_columns(
+        extra=env["Part__F"].col("pid") * 2)
+    svc.execute(family(5.0), env2)
+    assert svc.stats["misses"] == 2
+
+
+def test_structural_change_is_a_miss(svc, data):
+    env = svc.shred_inputs(data)
+    svc.execute(family(5.0), env)
+    # different comparison operator => different structure
+    Part = N.Var("Part", PART_T)
+    Ord = N.Var("Ord", ORD_T)
+    q = N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate,
+        tops=N.SumBy(
+            N.for_in("op", x.oparts, lambda op:
+                N.for_in("p", Part, lambda p:
+                    N.IfThen(N.BoolOp("&&", op.pid.eq(p.pid),
+                                      p.price.le(N.Const(5.0, N.REAL))),
+                             N.Singleton(N.record(pname=p.pname,
+                                                  total=op.qty * p.price))))),
+            keys=("pname",), values=("total",)))))
+    svc.execute(N.Program([N.Assignment("Q", q)]), env)
+    assert svc.stats["misses"] == 2
+
+
+def test_execute_many_batches_one_family(svc, data):
+    env = svc.shred_inputs(data)
+    ths = (3.0, 7.0, 15.0)
+    outs = svc.execute_many([family(t) for t in ths], env)
+    assert len(outs) == len(ths)
+    for t, out in zip(ths, outs):
+        single = svc.execute(family(t), env)
+        for name in single:
+            a, b = out[name], single[name]
+            assert np.array_equal(np.asarray(a.valid),
+                                  np.asarray(b.valid)), (t, name)
+            for c in b.data:
+                assert np.array_equal(np.asarray(a.data[c]),
+                                      np.asarray(b.data[c])), (t, name, c)
+
+
+def test_execute_many_rejects_mixed_families(svc, data):
+    env = svc.shred_inputs(data)
+    Ord = N.Var("Ord", ORD_T)
+    flat = N.SumBy(
+        N.for_in("x", Ord, lambda x:
+            N.for_in("op", x.oparts, lambda op:
+                N.Singleton(N.record(odate=x.odate, qty=op.qty)))),
+        keys=("odate",), values=("qty",))
+    other = N.Program([N.Assignment("Q", flat)])
+    with pytest.raises(AssertionError, match="family"):
+        svc.execute_many([family(3.0), other], env)
+
+
+def test_eviction(data):
+    svc = QueryService(INPUT_TYPES, catalog=CATALOG, max_entries=2)
+    env = svc.shred_inputs(data)
+    svc.execute(family(5.0), env)
+    svc.execute(N.Program([N.Assignment(
+        "Q", family(5.0).assignments[0].expr)]), env)  # same => hit
+    assert svc.stats["misses"] == 1
