@@ -3,23 +3,29 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick bench serve-smoke ci
+.PHONY: test bench-quick bench serve-smoke storage-smoke ci
 
 test:
 	$(PY) -m pytest -x -q
 
 # CI gate: tier-1 tests plus the quick benchmark smoke plus the
-# serving smoke. bench-quick includes the distributed join->sum_by
-# shuffle benchmark, which runs in its own subprocess under
-# --xla_force_host_platform_device_count=8 and asserts the packed
+# serving and storage smokes. bench-quick includes the distributed
+# join->sum_by shuffle benchmark, which runs in its own subprocess
+# under --xla_force_host_platform_device_count=8 and asserts the packed
 # exchange's elision + correctness — shuffle regressions fail here,
 # not in production. serve-smoke asserts the plan-cache warm path
 # performs ZERO jax retracing (codegen.TRACE_STATS) and that
 # cross-assignment CSE evaluates a shared join subplan exactly once.
-ci: test bench-quick serve-smoke
+# storage-smoke writes a dataset, reopens it, asserts query parity with
+# the in-memory path, >=1 zone-map chunk skipped on a selective N.Param
+# predicate, and zero warm retraces while chunk selection changes.
+ci: test bench-quick serve-smoke storage-smoke
 
 serve-smoke:
 	$(PY) -m benchmarks.serving --smoke
+
+storage-smoke:
+	$(PY) -m benchmarks.storage --smoke
 
 # CPU-friendly perf smoke: runs every benchmark section except the
 # 8-virtual-device skew subprocess, fails on any Python exception, and

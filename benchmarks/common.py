@@ -31,11 +31,16 @@ def set_section(name: Optional[str]):
 
 def emit(name: str, us_per_call: float, derived: str = "",
          compile_ms: Optional[float] = None,
-         warm_ms: Optional[float] = None, **extra):
+         warm_ms: Optional[float] = None,
+         bytes_on_disk: Optional[int] = None,
+         chunks_skipped: Optional[int] = None, **extra):
     """Emit one benchmark record. ``compile_ms`` / ``warm_ms`` split
     one-time compilation (shredding + plan passes + tracing + XLA) from
     the warm per-call time, so plan-cache wins are visible as separate
-    fields in the BENCH_<timestamp>.json perf trajectory."""
+    fields in the BENCH_<timestamp>.json perf trajectory.
+    ``bytes_on_disk`` / ``chunks_skipped`` are the storage-engine twins
+    (benchmarks/storage.py): persisted footprint and zone-map skip
+    counts ride in the same trajectory file."""
     line = f"{name},{us_per_call:.1f},{derived}"
     rec = {"section": CURRENT_SECTION, "name": name,
            "us_per_call": round(float(us_per_call), 1),
@@ -46,6 +51,12 @@ def emit(name: str, us_per_call: float, derived: str = "",
     if warm_ms is not None:
         rec["warm_ms"] = round(float(warm_ms), 3)
         line += f",warm_ms={rec['warm_ms']}"
+    if bytes_on_disk is not None:
+        rec["bytes_on_disk"] = int(bytes_on_disk)
+        line += f",bytes_on_disk={rec['bytes_on_disk']}"
+    if chunks_skipped is not None:
+        rec["chunks_skipped"] = int(chunks_skipped)
+        line += f",chunks_skipped={rec['chunks_skipped']}"
     rec.update(extra)
     ROWS.append(line)
     RECORDS.append(rec)

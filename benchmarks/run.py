@@ -30,7 +30,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     sections = []
     from benchmarks import (biomedical, fused_pipeline, representation,
-                            serving, succinct, tpch_nested)
+                            serving, storage, succinct, tpch_nested)
     sections.append(("tpch_nested (Fig.7)",
                      lambda: tpch_nested.run(scale=30 if args.quick else 60)))
     sections.append(("serving (plan-cache query service)",
@@ -41,6 +41,11 @@ def main() -> None:
                      lambda: fused_pipeline.run(
                          n=5000 if args.quick else 20000,
                          dist_n=2000 if args.quick else 4000)))
+    sections.append(("storage (persisted shredded datasets)",
+                     lambda: storage.run(
+                         n_orders=300 if args.quick else 2000,
+                         n_parts=128 if args.quick else 512,
+                         chunk_rows=32 if args.quick else 64)))
     sections.append(("biomedical E2E (Fig.9)",
                      lambda: biomedical.run(n_samples=6 if args.quick else 10)))
     sections.append(("succinct (App.D)", succinct.run))

@@ -1,0 +1,83 @@
+"""Persist a nested dataset and query it from disk.
+
+Walks the storage engine end to end: stream a nested corpus into a
+chunked columnar dataset (`DatasetWriter.append`), reopen it, and run a
+parameterized query family through `QueryService.execute_stored` —
+watching the plan cache stay warm while zone maps re-select chunks per
+parameter value.
+
+    PYTHONPATH=src python examples/persist_and_query.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import codegen as CG
+from repro.core import nrc as N
+from repro.core.unnesting import Catalog
+from repro.serve import QueryService
+from repro.storage import STORAGE_STATS, StorageCatalog, \
+    reset_storage_stats
+
+# ---- nested schema: orders with line items, a flat parts table ----
+PART_T = N.bag(N.tuple_t(pid=N.INT, pname=N.INT, price=N.REAL))
+ORD_T = N.bag(N.tuple_t(
+    odate=N.INT, oparts=N.bag(N.tuple_t(pid=N.INT, qty=N.REAL))))
+INPUT_TYPES = {"Ord": ORD_T, "Part": PART_T}
+
+rng = np.random.RandomState(7)
+orders = [{"odate": 20260000 + d,
+           "oparts": [{"pid": int(rng.randint(1, 65)),
+                       "qty": float(rng.randint(1, 9))}
+                      for _ in range(rng.randint(0, 6))]}
+          for d in range(200)]
+parts = [{"pid": i, "pname": 100 + i, "price": float(i)}
+         for i in range(1, 65)]
+
+# ---- 1. stream the dataset to disk in batches ----
+root = tempfile.mkdtemp(prefix="repro_store_")
+catalog = StorageCatalog(root)
+writer = catalog.writer("shop", INPUT_TYPES, chunk_rows=16)
+writer.append({"Ord": orders[:100], "Part": parts})
+writer.append({"Ord": orders[100:]})          # labels continue exactly
+dataset = catalog.open("shop")
+print(f"wrote {dataset.bytes_on_disk()} bytes:",
+      {n: p.rows for n, p in sorted(dataset.parts.items())})
+
+# ---- 2. a parameterized query family ----
+def spend_over(min_price: float) -> N.Program:
+    Part, Ord = N.Var("Part", PART_T), N.Var("Ord", ORD_T)
+
+    def tops(x):
+        inner = N.for_in("op", x.oparts, lambda op:
+            N.for_in("p", Part, lambda p:
+                N.IfThen(N.BoolOp("&&", op.pid.eq(p.pid),
+                                  p.price.ge(N.Const(min_price, N.REAL))),
+                         N.Singleton(N.record(pname=p.pname,
+                                              total=op.qty * p.price)))))
+        return N.SumBy(inner, keys=("pname",), values=("total",))
+
+    q = N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate, tops=tops(x))))
+    return N.Program([N.Assignment("Q", q)])
+
+# ---- 3. serve from disk: cold compile once, warm rebinds after ----
+svc = QueryService(INPUT_TYPES,
+                   catalog=Catalog(unique_keys={"Part__F": ("pid",)}))
+for threshold in (8.0, 32.0, 56.0):
+    reset_storage_stats()
+    CG.reset_trace_stats()
+    out = svc.execute_stored(spend_over(threshold), dataset)
+    rows = svc.unshred_stored(spend_over(threshold), dataset, out, "Q")
+    nonempty = sum(1 for r in rows if r["tops"])
+    print(f"price >= {threshold:4.0f}: {nonempty:3d} orders with hits | "
+          f"chunks read {STORAGE_STATS['chunks_read']:3d} "
+          f"skipped {STORAGE_STATS['chunks_skipped']:3d} | "
+          f"traces this call {CG.TRACE_STATS.get('traces', 0)} | "
+          f"cache {svc.stats['hits']} hits / {svc.stats['misses']} miss")
+print("the higher the threshold, the more chunks the zone maps skip —")
+print("and after the first call, every invocation traces ZERO times.")

@@ -31,20 +31,47 @@ DTYPES = {
 
 class StringEncoder:
     """Per-domain string dictionary (shared across tables joining on the
-    same string domain)."""
+    same string domain).
 
-    def __init__(self):
+    ``strict=True`` freezes the vocabulary as an integrity boundary:
+    encoding an unknown string or decoding an out-of-range code raises
+    instead of growing the dictionary / fabricating ``"<code>"``. The
+    storage reader hands out strict encoders — a code outside the
+    persisted vocabulary means on-disk corruption, not a display
+    fallback."""
+
+    def __init__(self, strict: bool = False):
         self.vocab: Dict[str, int] = {}
         self.rev: List[str] = []
+        self.strict = strict
+
+    @classmethod
+    def from_vocab(cls, rev: Sequence[str],
+                   strict: bool = False) -> "StringEncoder":
+        enc = cls()
+        for s in rev:
+            enc.encode(s)
+        enc.strict = strict
+        return enc
 
     def encode(self, s: str) -> int:
         if s not in self.vocab:
+            if self.strict:
+                raise KeyError(
+                    f"StringEncoder(strict): unknown string {s!r} "
+                    f"(vocabulary has {len(self.rev)} entries)")
             self.vocab[s] = len(self.rev)
             self.rev.append(s)
         return self.vocab[s]
 
     def decode(self, code: int) -> str:
-        return self.rev[int(code)] if 0 <= int(code) < len(self.rev) else f"<{code}>"
+        if 0 <= int(code) < len(self.rev):
+            return self.rev[int(code)]
+        if self.strict:
+            raise KeyError(
+                f"StringEncoder(strict): code {int(code)} outside "
+                f"vocabulary [0, {len(self.rev)})")
+        return f"<{code}>"
 
 
 @jax.tree_util.register_pytree_node_class

@@ -188,7 +188,9 @@ def run_flat_program(cp: CompiledProgram, env: Dict[str, FlatBag],
     order — shared CSE nodes therefore evaluate once). The jitted
     serving path is ``jit_program``; both share this schedule."""
     settings = settings or ExecSettings()
-    env = dict(env)
+    # a storage-backed environment stays lazy (missing inputs load from
+    # disk at scan time); plain dicts are copied as before
+    env = env.fork() if hasattr(env, "fork") else dict(env)
     for name, plan in cp.plans:
         env[name] = eval_plan(plan, env, settings)
     return env

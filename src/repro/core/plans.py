@@ -288,13 +288,44 @@ class ExecSettings:
     params: Optional[Dict[str, object]] = None
 
 
+def scan_keep_attrs(keep, alias: str) -> set:
+    """Attribute names a pruned scan's keep set requests from its bag
+    (strip the alias prefix; ``__rowid`` is generated, never stored).
+    Shared by the evaluator, the program-level column pass and the
+    storage requirements extraction so their namespaces cannot drift."""
+    pre = alias + "."
+    return {c[len(pre):] for c in keep
+            if c.startswith(pre) and c[len(pre):] != "__rowid"}
+
+
+def _storage_ensure(env, name: str, attrs: Optional[set],
+                    params: Optional[Dict[str, object]] = None) -> None:
+    """Storage-backed scan mode: a lazy environment (storage.StorageEnv)
+    materializes missing input bags from disk on first scan, loading
+    only ``attrs`` columns (None = all) and only the chunks its zone
+    maps cannot refute — resolving ``N.Param`` predicates with the SAME
+    bindings the evaluator will use (``ExecSettings.params``)."""
+    ensure = getattr(env, "ensure_loaded", None)
+    if ensure is not None:
+        # called even when the bag is present: a later scan may need
+        # MORE columns than the first pruned load brought in (the env
+        # widens the loaded set; externally provided bags are left
+        # untouched)
+        ensure(name, attrs, params)
+
+
 def _scan(env: Dict[str, FlatBag], name: str, alias: str,
-          with_rowid: bool = False) -> FlatBag:
+          with_rowid: bool = False, ensure: bool = True,
+          params: Optional[Dict[str, object]] = None) -> FlatBag:
     """Scan an environment bag under an alias. Memoized on the source
     bag's physical props: every ScanP of the same (bag, alias) across
     the assignment sequence returns ONE FlatBag instance, so key caches
     and build-side argsorts accumulate across the whole query bundle
-    (a dictionary joined in three assignments argsorts once)."""
+    (a dictionary joined in three assignments argsorts once).
+    ``ensure=False`` skips the full-column storage load — the pruned
+    scan path has already ensured exactly its keep set."""
+    if ensure:
+        _storage_ensure(env, name, None, params)
     bag = env[name]
     memo_key = (alias, with_rowid)
     if X.ORDER_AWARE:
@@ -317,7 +348,7 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
               s: Optional[ExecSettings] = None) -> FlatBag:
     s = s or ExecSettings()
     if isinstance(p, ScanP):
-        return _scan(env, p.bag, p.alias, p.with_rowid)
+        return _scan(env, p.bag, p.alias, p.with_rowid, params=s.params)
     if isinstance(p, _PrunedScan):
         return _eval_pruned(p, env, s)
     if isinstance(p, RefP):
@@ -389,7 +420,7 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
                            eval_plan(p.right, env, s))
     if isinstance(p, OuterUnnestP):
         parent = eval_plan(p.parent, env, s)
-        child = _scan(env, p.child_bag, p.alias)
+        child = _scan(env, p.child_bag, p.alias, params=s.params)
         _ecount("unnest")
         out_cap = int(child.capacity * p.expansion) + parent.capacity
         bag, _ = X.flatten_child(parent, child, p.parent_label,
@@ -592,7 +623,10 @@ class _PrunedScan(Plan):
 
 
 def _eval_pruned(p: _PrunedScan, env, s) -> FlatBag:
-    bag = _scan(env, p.inner.bag, p.inner.alias)
+    attrs = scan_keep_attrs(p.keep, p.inner.alias)
+    _storage_ensure(env, p.inner.bag, attrs, s.params)
+    bag = _scan(env, p.inner.bag, p.inner.alias, p.inner.with_rowid,
+                ensure=False)
     keep = [c for c in bag.columns if c in p.keep]
     return bag.select_columns(keep)
 
@@ -1258,10 +1292,7 @@ def _scan_needs(p: Plan) -> Dict[str, Optional[set]]:
 
     for sub in _walk_plan(p):
         if isinstance(sub, _PrunedScan):
-            pre = sub.inner.alias + "."
-            add(sub.inner.bag,
-                {c[len(pre):] for c in sub.keep
-                 if c.startswith(pre) and c[len(pre):] != "__rowid"})
+            add(sub.inner.bag, scan_keep_attrs(sub.keep, sub.inner.alias))
         elif isinstance(sub, ScanP):
             add(sub.bag, None)
         elif isinstance(sub, OuterUnnestP):

@@ -50,12 +50,26 @@ class TokenPipeline:
     seed: int = 0
 
     def build(self, inputs: Dict[str, list]):
+        env = CG.columnar_shred_inputs(inputs, CORPUS_TYPES)
+        return self._build_from_env(env)
+
+    def build_from_storage(self, dataset):
+        """Disk-backed ingest: read the value-shredded corpus parts
+        straight from a persisted dataset (``storage.StoredDataset`` —
+        typically streamed in with ``DatasetWriter.append``) instead of
+        regenerating and re-shredding per process start. Streaming
+        appends offset labels by the parent part's prior rows, so the
+        loaded environment — and therefore every token batch — is
+        bit-for-bit identical to the in-memory path (asserted by
+        tests/test_pipeline.py)."""
+        return self._build_from_env(dataset.load_env())
+
+    def _build_from_env(self, env):
         prog = token_query()
         self.shredded = M.shred_program(prog, CORPUS_TYPES,
                                         domain_elimination=True)
         catalog = Catalog(unique_keys={"LangScore__F": ("lang",)})
         self.compiled = CG.compile_program(self.shredded, catalog)
-        env = CG.columnar_shred_inputs(inputs, CORPUS_TYPES)
         env = CG.run_flat_program(self.compiled, env,
                                   ExecSettings())
         out = env["TOKENS"]

@@ -79,6 +79,9 @@ class CacheEntry:
     class_caps: Dict[str, int]
     hits: int = 0
     batch_fns: Dict[int, object] = dc_field(default_factory=dict)
+    # storage-backed entries: per-part column/skip-predicate
+    # requirements derived from the compiled plans (storage.catalog)
+    storage_req: Optional[dict] = None
 
     def manifest(self, source: str) -> M.Manifest:
         return self.sp.manifests[source]
@@ -149,19 +152,25 @@ class QueryService:
                  for name, bag in env.items()}
         entry = self._cache.get(key)
         if entry is not None:
-            self.stats["hits"] += 1
-            entry.hits += 1
-            self._cache.move_to_end(key)
+            self._touch(key, entry)
         else:
-            self.stats["misses"] += 1
-            entry = self._compile(key, lifted, env_c, class_caps,
-                                  len(values))
-            self._cache[key] = entry
-            if len(self._cache) > self.max_entries:
-                self._cache.popitem(last=False)
-                self.stats["evictions"] += 1
+            entry = self._remember(key, self._compile(
+                key, lifted, env_c, class_caps, len(values)))
         params = {f"__p{i}": v for i, v in enumerate(values)}
         return entry, params, env_c
+
+    def _touch(self, key: tuple, entry: CacheEntry) -> None:
+        self.stats["hits"] += 1
+        entry.hits += 1
+        self._cache.move_to_end(key)
+
+    def _remember(self, key: tuple, entry: CacheEntry) -> CacheEntry:
+        self.stats["misses"] += 1
+        self._cache[key] = entry
+        if len(self._cache) > self.max_entries:
+            self._cache.popitem(last=False)
+            self.stats["evictions"] += 1
+        return entry
 
     def _compile(self, key: tuple, lifted: N.Program,
                  env_c: Dict[str, FlatBag],
@@ -176,20 +185,35 @@ class QueryService:
                 use_kernel=self.settings.use_kernel, **self.dist_kwargs)
             return CacheEntry(key, cp, sp, None, runner, (),
                               dict(class_caps))
+        return self._local_entry(key, sp, cp, class_caps, n_params)
+
+    def _local_entry(self, key: tuple, sp: M.ShreddedProgram,
+                     cp: CG.CompiledProgram, class_caps: Dict[str, int],
+                     n_params: int, storage_req=None) -> CacheEntry:
+        """The shared local jit-and-cache tail (in-memory and
+        storage-backed misses)."""
         exe = CG.jit_program(cp, self.settings)
         # every positionally lifted name is a legal binding, even when
         # its expression died in DCE/pruning (binds to nothing)
         exe.accepted = frozenset(f"__p{i}" for i in range(n_params))
         return CacheEntry(key, cp, sp, exe, None,
                           tuple(sorted(exe.param_defaults)),
-                          dict(class_caps))
+                          dict(class_caps), storage_req=storage_req)
 
     # -- execution ---------------------------------------------------------
-    def execute(self, program: N.Program, env: Dict[str, FlatBag]
-                ) -> Dict[str, FlatBag]:
+    def execute(self, program: N.Program, env) -> Dict[str, FlatBag]:
         """Run one program invocation; returns the output bags (every
         manifest top + dictionary). Warm path: cache hit, parameter
-        rebind, zero shredding / plan passes / tracing."""
+        rebind, zero shredding / plan passes / tracing. ``env`` is
+        either an environment of FlatBags or a persisted
+        ``storage.StoredDataset`` (routed through
+        ``execute_stored``)."""
+        if hasattr(env, "load_env"):       # storage.StoredDataset
+            return self.execute_stored(program, env)
+        assert not hasattr(env, "ensure_loaded"), (
+            "QueryService.execute received a lazy StorageEnv; pass the "
+            "StoredDataset itself (execute / execute_stored), or run "
+            "the eager path via codegen.run_flat_program")
         entry, params, env_c = self._lookup(program, env)
         if entry.runner is not None:
             out, _metrics = entry.runner(env_c)
@@ -229,6 +253,80 @@ class QueryService:
         batched = vfn(env_c, stacked)
         return [_slice_outputs(batched, i) for i in range(B)]
 
+    # -- storage-backed execution ------------------------------------------
+    def fingerprint_stored(self, program: N.Program, dataset
+                           ) -> Tuple[tuple, N.Program, list]:
+        """Cache key for a (program, stored dataset) pair. The dataset
+        fingerprint covers schemas and row totals but NOT chunk
+        selection — one warm plan serves every parameter binding while
+        zone maps re-select chunks per call."""
+        lifted, values = lift_program(program)
+        key = (N.program_fingerprint(lifted),
+               ("stored",) + dataset.fingerprint())
+        return key, lifted, values
+
+    def _lookup_stored(self, program: N.Program, dataset
+                       ) -> Tuple[CacheEntry, Dict[str, object],
+                                  Dict[str, FlatBag]]:
+        from repro.storage import storage_requirements
+        assert self.mesh is None, (
+            "storage-backed serving is a local-path feature")
+        key, lifted, values = self.fingerprint_stored(program, dataset)
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._touch(key, entry)
+        else:
+            sp = M.shred_program(lifted, self.input_types,
+                                 domain_elimination=self.domain_elim)
+            cp = CG.compile_program(sp, self.catalog)
+            req = storage_requirements(cp, set(dataset.parts))
+            # capacities pin to the FULL part's class regardless of the
+            # per-call chunk selection, so traced shapes never change
+            class_caps = {part: _class_capacity(
+                max(dataset.parts[part].rows, 1)) for part in req}
+            entry = self._remember(key, self._local_entry(
+                key, sp, cp, class_caps, len(values), storage_req=req))
+        params = {f"__p{i}": v for i, v in enumerate(values)}
+        env = dataset.load_env(
+            columns={p: r.columns for p, r in entry.storage_req.items()},
+            preds={p: r.pred for p, r in entry.storage_req.items()},
+            params=params, capacities=entry.class_caps)
+        return entry, params, env
+
+    def execute_stored(self, program: N.Program, dataset
+                       ) -> Dict[str, FlatBag]:
+        """Run one invocation against a persisted dataset
+        (``storage.StoredDataset``). The warm path re-resolves the
+        pushed-down ``N.Param`` predicates against the dataset's zone
+        maps at bind time — chunk selection adapts per call while the
+        cached executable re-runs with ZERO tracing (capacities are
+        pinned to the full part's class)."""
+        entry, params, env = self._lookup_stored(program, dataset)
+        return entry.exe(env, params)
+
+    def unshred_stored(self, program: N.Program, dataset,
+                       outputs: Dict[str, FlatBag], source: str) -> list:
+        """Host-side nested rows of a stored-path result (the storage
+        twin of ``unshred``)."""
+        key, lifted, _ = self.fingerprint_stored(program, dataset)
+        return self._rows_for(key, lifted, outputs, source)
+
+    def _rows_for(self, key: tuple, lifted: N.Program,
+                  outputs: Dict[str, FlatBag], source: str) -> list:
+        """Manifest lookup (cached entry, else re-shred only) + the
+        parts -> nested rows assembly shared by both unshred paths."""
+        entry = self._cache.get(key)
+        if entry is not None:
+            man = entry.manifest(source)
+        else:
+            sp = M.shred_program(lifted, self.input_types,
+                                 domain_elimination=self.domain_elim)
+            man = sp.manifests[source]
+        parts = {(): outputs[man.top]}
+        for path, name in man.dicts.items():
+            parts[path] = outputs[name]
+        return CG.parts_to_rows(parts, man.ty)
+
     def warmup(self, program: N.Program, env: Dict[str, FlatBag]
                ) -> Dict[str, FlatBag]:
         """Populate the cache (and, on the dist path, resolve adaptive
@@ -244,18 +342,10 @@ class QueryService:
         parts directly). Peeks at the cache without touching stats or
         LRU order; an evicted entry's manifest is recovered by
         re-shredding only (no plan compile)."""
+        if hasattr(env, "load_env"):       # storage.StoredDataset
+            return self.unshred_stored(program, env, outputs, source)
         key, lifted, _, _ = self.fingerprint(program, env)
-        entry = self._cache.get(key)
-        if entry is not None:
-            man = entry.manifest(source)
-        else:
-            sp = M.shred_program(lifted, self.input_types,
-                                 domain_elimination=self.domain_elim)
-            man = sp.manifests[source]
-        parts = {(): outputs[man.top]}
-        for path, name in man.dicts.items():
-            parts[path] = outputs[name]
-        return CG.parts_to_rows(parts, man.ty)
+        return self._rows_for(key, lifted, outputs, source)
 
 
 def _slice_outputs(batched: Dict[str, FlatBag], i: int

@@ -1,0 +1,16 @@
+"""Shredded columnar storage engine: persistent on-disk format for
+value-shredded nested collections with zone-map scan pruning and
+streaming ingest (DESIGN.md "Shredded columnar storage")."""
+
+from .catalog import (PartRequirement, StorageCatalog, StorageEnv,
+                      storage_requirements)
+from .format import DatasetMeta, PartMeta, chunk_may_match
+from .reader import (STORAGE_STATS, StoredDataset, StoredPart,
+                     reset_storage_stats, restore_encoders)
+from .writer import DatasetWriter
+
+__all__ = ["DatasetMeta", "DatasetWriter", "PartMeta", "PartRequirement",
+           "STORAGE_STATS", "StorageCatalog", "StorageEnv",
+           "StoredDataset", "StoredPart", "chunk_may_match",
+           "reset_storage_stats", "restore_encoders",
+           "storage_requirements"]

@@ -1,0 +1,213 @@
+"""Reader for the shredded columnar storage format.
+
+``StoredPart.load`` np-loads ONLY the requested columns and ONLY the
+requested chunks, reassembling a ``FlatBag`` at a chosen capacity with
+the persisted ``PhysicalProps`` (sort order / partitioning) re-attached
+— chunks come back in written row order, so a persisted ``sorted_by``
+still holds after skipping arbitrary chunks.
+
+All load activity is metered in ``STORAGE_STATS`` (chunks read/skipped,
+columns read/pruned, bytes read); the storage tests and
+``benchmarks/storage.py`` assert pruning through these counters.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.columnar.props import PhysicalProps
+from repro.columnar.table import FlatBag, StringEncoder
+from repro.core import nrc as N
+
+from .format import (DatasetMeta, PartMeta, chunk_may_match, chunk_path,
+                     dir_bytes, read_footer)
+
+STORAGE_STATS: Dict[str, int] = {}
+"""Host-side scan counters: ``chunks_read`` / ``chunks_skipped`` (zone
+maps), ``columns_read`` / ``columns_pruned`` (projection pushdown),
+``bytes_read``, ``parts_loaded``."""
+
+
+def reset_storage_stats() -> None:
+    STORAGE_STATS.clear()
+
+
+def _count(name: str, n: int = 1) -> None:
+    STORAGE_STATS[name] = STORAGE_STATS.get(name, 0) + n
+
+
+def restore_encoders(meta: DatasetMeta, strict: bool = True
+                     ) -> Dict[str, StringEncoder]:
+    """Rebuild the per-column string encoders exactly as persisted. The
+    storage reader hands out STRICT encoders: decoding a code outside
+    the persisted vocabulary raises instead of fabricating ``"<code>"``
+    (a wrong code coming off disk is corruption, not a display issue)."""
+    return {col: StringEncoder.from_vocab(rev, strict=strict)
+            for col, rev in meta.encoders.items()}
+
+
+@dataclass
+class StoredPart:
+    dirpath: str                # dataset directory
+    meta: PartMeta
+
+    @property
+    def name(self) -> str:
+        return self.meta.name
+
+    @property
+    def rows(self) -> int:
+        return self.meta.rows
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.meta.chunks)
+
+    @property
+    def columns(self) -> List[str]:
+        return sorted(self.meta.schema)
+
+    def bytes_on_disk(self) -> int:
+        return dir_bytes(os.path.join(self.dirpath, self.meta.name))
+
+    # -- zone-map chunk selection -----------------------------------------
+    def select_chunks(self, pred: Optional[N.Expr],
+                      params: Optional[dict] = None) -> List[int]:
+        """Chunk indices that may contain rows satisfying ``pred``
+        (all chunks when ``pred`` is None). Sound, not exact: a chunk is
+        dropped only when its zone maps prove no row can match."""
+        if pred is None:
+            return list(range(self.n_chunks))
+        return [i for i, c in enumerate(self.meta.chunks)
+                if chunk_may_match(pred, c.zones, self.meta.schema, params)]
+
+    # -- loading -----------------------------------------------------------
+    def load(self, columns: Optional[Sequence[str]] = None,
+             chunks: Optional[Sequence[int]] = None,
+             capacity: Optional[int] = None) -> FlatBag:
+        """Read ``columns`` (default all) of ``chunks`` (default all)
+        into a FlatBag of ``capacity`` (default: exactly the loaded
+        rows; larger capacities pad with invalid rows so one compiled
+        plan serves every chunk selection of the part)."""
+        meta = self.meta
+        if columns is None:
+            cols = sorted(meta.schema)
+        else:
+            unknown = set(columns) - set(meta.schema)
+            assert not unknown, (
+                f"{meta.name}: unknown columns {sorted(unknown)}")
+            cols = sorted(columns)
+        sel = list(range(self.n_chunks)) if chunks is None \
+            else sorted(chunks)
+        nrows = sum(meta.chunks[i].rows for i in sel)
+        cap = capacity if capacity is not None else max(nrows, 1)
+        assert cap >= nrows, (
+            f"{meta.name}: capacity {cap} < selected rows {nrows}")
+        _count("parts_loaded")
+        _count("chunks_read", len(sel) * len(cols))
+        _count("chunks_skipped", (self.n_chunks - len(sel)) * len(cols))
+        _count("columns_read", len(cols))
+        _count("columns_pruned", len(meta.schema) - len(cols))
+        data = {}
+        for col in cols:
+            dtype = np.dtype(meta.dtypes[col])
+            buf = np.zeros(cap, dtype=dtype)
+            off = 0
+            for i in sel:
+                a = np.load(chunk_path(self.dirpath, meta.name, col, i),
+                            mmap_mode="r")
+                assert a.shape[0] == meta.chunks[i].rows, (
+                    f"{meta.name}.{col} chunk {i}: {a.shape[0]} rows on "
+                    f"disk != {meta.chunks[i].rows} in footer")
+                buf[off:off + a.shape[0]] = a
+                _count("bytes_read", a.shape[0] * dtype.itemsize)
+                off += a.shape[0]
+            data[col] = jnp.asarray(buf)
+        valid = jnp.arange(cap) < nrows
+        props = self._props(cols)
+        return FlatBag(data, valid, props)
+
+    def _props(self, cols: Sequence[str]) -> Optional[PhysicalProps]:
+        """Persisted physical properties, restricted to loaded columns.
+        ``sorted_by`` survives as its longest loaded prefix (chunk
+        skipping preserves written row order); ``partitioning`` only
+        when every column survives. Rows load valid-first, so
+        ``invalid_last`` always holds."""
+        meta = self.meta
+        cs = set(cols)
+        sb: Optional[tuple] = None
+        if meta.sorted_by:
+            pref = []
+            for c in meta.sorted_by:
+                if c not in cs:
+                    break
+                pref.append(c)
+            sb = tuple(pref) or None
+        part = meta.partitioning if (meta.partitioning
+                                     and set(meta.partitioning) <= cs) \
+            else None
+        return PhysicalProps(sorted_by=sb, invalid_last=True,
+                             partitioning=part)
+
+
+class StoredDataset:
+    """One opened dataset: parts, types, strict encoders."""
+
+    def __init__(self, dirpath: str):
+        self.dir = dirpath
+        self.meta = read_footer(dirpath)
+        self.parts: Dict[str, StoredPart] = {
+            n: StoredPart(dirpath, pm) for n, pm in self.meta.parts.items()}
+        self.input_types: Dict[str, N.BagT] = dict(self.meta.input_types)
+        self.encoders: Dict[str, StringEncoder] = \
+            restore_encoders(self.meta, strict=True)
+
+    @property
+    def name(self) -> str:
+        return self.meta.name
+
+    def part(self, name: str) -> StoredPart:
+        return self.parts[name]
+
+    def bytes_on_disk(self) -> int:
+        return dir_bytes(self.dir)
+
+    def fingerprint(self) -> tuple:
+        """Cache-key component for the query service: identifies the
+        dataset contents a compiled plan was bound against (schemas and
+        row totals; chunk *selection* deliberately excluded — it varies
+        per parameter binding under one warm plan)."""
+        return (self.name, tuple(
+            (n, p.rows, tuple(sorted(p.meta.schema.items())))
+            for n, p in sorted(self.parts.items())))
+
+    def load_env(self,
+                 columns: Optional[Dict[str, Optional[set]]] = None,
+                 preds: Optional[Dict[str, Optional[N.Expr]]] = None,
+                 params: Optional[dict] = None,
+                 capacities: Optional[Dict[str, int]] = None
+                 ) -> Dict[str, FlatBag]:
+        """Materialize parts as an execution environment. ``columns``
+        restricts parts AND their loaded columns (None value = all
+        columns of that part); ``preds`` drives zone-map chunk skipping;
+        ``capacities`` pins per-part capacities (the query service pins
+        them to the full-part capacity class so chunk selection never
+        changes traced shapes)."""
+        names = sorted(columns) if columns is not None \
+            else sorted(self.parts)
+        env: Dict[str, FlatBag] = {}
+        for name in names:
+            part = self.parts[name]
+            cols = None if columns is None else columns[name]
+            pred = (preds or {}).get(name)
+            sel = part.select_chunks(pred, params)
+            cap = (capacities or {}).get(name)
+            env[name] = part.load(
+                columns=sorted(cols) if cols is not None else None,
+                chunks=sel, capacity=cap)
+        return env

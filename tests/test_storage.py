@@ -1,0 +1,524 @@
+"""Shredded columnar storage engine: write -> reopen round trip
+(bit-for-bit), streaming-append label continuity, strict string-encoder
+vocabulary persistence, zone-map chunk skipping + column pruning
+counters, and query parity over persisted datasets via both
+``run_flat_program`` (lazy StorageEnv) and ``QueryService.execute_stored``
+(bind-time predicate resolution, zero warm retracing)."""
+
+import numpy as np
+import pytest
+
+from repro.columnar.table import StringEncoder
+from repro.core import codegen as CG
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.unnesting import Catalog
+from repro.serve import QueryService
+from repro.storage import (STORAGE_STATS, StorageCatalog,
+                           reset_storage_stats, storage_requirements)
+
+PART_T = N.bag(N.tuple_t(pid=N.INT, pname=N.INT, price=N.REAL,
+                         mfgr=N.INT))
+ORD_T = N.bag(N.tuple_t(
+    odate=N.INT,
+    oparts=N.bag(N.tuple_t(pid=N.INT, qty=N.REAL, note=N.INT))))
+INPUT_TYPES = {"Ord": ORD_T, "Part": PART_T}
+CATALOG = Catalog(unique_keys={"Part__F": ("pid",)})
+
+
+def family(min_price: float) -> N.Program:
+    Part = N.Var("Part", PART_T)
+    Ord = N.Var("Ord", ORD_T)
+
+    def tops(x):
+        inner = N.for_in("op", x.oparts, lambda op:
+            N.for_in("p", Part, lambda p:
+                N.IfThen(N.BoolOp("&&", op.pid.eq(p.pid),
+                                  p.price.ge(N.Const(min_price, N.REAL))),
+                         N.Singleton(N.record(pname=p.pname,
+                                              total=op.qty * p.price)))))
+        return N.SumBy(inner, keys=("pname",), values=("total",))
+
+    q = N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate, tops=tops(x))))
+    return N.Program([N.Assignment("Q", q)])
+
+
+def gen_data(n_orders=50, n_parts=64, seed=0):
+    rng = np.random.RandomState(seed)
+    orders = [{"odate": 20200000 + i,
+               "oparts": [{"pid": int(rng.randint(1, n_parts + 1)),
+                           "qty": float(rng.randint(1, 5)), "note": 7}
+                          for _ in range(rng.randint(0, 5))]}
+              for i in range(n_orders)]
+    # prices equal pid: consecutive chunks carry disjoint price ranges,
+    # so a selective price predicate provably skips chunks
+    parts = [{"pid": i, "pname": 100 + i, "price": float(i),
+              "mfgr": i % 5} for i in range(1, n_parts + 1)]
+    return {"Ord": orders, "Part": parts}
+
+
+@pytest.fixture(scope="module")
+def data():
+    return gen_data()
+
+
+@pytest.fixture(scope="module")
+def dataset(data, tmp_path_factory):
+    cat = StorageCatalog(str(tmp_path_factory.mktemp("store")))
+    return cat.write("shop", data, INPUT_TYPES, chunk_rows=16)
+
+
+def norm(rows):
+    return sorted(
+        (r["odate"], tuple(sorted((t["pname"], round(t["total"], 6))
+                                  for t in r["tops"])))
+        for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# round trip
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_bit_for_bit(data, dataset):
+    env_mem = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    env_disk = dataset.load_env()
+    assert set(env_mem) == set(env_disk)
+    for name, bag in env_mem.items():
+        got = env_disk[name]
+        assert bag.columns == got.columns
+        assert bag.capacity == got.capacity
+        for c in bag.data:
+            assert np.array_equal(np.asarray(bag.data[c]),
+                                  np.asarray(got.data[c])), (name, c)
+        assert np.array_equal(np.asarray(bag.valid),
+                              np.asarray(got.valid)), name
+
+
+def test_streaming_append_matches_one_shot(data, tmp_path):
+    """N appended batches == one-shot shred, labels included (the
+    label-base continuation contract)."""
+    cat = StorageCatalog(str(tmp_path))
+    w = cat.writer("stream", INPUT_TYPES, chunk_rows=16)
+    orders = data["Ord"]
+    w.append({"Ord": orders[:20], "Part": data["Part"]})
+    w.append({"Ord": orders[20:35]})
+    w.append({"Ord": orders[35:]})
+    env_mem = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    env_disk = cat.open("stream").load_env()
+    for name, bag in env_mem.items():
+        got = env_disk[name]
+        for c in bag.data:
+            assert np.array_equal(np.asarray(bag.data[c]),
+                                  np.asarray(got.data[c])), (name, c)
+
+
+def test_writer_resume_continues_and_fresh_overwrites(data, tmp_path):
+    """resume=True reopens a dataset for continued streaming (labels
+    carry on exactly); a fresh writer wipes stale chunks instead of
+    shadowing them."""
+    cat = StorageCatalog(str(tmp_path))
+    orders = data["Ord"]
+    w = cat.writer("grow", INPUT_TYPES, chunk_rows=16)
+    w.append({"Ord": orders[:20], "Part": data["Part"]})
+    # simulate a process restart: a NEW writer resumes the footer state
+    w2 = cat.writer("grow", INPUT_TYPES, chunk_rows=16, resume=True)
+    w2.append({"Ord": orders[20:]})
+    env_mem = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    env_disk = cat.open("grow").load_env()
+    for name, bag in env_mem.items():
+        for c in bag.data:
+            assert np.array_equal(np.asarray(bag.data[c]),
+                                  np.asarray(env_disk[name].data[c])), \
+                (name, c)
+    # fresh (non-resume) writer on the same name starts over: no stale
+    # rows or orphan chunks survive
+    w3 = cat.writer("grow", INPUT_TYPES, chunk_rows=16)
+    w3.append({"Ord": orders[:5], "Part": data["Part"][:3]})
+    ds3 = cat.open("grow", refresh=True)
+    assert ds3.parts["Ord__F"].rows == 5
+    assert ds3.parts["Part__F"].rows == 3
+    assert ds3.parts["Ord__F"].n_chunks == 1
+
+
+def test_footer_survives_reopen(dataset):
+    ds2 = StorageCatalog(dataset.dir.rsplit("/", 1)[0]).open(
+        "shop", refresh=True)
+    assert ds2.fingerprint() == dataset.fingerprint()
+    pm = ds2.parts["Part__F"].meta
+    assert pm.schema["price"] == "real"
+    assert pm.chunks and all(c.rows <= 16 for c in pm.chunks)
+    z = pm.chunks[0].zones["price"]
+    assert z["lo"] == 1.0 and z["hi"] == 16.0 and z["distinct"] == 16
+
+
+# ---------------------------------------------------------------------------
+# strict string encoders
+# ---------------------------------------------------------------------------
+
+STR_T = N.bag(N.tuple_t(k=N.INT, city=N.STRING))
+
+
+def test_encoder_vocab_roundtrip_and_strict(tmp_path):
+    rows = [{"k": i, "city": c} for i, c in
+            enumerate(["lyon", "oslo", "kobe", "lyon", "oslo"])]
+    cat = StorageCatalog(str(tmp_path))
+    enc = {}
+    w = cat.writer("cities", {"R": STR_T}, chunk_rows=2, encoders=enc)
+    w.write({"R": rows})
+    ds = cat.open("cities")
+    # vocabulary persisted exactly
+    assert ds.encoders["city"].rev == enc["city"].rev == \
+        ["lyon", "oslo", "kobe"]
+    bag = ds.parts["R__F"].load()
+    decoded = [r["city"] for r in bag.to_rows(decoders=ds.encoders)]
+    assert decoded == ["lyon", "oslo", "kobe", "lyon", "oslo"]
+    # strict mode: out-of-range code raises instead of fabricating
+    with pytest.raises(KeyError):
+        ds.encoders["city"].decode(99)
+    with pytest.raises(KeyError):
+        ds.encoders["city"].encode("quito")
+    # the default encoder still fabricates (display fallback)
+    assert StringEncoder().decode(99) == "<99>"
+
+
+# ---------------------------------------------------------------------------
+# requirements extraction + zone-map skipping
+# ---------------------------------------------------------------------------
+
+def compile_family(min_price):
+    sp = M.shred_program(family(min_price), INPUT_TYPES,
+                         domain_elimination=True)
+    return sp, CG.compile_program(sp, CATALOG)
+
+
+def test_storage_requirements(dataset):
+    _, cp = compile_family(40.0)
+    req = storage_requirements(cp, set(dataset.parts))
+    assert req["Part__F"].columns == {"pid", "pname", "price"}
+    assert req["Ord__D_oparts"].columns == {"label", "pid", "qty"}
+    assert req["Ord__F"].columns == {"odate", "oparts"}
+    # only the Part side has a pushed-down row-local predicate
+    assert req["Part__F"].pred is not None
+    assert req["Ord__F"].pred is None
+    assert col_set(req["Part__F"].pred) == {"price"}
+
+
+def col_set(pred):
+    from repro.core.plans import col_expr_deps
+    return col_expr_deps(pred)
+
+
+def test_zone_map_selects_fewer_chunks(dataset):
+    from repro.serve.query_service import lift_program
+    lifted, _ = lift_program(family(0.0))
+    sp = M.shred_program(lifted, INPUT_TYPES, domain_elimination=True)
+    cp = CG.compile_program(sp, CATALOG)
+    req = storage_requirements(cp, set(dataset.parts))
+    part = dataset.parts["Part__F"]
+    all_chunks = part.select_chunks(None)
+    # price == pid in [1, 64], chunk_rows=16: predicate price >= 40
+    # refutes the first two chunks outright
+    sel = part.select_chunks(req["Part__F"].pred, {"__p0": 40.0})
+    assert len(sel) < len(all_chunks)
+    assert sel == [2, 3]
+    # and the selection adapts with the parameter
+    assert part.select_chunks(req["Part__F"].pred, {"__p0": 60.0}) == [3]
+    assert part.select_chunks(req["Part__F"].pred, {"__p0": -1.0}) \
+        == all_chunks
+
+
+def test_pruned_scan_reads_fewer_columns_and_chunks(data, dataset):
+    """Acceptance: the storage scan demonstrably reads fewer columns
+    and fewer chunks than a full load (counters)."""
+    reset_storage_stats()
+    dataset.load_env()
+    full = dict(STORAGE_STATS)
+    sp, cp = compile_family(40.0)
+    req = storage_requirements(cp, set(dataset.parts))
+    reset_storage_stats()
+    env = dataset.load_env(
+        columns={p: r.columns for p, r in req.items()},
+        preds={p: r.pred for p, r in req.items()},
+        params={"__p0": 40.0})
+    pruned = dict(STORAGE_STATS)
+    assert pruned["columns_read"] < full["columns_read"]
+    assert pruned["chunks_read"] < full["chunks_read"]
+    assert pruned["chunks_skipped"] > 0
+    assert pruned["bytes_read"] < full["bytes_read"]
+    # and the pruned load still computes the right answer
+    out = CG.run_flat_program(cp, env)
+    man = sp.manifests["Q"]
+    parts = {(): out[man.top]}
+    for path, name in man.dicts.items():
+        parts[path] = out[name]
+    env_mem = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    out_mem = CG.run_flat_program(cp, env_mem)
+    parts_mem = {(): out_mem[man.top]}
+    for path, name in man.dicts.items():
+        parts_mem[path] = out_mem[name]
+    assert norm(CG.parts_to_rows(parts, man.ty)) == \
+        norm(CG.parts_to_rows(parts_mem, man.ty))
+
+
+# ---------------------------------------------------------------------------
+# query parity: run_flat_program over a lazy StorageEnv
+# ---------------------------------------------------------------------------
+
+def test_run_flat_program_parity_storage_env(data, dataset):
+    """Acceptance: same unshredded result over the persisted dataset as
+    over the in-memory shredded value (eager path, ScanP storage
+    mode)."""
+    sp, cp = compile_family(32.0)
+    man = sp.manifests["Q"]
+    cat = StorageCatalog(dataset.dir.rsplit("/", 1)[0])
+    reset_storage_stats()
+    env_lazy = cat.env("shop", cp)
+    out_disk = CG.run_flat_program(cp, env_lazy)
+    assert STORAGE_STATS["columns_pruned"] > 0    # mfgr / note unread
+    # each part loads exactly once, with only its pruned columns —
+    # the plain-ScanP ensure must not force a full-column reload
+    assert STORAGE_STATS["parts_loaded"] == 3
+    assert STORAGE_STATS["columns_read"] == 8     # of 10 total
+    env_mem = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    out_mem = CG.run_flat_program(cp, env_mem)
+
+    def rows_of(out):
+        parts = {(): out[man.top]}
+        for path, name in man.dicts.items():
+            parts[path] = out[name]
+        return CG.parts_to_rows(parts, man.ty)
+
+    assert norm(rows_of(out_disk)) == norm(rows_of(out_mem))
+
+
+# ---------------------------------------------------------------------------
+# query parity + warm behavior: QueryService.execute_stored
+# ---------------------------------------------------------------------------
+
+def test_query_service_stored_parity_and_warm_skipping(data, dataset):
+    """Acceptance: QueryService parity with the in-memory path, plus
+    warm calls with new N.Param values -> zero retraces while chunk
+    selection changes."""
+    svc = QueryService(INPUT_TYPES, catalog=CATALOG)
+    env = svc.shred_inputs(data)
+
+    out_mem = svc.execute(family(32.0), env)
+    rows_mem = svc.unshred(family(32.0), env, out_mem, "Q")
+
+    CG.reset_trace_stats()
+    out_disk = svc.execute_stored(family(32.0), ds := dataset)
+    rows_disk = svc.unshred_stored(family(32.0), ds, out_disk, "Q")
+    assert norm(rows_mem) == norm(rows_disk)
+    cold_traces = CG.TRACE_STATS.get("traces", 0)
+    assert svc.stats["misses"] == 2          # one memory, one stored
+
+    # warm: different constants = same family; chunk selection adapts
+    reset_storage_stats()
+    out2 = svc.execute_stored(family(60.0), ds)
+    assert CG.TRACE_STATS.get("traces", 0) == cold_traces
+    assert svc.stats["hits"] >= 1
+    warm_hi = dict(STORAGE_STATS)
+    reset_storage_stats()
+    out3 = svc.execute_stored(family(-5.0), ds)
+    assert CG.TRACE_STATS.get("traces", 0) == cold_traces
+    warm_all = dict(STORAGE_STATS)
+    assert warm_hi["chunks_skipped"] > warm_all["chunks_skipped"]
+    assert warm_hi["chunks_read"] < warm_all["chunks_read"]
+
+    # parity at both new parameter values
+    rows2 = svc.unshred_stored(family(60.0), ds, out2, "Q")
+    mem2 = svc.unshred(family(60.0), env, svc.execute(family(60.0), env),
+                       "Q")
+    assert norm(rows2) == norm(mem2)
+    rows3 = svc.unshred_stored(family(-5.0), ds, out3, "Q")
+    mem3 = svc.unshred(family(-5.0), env, svc.execute(family(-5.0), env),
+                       "Q")
+    assert norm(rows3) == norm(mem3)
+
+
+def test_execute_routes_stored_dataset(data, dataset):
+    """``QueryService.execute`` / ``unshred`` accept a StoredDataset
+    directly in place of an in-memory environment."""
+    svc = QueryService(INPUT_TYPES, catalog=CATALOG)
+    env = svc.shred_inputs(data)
+    out_disk = svc.execute(family(20.0), dataset)
+    rows_disk = svc.unshred(family(20.0), dataset, out_disk, "Q")
+    rows_mem = svc.unshred(family(20.0), env,
+                           svc.execute(family(20.0), env), "Q")
+    assert norm(rows_disk) == norm(rows_mem)
+
+
+def test_stored_cache_misses_on_dataset_change(data, dataset, tmp_path):
+    """Appending data changes the dataset fingerprint -> new entry."""
+    svc = QueryService(INPUT_TYPES, catalog=CATALOG)
+    svc.execute_stored(family(10.0), dataset)
+    assert svc.stats["misses"] == 1
+    cat = StorageCatalog(str(tmp_path))
+    w = cat.writer("shop2", INPUT_TYPES, chunk_rows=16)
+    w.append(data)
+    ds2 = cat.open("shop2")
+    svc.execute_stored(family(10.0), ds2)    # same rows, same key shape
+    w.append({"Ord": data["Ord"][:3]})
+    ds2b = cat.open("shop2", refresh=True)
+    svc.execute_stored(family(10.0), ds2b)
+    assert svc.stats["misses"] == 3          # grown dataset recompiles
+
+
+# ---------------------------------------------------------------------------
+# persisted physical props
+# ---------------------------------------------------------------------------
+
+def test_storage_env_widens_loaded_columns(data, dataset):
+    """Two assignments reading DISJOINT column sets of one stored part:
+    the second scan must widen the lazily loaded column set (regression:
+    the ensure hook used to skip parts already present in the env)."""
+    Part = N.Var("Part", PART_T)
+    q1 = N.SumBy(N.for_in("p", Part, lambda p:
+                          N.Singleton(N.record(pid=p.pid, v=p.price))),
+                 keys=("pid",), values=("v",))
+    q2 = N.SumBy(N.for_in("p", Part, lambda p:
+                          N.Singleton(N.record(mfgr=p.mfgr, c=p.pname))),
+                 keys=("mfgr",), values=("c",))
+    prog = N.Program([N.Assignment("A", q1), N.Assignment("B", q2)])
+    sp = M.shred_program(prog, INPUT_TYPES, domain_elimination=True)
+    cp = CG.compile_program(sp, CATALOG)
+    cat = StorageCatalog(dataset.dir.rsplit("/", 1)[0])
+    out = CG.run_flat_program(cp, cat.env("shop", cp))
+    mem = CG.run_flat_program(cp, CG.columnar_shred_inputs(data,
+                                                           INPUT_TYPES))
+    for name in ("A", "B"):
+        for c in mem[name].data:
+            assert np.array_equal(
+                np.asarray(mem[name].data[c])[np.asarray(mem[name].valid)],
+                np.asarray(out[name].data[c])[np.asarray(out[name].valid)])
+
+
+def test_append_invalidates_persisted_props(data, tmp_path):
+    """A second batch breaks global sortedness: the footer must drop
+    sorted_by/partitioning captured from the first write_parts — and a
+    second write_parts on the same part is refused outright (labels
+    cannot be offset for a bundle)."""
+    from repro.columnar.props import PhysicalProps
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    bag = env["Part__F"].with_props(PhysicalProps(sorted_by=("pid",)))
+    cat = StorageCatalog(str(tmp_path))
+    w = cat.writer("grow", INPUT_TYPES, chunk_rows=16)
+    w.write_parts({"Part__F": bag})
+    assert w.meta.parts["Part__F"].sorted_by == ("pid",)
+    with pytest.raises(AssertionError):
+        w.write_parts({"Part__F": bag})
+    w.append({"Part": data["Part"]})     # appended: order now broken
+    assert w.meta.parts["Part__F"].sorted_by is None
+    part = cat.open("grow", refresh=True).parts["Part__F"]
+    assert part.load().props.sorted_by is None
+
+
+def test_pruned_scan_keeps_rowid(data):
+    """A pruned with_rowid scan still generates alias.__rowid
+    (regression: _eval_pruned dropped the flag)."""
+    from repro.core.plans import ScanP, _PrunedScan, eval_plan
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    p = _PrunedScan(ScanP("Part__F", "x", with_rowid=True),
+                    frozenset({"x.pid", "x.__rowid"}))
+    bag = eval_plan(p, env)
+    assert sorted(bag.columns) == ["x.__rowid", "x.pid"]
+
+
+def test_zero_row_append_keeps_props(data, tmp_path):
+    """An append contributing no rows must not invalidate persisted
+    sort/partition props (the on-disk bytes are unchanged)."""
+    from repro.columnar.props import PhysicalProps
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    bag = env["Part__F"].with_props(PhysicalProps(sorted_by=("pid",)))
+    cat = StorageCatalog(str(tmp_path))
+    w = cat.writer("z", INPUT_TYPES, chunk_rows=16)
+    w.write_parts({"Part__F": bag})
+    w.append({"Part": []})
+    assert w.meta.parts["Part__F"].sorted_by == ("pid",)
+
+
+def test_resume_rejects_conflicting_encoder(tmp_path):
+    rows = [{"k": 1, "city": "lyon"}, {"k": 2, "city": "oslo"}]
+    cat = StorageCatalog(str(tmp_path))
+    cat.writer("c", {"R": STR_T}, chunk_rows=4).write({"R": rows})
+    # a fresh empty encoder resumes fine and inherits the vocab
+    enc = {}
+    w = cat.writer("c", {"R": STR_T}, chunk_rows=4, encoders=enc,
+                   resume=True)
+    assert enc["city"].rev == ["lyon", "oslo"]
+    w.append({"R": [{"k": 3, "city": "kobe"}]})
+    assert cat.open("c", refresh=True).encoders["city"].rev == \
+        ["lyon", "oslo", "kobe"]
+    # a conflicting encoder (would remap on-disk codes) is refused
+    bad = {"city": StringEncoder.from_vocab(["oslo"])}
+    with pytest.raises(AssertionError):
+        cat.writer("c", {"R": STR_T}, chunk_rows=4, encoders=bad,
+                   resume=True)
+
+
+def test_eager_params_drive_chunk_selection(data, dataset):
+    """ExecSettings.params reach zone-map selection on the eager path:
+    a binding LOOSER than the lifted default must not skip chunks the
+    evaluator's predicate would keep."""
+    from repro.core.plans import ExecSettings
+    from repro.serve.query_service import lift_program
+    lifted, _ = lift_program(family(60.0))   # default would skip a lot
+    sp = M.shred_program(lifted, INPUT_TYPES, domain_elimination=True)
+    cp = CG.compile_program(sp, CATALOG)
+    man = sp.manifests["Q"]
+    cat = StorageCatalog(dataset.dir.rsplit("/", 1)[0])
+
+    def rows_with(params):
+        env = cat.env("shop", cp)            # no params at env build
+        out = CG.run_flat_program(cp, env, ExecSettings(params=params))
+        parts = {(): out[man.top]}
+        for path, name in man.dicts.items():
+            parts[path] = out[name]
+        return CG.parts_to_rows(parts, man.ty)
+
+    env_mem = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    out_mem = CG.run_flat_program(cp, env_mem,
+                                  ExecSettings(params={"__p0": 2.0}))
+    parts_mem = {(): out_mem[man.top]}
+    for path, name in man.dicts.items():
+        parts_mem[path] = out_mem[name]
+    assert norm(rows_with({"__p0": 2.0})) == \
+        norm(CG.parts_to_rows(parts_mem, man.ty))
+
+
+def test_zone_maps_exact_beyond_float53(tmp_path):
+    """Integer zone bounds above 2**53 stay exact (a float bound would
+    round and skip a matching chunk)."""
+    big = 2 ** 53 + 1
+    BIG_T = N.bag(N.tuple_t(k=N.INT))
+    cat = StorageCatalog(str(tmp_path))
+    cat.writer("big", {"R": BIG_T}, chunk_rows=4).write(
+        {"R": [{"k": big}, {"k": big}]})
+    part = cat.open("big").parts["R__F"]
+    z = part.meta.chunks[0].zones["k"]
+    assert z["lo"] == big and isinstance(z["lo"], int)
+    pred = N.Cmp(">", N.Var("k", N.INT), N.Const(big - 1, N.INT))
+    assert part.select_chunks(pred) == [0]
+
+
+def test_props_persist_through_write_parts(data, tmp_path):
+    from repro.columnar.props import PhysicalProps
+    env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    bag = env["Part__F"]     # generated sorted by pid already
+    bag = bag.with_props(PhysicalProps(sorted_by=("pid",),
+                                       partitioning=("pid",)))
+    cat = StorageCatalog(str(tmp_path))
+    w = cat.writer("props", INPUT_TYPES, chunk_rows=16)
+    w.write_parts({"Part__F": bag})
+    part = cat.open("props").parts["Part__F"]
+    assert part.meta.sorted_by == ("pid",)
+    assert part.meta.partitioning == ("pid",)
+    loaded = part.load()
+    assert loaded.props.sorted_by == ("pid",)
+    assert loaded.props.partitioning == ("pid",)
+    assert loaded.props.invalid_last
+    # column-pruned load keeps the surviving prefix only
+    pruned = part.load(columns=["pname"])
+    assert pruned.props.sorted_by is None
+    assert pruned.props.partitioning is None
