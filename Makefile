@@ -3,29 +3,46 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test bench-quick bench serve-smoke storage-smoke ci
+.PHONY: test test-slow bench-quick bench serve-smoke storage-smoke \
+	skew-smoke ci
 
+# fast tier: everything except the @slow tests (multi-device
+# subprocesses, hypothesis sweeps) — those run in the second tier
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q -m "not slow"
 
-# CI gate: tier-1 tests plus the quick benchmark smoke plus the
-# serving and storage smokes. bench-quick includes the distributed
-# join->sum_by shuffle benchmark, which runs in its own subprocess
-# under --xla_force_host_platform_device_count=8 and asserts the packed
-# exchange's elision + correctness — shuffle regressions fail here,
-# not in production. serve-smoke asserts the plan-cache warm path
-# performs ZERO jax retracing (codegen.TRACE_STATS) and that
+# second tier: the differential property suite + distributed
+# subprocess tests
+test-slow:
+	$(PY) -m pytest -x -q -m slow
+
+# CI gate: both test tiers plus the quick benchmark smoke plus the
+# serving, storage and skew smokes. bench-quick includes the
+# distributed join->sum_by shuffle benchmark, which runs in its own
+# subprocess under --xla_force_host_platform_device_count=8 and asserts
+# the packed exchange's elision + correctness — shuffle regressions
+# fail here, not in production. serve-smoke asserts the plan-cache warm
+# path performs ZERO jax retracing (codegen.TRACE_STATS) and that
 # cross-assignment CSE evaluates a shared join subplan exactly once.
 # storage-smoke writes a dataset, reopens it, asserts query parity with
 # the in-memory path, >=1 zone-map chunk skipped on a selective N.Param
 # predicate, and zero warm retraces while chunk selection changes.
-ci: test bench-quick serve-smoke storage-smoke
+# skew-smoke drives the automatic skew pipeline end to end (persisted
+# sketch -> table_stats -> SkewJoinP -> distributed execution):
+# parity at every Zipf point, auto == plain plan at uniform, bounded
+# measured partition imbalance + >=1.3x shuffled-row cut at high Zipf,
+# and zero warm retraces across two different heavy-key sets (both the
+# raw DistRunner rebind and the QueryService skew_hints path).
+ci: test test-slow bench-quick serve-smoke storage-smoke skew-smoke
 
 serve-smoke:
 	$(PY) -m benchmarks.serving --smoke
 
 storage-smoke:
 	$(PY) -m benchmarks.storage --smoke
+
+skew-smoke:
+	$(PY) -m benchmarks.skew --smoke
 
 # CPU-friendly perf smoke: runs every benchmark section except the
 # 8-virtual-device skew subprocess, fails on any Python exception, and

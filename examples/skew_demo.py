@@ -56,3 +56,37 @@ for aware in (False, True):
     print(f"{label}: correct={ok}  metrics={metrics}")
 print("note: the skew-aware join leaves heavy keys in place and "
       "broadcasts the small build side (paper Fig. 6)")
+
+# --- automatic, compiler-decided skew (DESIGN.md "Automated skew
+# handling"): persist the dataset, let the streaming heavy-key sketch
+# + zone maps drive the SkewJoinP decision, rebind a NEW heavy-key set
+# on the warm runner with zero retraces ------------------------------------
+import tempfile
+
+from repro.core import skew as SKM
+from repro.core.plans import SkewJoinP, _walk_plan, collect_plan_params
+from repro.storage import StorageCatalog, table_stats
+
+cat = StorageCatalog(tempfile.mkdtemp())
+cat.writer("cop", INPUT_TYPES, chunk_rows=256).append(data)
+ds = cat.open("cop")
+stats = table_stats(ds)
+cp_auto = CG.compile_program(
+    sp, Catalog(unique_keys={"Part__F": ("pid",)}),
+    skew_stats=stats, skew_partitions=PN)
+n_sj = sum(1 for _, p in cp_auto.plans for s in _walk_plan(p)
+           if isinstance(s, SkewJoinP))
+print(f"automatic plan: {n_sj} SkewJoinP node(s), "
+      f"params={cp_auto.skew_params}")
+CG.reset_trace_stats()
+runner, out, metrics = CG.compile_program_distributed(
+    cp_auto, env, mesh, cap_factor=16.0)
+traces = CG.TRACE_STATS.get("traces", 0)
+if cp_auto.skew_params:
+    (name,) = collect_plan_params(cp_auto.graph)
+    out, metrics = runner(env, params={name: SKM.pad_heavy([7, 11, 13])})
+parts = {(): out[man.top], **{p: out[n] for p, n in man.dicts.items()}}
+ok = I.bags_equal(direct, CG.parts_to_rows(parts,
+                                           running_example_query().ty))
+print(f"planned skew: correct={ok}  retraces on new heavy set="
+      f"{CG.TRACE_STATS.get('traces', 0) - traces}")

@@ -29,7 +29,7 @@ columnar backend, locally or distributed.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field as dc_field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -41,9 +41,9 @@ from . import interpreter as I
 from . import nrc as N
 from .materialization import Manifest, ShreddedProgram, mat_input_name
 from .plans import ExecSettings, MapP, Plan, ProgramGraph, \
-    annotate_orders, annotate_partitioning, build_program_graph, \
-    collect_params, cse_program, dce_program, eval_plan, \
-    prune_program_columns, push_aggregation, push_order, \
+    annotate_orders, annotate_partitioning, apply_skew_program, \
+    build_program_graph, collect_params, cse_program, dce_program, \
+    eval_plan, prune_program_columns, push_aggregation, push_order, \
     push_partitioning, required_columns
 from .unnesting import Catalog, NestSpec, StandardPlan, compile_flat_query
 
@@ -122,6 +122,10 @@ class CompiledProgram:
     shredded: ShreddedProgram
     graph: Optional[ProgramGraph] = None   # whole-program DAG (post-passes)
     outputs: tuple = ()                    # externally consumed names
+    # SkewJoinP provenance: heavy-key param name -> (bag, attr), so a
+    # serving layer can rebind fresh heavy-key sets on warm calls
+    skew_params: Dict[str, Tuple[str, str]] = dc_field(
+        default_factory=dict)
 
     def pretty(self) -> str:
         from .plans import plan_pretty
@@ -145,7 +149,11 @@ def program_outputs(sp: ShreddedProgram) -> tuple:
 
 def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
                     optimize: bool = True, cse: bool = True,
-                    outputs: Optional[tuple] = None) -> CompiledProgram:
+                    outputs: Optional[tuple] = None,
+                    skew_stats: Optional[dict] = None,
+                    skew_mode: str = "auto",
+                    skew_partitions: int = 8,
+                    skew_threshold: float = 0.025) -> CompiledProgram:
     """Compile the assignment sequence into a ProgramGraph.
 
     Per-assignment passes (aggregation/order/partitioning pushdown) run
@@ -153,7 +161,16 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
     and dead-column pruning driven by ``outputs`` (default: everything
     unshredding consumes — narrow it to prune more aggressively), and
     cross-assignment CSE so structurally identical subplans between TOP
-    and dictionary assignments are hash-consed into shared nodes."""
+    and dictionary assignments are hash-consed into shared nodes.
+
+    ``skew_stats`` ({bag: skew.TableStats}, typically from
+    ``storage.table_stats``) turns on the automatic skew pass
+    (``skew_mode="auto"``): joins whose probe-side heavy-hitter
+    statistics predict imbalance over ``skew_partitions`` become
+    ``SkewJoinP`` nodes with the heavy-key set lifted as a runtime
+    parameter. ``skew_mode="off"`` disables the pass regardless of
+    statistics (the forced-off baseline)."""
+    assert skew_mode in ("auto", "off"), skew_mode
     catalog = catalog or Catalog()
     named: List[Tuple[str, Plan]] = []
     roles: Dict[str, str] = {}
@@ -167,18 +184,26 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
         roles[a.name] = a.role
     outs = tuple(outputs) if outputs is not None else program_outputs(sp)
     graph = build_program_graph(named, outs, roles)
+    skew_info: Dict[str, tuple] = {}
     if optimize:
         graph = dce_program(graph)
         graph = prune_program_columns(graph)
         if cse:
             graph = cse_program(graph)
+        if skew_stats is not None and skew_mode == "auto":
+            skew_info = apply_skew_program(graph, skew_stats,
+                                           n_partitions=skew_partitions,
+                                           threshold=skew_threshold)
         # annotate last: the pruning pass rebuilds every node, which
         # would discard the EXPLAIN attributes
         for nd in graph.nodes:
             annotate_orders(nd.plan)
             annotate_partitioning(nd.plan)
     return CompiledProgram([(nd.name, nd.plan) for nd in graph.nodes],
-                           sp, graph, outs)
+                           sp, graph, outs,
+                           skew_params={k: (bag, attr) for
+                                        k, (bag, attr, _) in
+                                        skew_info.items()})
 
 
 def run_flat_program(cp: CompiledProgram, env: Dict[str, FlatBag],
@@ -280,6 +305,7 @@ def jit_program(cp: CompiledProgram,
 def compile_program_distributed(
         cp: CompiledProgram, env: Dict[str, FlatBag], mesh,
         use_kernel: bool = False, outputs: Optional[tuple] = None,
+        params: Optional[Dict[str, object]] = None,
         **dist_kwargs):
     """Run the SAME program schedule under shard_map: one
     ``exec.dist.compile_distributed`` region evaluates every node of the
@@ -288,21 +314,39 @@ def compile_program_distributed(
     ``(DistRunner, outputs, metrics)`` — the runner is the warm path
     (same jitted shard_map, no retrace), and ``adaptive=True`` resolves
     bucket capacities before the runner is handed out (the serving
-    warmup). ``N.Param``s evaluate at their lifted defaults here —
-    parameterized serving is a local-path feature for now."""
+    warmup).
+
+    Runtime parameters — every ``N.Param`` of the program plus every
+    ``SkewJoinP`` heavy-key set — enter the shard_map region as a
+    replicated traced pytree (defaults overridden by ``params``), so a
+    warm ``runner(env, params=new_bindings)`` rebinds new values with
+    ZERO retracing, exactly like the local jit path (``TRACE_STATS``
+    moves only on an actual retrace)."""
     from repro.exec import dist as D
     outs = tuple(outputs) if outputs is not None \
         else (tuple(cp.outputs) or tuple(n for n, _ in cp.plans))
+    defaults = collect_params(cp.graph) if cp.graph is not None else {}
+    if params:
+        unknown = set(params) - set(defaults)
+        assert not unknown, (
+            f"unknown parameter(s) {sorted(unknown)}; this program "
+            f"binds {sorted(defaults)}")
+        defaults.update(params)
+    # a defaultless N.Param the caller did not bind stays out of the
+    # pytree — evaluation then raises its own clear unbound error
+    defaults = {k: v for k, v in defaults.items() if v is not None}
 
-    def fn(env_local, ctx):
-        s = ExecSettings(use_kernel=use_kernel, dist=ctx)
+    def fn(env_local, ctx, params_local):
+        TRACE_STATS["traces"] = TRACE_STATS.get("traces", 0) + 1
+        s = ExecSettings(use_kernel=use_kernel, dist=ctx,
+                         params=params_local)
         local = dict(env_local)
         for name, plan in cp.plans:
             local[name] = eval_plan(plan, local, s)
         return {o: local[o] for o in outs}
 
     return D.compile_distributed(fn, env, mesh, use_kernel=use_kernel,
-                                 **dist_kwargs)
+                                 params=defaults, **dist_kwargs)
 
 
 # ---------------------------------------------------------------------------

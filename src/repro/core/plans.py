@@ -122,6 +122,27 @@ class FusedJoinAggP(Plan):
 
 
 @dataclass
+class SkewJoinP(Plan):
+    """Compiler-selected skew-resilient join (paper §5 / Beame et al.):
+    probe rows whose key is in the *heavy-key set* stay in place while
+    the matching build rows broadcast; everything else takes the normal
+    light-path hash exchange. Inserted by ``apply_skew_program`` when
+    heavy-hitter statistics (storage zone maps + the streaming
+    heavy-key sketch) predict partition imbalance.
+
+    The heavy-key set is a RUNTIME PARAMETER: ``heavy_param`` names a
+    padded ``(max_heavy,)`` int64 binding (``skew.pad_heavy``) supplied
+    through ``ExecSettings.params``, with ``heavy_default`` as the
+    plan-time value. One compiled plan therefore serves every heavy-key
+    set of the family — warm calls rebind with zero retraces, exactly
+    like ``N.Param``. Locally (no DistContext) the node evaluates as
+    its plain embedded join: skew only changes data *placement*."""
+    join: JoinP
+    heavy_param: str
+    heavy_default: tuple        # padded int64 key tuple (static shape)
+
+
+@dataclass
 class RefP(Plan):
     """Reference to a previously evaluated program node (a named
     assignment or a CSE-extracted shared subplan). Evaluates to the
@@ -188,6 +209,11 @@ def plan_pretty(p: Plan, indent: int = 0) -> str:
                 f"{plan_pretty(p.parent, indent+1)}")
     if isinstance(p, FusedJoinAggP):
         return (f"{pad}FusedJoinAgg[keys={p.keys} vals={p.vals}]\n"
+                f"{plan_pretty(p.join, indent+1)}")
+    if isinstance(p, SkewJoinP):
+        n = sum(1 for k in p.heavy_default
+                if k != jnp.iinfo(jnp.int64).max)
+        return (f"{pad}SkewJoin[param={p.heavy_param} heavy={n}]\n"
                 f"{plan_pretty(p.join, indent+1)}")
     return f"{pad}<{type(p).__name__}>"
 
@@ -398,6 +424,10 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
         left = eval_plan(p.left, env, s)
         right = eval_plan(p.right, env, s)
         return _exec_join(p, left, right, s)
+    if isinstance(p, SkewJoinP):
+        left = eval_plan(p.join.left, env, s)
+        right = eval_plan(p.join.right, env, s)
+        return _exec_skew_join(p, left, right, s)
     if isinstance(p, SumAggP):
         child = eval_plan(p.child, env, s)
         _ecount("sum_by")
@@ -469,6 +499,27 @@ def _eval_ref(p: RefP, env: Dict[str, FlatBag]) -> FlatBag:
     if X.ORDER_AWARE and bag._props is not None:
         props = bag.props.renamed(mapping)
     return FlatBag(data, bag.valid, props)
+
+
+def _exec_skew_join(p: SkewJoinP, left: FlatBag, right: FlatBag,
+                    s: ExecSettings) -> FlatBag:
+    """Evaluate a planned skew join. Locally the heavy-key set is
+    irrelevant (no rows to place) and the node degrades to its plain
+    join — the differential parity guarantee. Under a DistContext the
+    bound heavy-key array drives the light/heavy split."""
+    j = p.join
+    if s.dist is None:
+        return _exec_join(j, left, right, s)
+    _ecount("join")
+    _ecount("skew_join")
+    heavy = None
+    if s.params is not None and p.heavy_param in s.params:
+        heavy = jnp.asarray(s.params[p.heavy_param], jnp.int64)
+    if heavy is None:
+        heavy = jnp.asarray(p.heavy_default, jnp.int64)
+    return s.dist.join(left, right, j.left_on, j.right_on, how=j.how,
+                       unique_right=j.unique_right,
+                       expansion=j.expansion, heavy_keys=heavy)
 
 
 def _exec_join(p: JoinP, left: FlatBag, right: FlatBag,
@@ -613,6 +664,9 @@ def _pushdown(p: Plan, needed: Optional[set],
                    j.expansion, j.broadcast, j.skew_aware, j.matched_col)
         return FusedJoinAggP(nj, p.keys, p.vals, p.local_preagg,
                              p.exchange_on)
+    if isinstance(p, SkewJoinP):
+        return SkewJoinP(_pushdown(p.join, needed, ref_needs),
+                         p.heavy_param, p.heavy_default)
     raise TypeError(type(p).__name__)
 
 
@@ -679,6 +733,8 @@ def _plan_columns(p: Plan) -> Optional[set]:
         return _plan_columns(p.child)
     if isinstance(p, FusedJoinAggP):
         return set(p.keys) | set(p.vals)
+    if isinstance(p, SkewJoinP):
+        return _plan_columns(p.join)
     return None
 
 
@@ -711,6 +767,8 @@ def delivered_order(p: Plan) -> Optional[tuple]:
         return tuple(pref) or None
     if isinstance(p, JoinP):
         return delivered_order(p.left)    # output is probe-side aligned
+    if isinstance(p, SkewJoinP):
+        return None     # distributed light+heavy union mixes row order
     if isinstance(p, (SumAggP, FusedJoinAggP)):
         return tuple(p.keys)
     if isinstance(p, DeDupP):
@@ -795,6 +853,9 @@ def push_order(p: Plan, desired: Optional[tuple] = None) -> Plan:
                             p.expansion, p.matched_col, p.rowid_col)
     if isinstance(p, UnionP):
         return UnionP(push_order(p.left, None), push_order(p.right, None))
+    if isinstance(p, SkewJoinP):
+        return SkewJoinP(push_order(p.join, None), p.heavy_param,
+                         p.heavy_default)
     return p
 
 
@@ -824,6 +885,8 @@ def delivered_partitioning(p: Plan) -> Optional[tuple]:
         if all(c in passthru for c in d):
             return tuple(passthru[c] for c in d)
         return None
+    if isinstance(p, SkewJoinP):
+        return None         # light+heavy union mixes placements
     if isinstance(p, JoinP):
         if p.broadcast:
             return delivered_partitioning(p.left)  # probe side stays put
@@ -930,6 +993,9 @@ def push_partitioning(p: Plan, desired: Optional[tuple] = None) -> Plan:
     if isinstance(p, UnionP):
         return UnionP(push_partitioning(p.left, None),
                       push_partitioning(p.right, None))
+    if isinstance(p, SkewJoinP):
+        return SkewJoinP(push_partitioning(p.join, None), p.heavy_param,
+                         p.heavy_default)
     return p
 
 
@@ -1142,6 +1208,10 @@ def _plan_sig(p: Plan, canon: _Canon):
         return ("fja", j, canon.cols(p.keys), canon.cols(p.vals),
                 p.local_preagg,
                 canon.cols(p.exchange_on) if p.exchange_on else None)
+    if isinstance(p, SkewJoinP):
+        # heavy_default excluded: it is a runtime-parameter binding,
+        # structurally irrelevant exactly like N.Param defaults
+        return ("skewjoin", _plan_sig(p.join, canon), p.heavy_param)
     raise TypeError(f"_plan_sig: {type(p).__name__}")
 
 
@@ -1362,7 +1432,8 @@ def lift_plan_parameters(graph: ProgramGraph,
 
 def collect_params(graph: ProgramGraph) -> Dict[str, object]:
     """{param_name: default} over every N.Param referenced by the
-    program's plan expressions."""
+    program's plan expressions, plus every plan-level parameter
+    (``SkewJoinP`` heavy-key sets)."""
     out: Dict[str, object] = {}
 
     def visit(e: N.Expr):
@@ -1378,4 +1449,109 @@ def collect_params(graph: ProgramGraph) -> Dict[str, object]:
             elif isinstance(sub, MapP):
                 for _, e in sub.outputs:
                     visit(e)
+    out.update(collect_plan_params(graph))
     return out
+
+
+def collect_plan_params(graph: ProgramGraph) -> Dict[str, object]:
+    """Plan-level runtime parameters: {heavy_param: padded int64 array}
+    over every ``SkewJoinP`` of the program."""
+    import numpy as np
+    out: Dict[str, object] = {}
+    for nd in graph.nodes:
+        for sub in _walk_plan(nd.plan):
+            if isinstance(sub, SkewJoinP):
+                out[sub.heavy_param] = np.asarray(sub.heavy_default,
+                                                  dtype=np.int64)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# automated skew pass: JoinP -> SkewJoinP where heavy-hitter statistics
+# predict partition imbalance (DESIGN.md "Automated skew handling")
+# ---------------------------------------------------------------------------
+
+def _scan_aliases(p: Plan) -> Dict[str, str]:
+    """alias -> environment bag for every scan in a subtree (the map the
+    skew pass uses to tie join key columns back to stored parts)."""
+    out: Dict[str, str] = {}
+    for sub in _walk_plan(p):
+        if isinstance(sub, ScanP):
+            out[sub.alias] = sub.bag
+        elif isinstance(sub, _PrunedScan):
+            out[sub.inner.alias] = sub.inner.bag
+        elif isinstance(sub, OuterUnnestP):
+            out[sub.alias] = sub.child_bag
+    return out
+
+
+def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
+                       n_partitions: int, threshold: float = 0.025,
+                       max_heavy: Optional[int] = None,
+                       param_prefix: str = "__hk") -> Dict[str, object]:
+    """The automatic skew decision, applied program-wide (in place).
+
+    For every hash join whose probe-side key is a single column scanned
+    from a bag with statistics (``skew.TableStats``, typically derived
+    from a stored dataset's zone maps + heavy-key sketch), ask
+    ``skew.stats_heavy_array`` whether the predicted heavy-hitter set
+    is non-empty; if so the join becomes a ``SkewJoinP`` whose heavy-key
+    set is lifted as the runtime parameter ``__hk<i>``. A
+    ``FusedJoinAggP`` whose embedded join qualifies un-fuses into
+    Gamma+ over the skew join (placement beats fusion under skew — the
+    heavy rows never cross the wire at all).
+
+    Zero predicted heavy keys => the plan is left byte-identical (the
+    degenerate no-op contract asserted by the skew unit tests).
+    Returns {param_name: (bag, attr, padded heavy-key array)} — the
+    provenance lets a serving layer rebind fresh heavy-key sets for the
+    same (bag, attr) on warm calls."""
+    from . import skew as SK
+    mh = max_heavy if max_heavy is not None else SK.MAX_HEAVY
+    defaults: Dict[str, object] = {}
+
+    def probe_heavy(j: JoinP):
+        if j.broadcast or j.skew_aware or len(j.left_on) != 1:
+            return None
+        head, sep, attr = j.left_on[0].partition(".")
+        if not sep:
+            return None
+        bag = _scan_aliases(j.left).get(head)
+        if bag is None:
+            return None
+        heavy = SK.stats_heavy_array(stats, bag, attr, n_partitions,
+                                     threshold, mh)
+        return None if heavy is None else (bag, attr, heavy)
+
+    def lift(j: JoinP):
+        hit = probe_heavy(j)
+        if hit is None:
+            return None
+        bag, attr, heavy = hit
+        name = f"{param_prefix}{len(defaults)}"
+        defaults[name] = (bag, attr, heavy)
+        return SkewJoinP(j, name, tuple(int(x) for x in heavy))
+
+    def rewrite(p: Plan) -> Plan:
+        if isinstance(p, SkewJoinP):
+            return p            # idempotent: never double-wrap
+        if isinstance(p, JoinP):
+            p.left = rewrite(p.left)
+            p.right = rewrite(p.right)
+            return lift(p) or p
+        if isinstance(p, FusedJoinAggP):
+            p.join.left = rewrite(p.join.left)
+            p.join.right = rewrite(p.join.right)
+            sj = lift(p.join)
+            if sj is not None:
+                return SumAggP(sj, p.keys, p.vals, p.local_preagg,
+                               p.exchange_on)
+            return p
+        for attr in _CHILD_ATTRS:
+            if hasattr(p, attr):
+                setattr(p, attr, rewrite(getattr(p, attr)))
+        return p
+
+    for nd in graph.nodes:
+        nd.plan = rewrite(nd.plan)
+    return defaults

@@ -6,21 +6,42 @@ covers >= ``threshold`` of the sample; with threshold t there can be at
 most ceil(1/t) heavy keys per partition (the paper's 2.5% -> 40 keys),
 which bounds the broadcast cost of the heavy set.
 
-These helpers are pure jnp and run both locally and inside shard_map
-(the distributed variants all_gather the per-partition candidates).
+The jnp helpers run both locally and inside shard_map (the distributed
+variants all_gather the per-partition candidates).
+
+Since the compiler-integrated skew handling (DESIGN.md "Automated skew
+handling") this module also owns the *plan-time* statistics side:
+
+* ``HeavyKeySketch`` — a streaming Misra-Gries (space-saving) heavy-
+  hitter sketch, updated host-side by ``storage.DatasetWriter`` on every
+  appended chunk and persisted in the dataset footer. Any key whose
+  true frequency exceeds ``total/k`` is guaranteed to be retained, and
+  reported counts are lower bounds (undercount <= total/k).
+* ``TableStats`` — the per-part statistics record the planner consumes
+  (row count, zone-map distinct counts, heavy-key candidates).
+* ``decide_heavy_keys`` — the plan-time decision: the heavy-key set a
+  ``SkewJoinP`` should split on, or empty when the statistics predict
+  no partition imbalance worth a broadcast.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from dataclasses import dataclass, field as dc_field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.columnar.table import FlatBag
 from repro.exec import ops as X
 
 I64_MAX = X.I64_MAX
+
+MAX_HEAVY = 40
+"""Static size of every runtime heavy-key set (the paper's 2.5% -> 40
+keys bound). One shape for all bindings is what lets a warm plan rebind
+a *different* heavy-key set with zero retraces."""
 
 
 def heavy_keys_local(key: jnp.ndarray, valid: jnp.ndarray,
@@ -63,8 +84,15 @@ def merge_heavy(candidates: jnp.ndarray) -> jnp.ndarray:
     return jnp.sort(jnp.where(dup, I64_MAX, sk))
 
 
-def is_member(key: jnp.ndarray, heavy_sorted: jnp.ndarray) -> jnp.ndarray:
-    """Membership of each key in the (sorted, padded) heavy set."""
+def is_member(key: jnp.ndarray, heavy_sorted: jnp.ndarray,
+              use_kernel: bool = False) -> jnp.ndarray:
+    """Membership of each key in the (sorted, padded) heavy set. The
+    kernel path is a blocked dense-compare Pallas pass
+    (``kernels.shuffle_pack.member_mask``); the jnp path a searchsorted
+    gather — bit-for-bit equal."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.member_mask(key, heavy_sorted)
     pos = jnp.searchsorted(heavy_sorted, key)
     pos = jnp.clip(pos, 0, heavy_sorted.shape[0] - 1)
     return (heavy_sorted[pos] == key) & (key != I64_MAX)
@@ -80,3 +108,145 @@ def split_skew(bag: FlatBag, key_cols, heavy_sorted: jnp.ndarray,
         key = X.pack_keys(bag, key_cols)
     hv = is_member(key, heavy_sorted)
     return bag.mask(~hv), bag.mask(hv)
+
+
+def pad_heavy(keys: Sequence[int], max_heavy: int = MAX_HEAVY
+              ) -> np.ndarray:
+    """Sorted ``(max_heavy,)`` int64 heavy-key array padded with
+    I64_MAX — the fixed runtime-parameter shape every ``SkewJoinP``
+    binding uses (``is_member`` treats the padding as no key)."""
+    ks = sorted(int(k) for k in set(keys))
+    assert len(ks) <= max_heavy, (
+        f"{len(ks)} heavy keys exceed the static bound {max_heavy}")
+    out = np.full(max_heavy, np.iinfo(np.int64).max, dtype=np.int64)
+    out[:len(ks)] = ks
+    return out
+
+
+# ---------------------------------------------------------------------------
+# streaming heavy-key sketch (plan-time statistics, host side)
+# ---------------------------------------------------------------------------
+
+class HeavyKeySketch:
+    """Misra-Gries / space-saving heavy-hitter sketch over a stream of
+    integer keys. ``k`` counters guarantee every key with true frequency
+    > total/k survives; each reported count is a lower bound whose
+    undercount is at most ``error_bound()``. Pure numpy, updated by the
+    storage writer as chunks land; JSON round-trips through the dataset
+    footer."""
+
+    def __init__(self, k: int = 64,
+                 counts: Optional[Dict[int, int]] = None,
+                 total: int = 0):
+        assert k > 0
+        self.k = k
+        self.counts: Dict[int, int] = dict(counts or {})
+        self.total = int(total)
+        self._decremented = 0
+
+    def update(self, arr: np.ndarray) -> None:
+        """Fold one batch of keys into the sketch."""
+        vals, cnts = np.unique(np.asarray(arr).astype(np.int64),
+                               return_counts=True)
+        self.total += int(cnts.sum())
+        for v, c in zip(vals.tolist(), cnts.tolist()):
+            if v in self.counts:
+                self.counts[v] += c
+            else:
+                self.counts[v] = c
+        # Misra-Gries decrement: shed the smallest counters until at
+        # most k survive (batched: subtract the (len-k)-th largest)
+        if len(self.counts) > self.k:
+            by = sorted(self.counts.values(), reverse=True)
+            cut = by[self.k]
+            self._decremented += cut
+            self.counts = {v: c - cut for v, c in self.counts.items()
+                           if c > cut}
+
+    def error_bound(self) -> int:
+        """Max undercount of any reported counter."""
+        return self._decremented
+
+    def heavy(self, threshold: float, total: Optional[int] = None
+              ) -> List[Tuple[int, int]]:
+        """Keys whose estimated frequency is >= ``threshold`` of
+        ``total`` (default: the stream length), most frequent first.
+        Counts are lower bounds, so the test errs toward *missing* a
+        borderline key, never toward fabricating one."""
+        tot = self.total if total is None else int(total)
+        need = max(int(threshold * tot), 1)
+        out = [(v, c) for v, c in self.counts.items() if c >= need]
+        out.sort(key=lambda vc: (-vc[1], vc[0]))
+        return out
+
+    def to_json(self) -> dict:
+        return {"k": self.k, "total": self.total,
+                "decremented": self._decremented,
+                "counts": [[int(v), int(c)]
+                           for v, c in sorted(self.counts.items())]}
+
+    @staticmethod
+    def from_json(d: dict) -> "HeavyKeySketch":
+        s = HeavyKeySketch(k=int(d["k"]),
+                           counts={int(v): int(c) for v, c in d["counts"]},
+                           total=int(d["total"]))
+        s._decremented = int(d.get("decremented", 0))
+        return s
+
+
+# ---------------------------------------------------------------------------
+# plan-time statistics + the skew decision
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TableStats:
+    """Planner-facing statistics for one stored part / input bag:
+    ``rows`` (total valid rows), ``distinct`` per column (zone-map
+    derived upper bound), and per-column heavy-key candidates
+    ``heavy[col] = [(key, count_lower_bound), ...]`` from the streaming
+    sketch."""
+    rows: int
+    distinct: Dict[str, int] = dc_field(default_factory=dict)
+    heavy: Dict[str, List[Tuple[int, int]]] = dc_field(
+        default_factory=dict)
+
+
+def decide_heavy_keys(stats: TableStats, col: str,
+                      n_partitions: int,
+                      threshold: float = 0.025,
+                      max_heavy: int = MAX_HEAVY) -> List[int]:
+    """The automatic skew decision for a join keyed on ``stats[col]``.
+
+    A key takes the heavy path when its (lower-bound) frequency exceeds
+    the FAIR PARTITION SHARE ``rows / n_partitions`` — Beame et al.'s
+    heavy-hitter bound: only such a key can force one partition above
+    the perfectly balanced load, so anything below it cannot pay for a
+    broadcast. ``threshold`` (the paper's 2.5% sampling resolution)
+    acts as a floor so micro-inputs don't flag noise. A uniform key
+    column therefore yields ZERO heavy keys — the plan stays a plain
+    hash join (the degenerate no-op contract) — and with
+    n_partitions == 1 no exchange can be imbalanced at all."""
+    if n_partitions <= 1:
+        return []
+    cand = stats.heavy.get(col)
+    if not cand:
+        return []
+    need = max(int(threshold * stats.rows),
+               -(-stats.rows // n_partitions), 1)
+    picked = [k for k, c in sorted(cand, key=lambda vc: (-vc[1], vc[0]))
+              if c >= need]
+    return picked[:max_heavy]
+
+
+def stats_heavy_array(stats: Dict[str, TableStats], bag: str, col: str,
+                      n_partitions: int, threshold: float = 0.025,
+                      max_heavy: int = MAX_HEAVY) -> Optional[np.ndarray]:
+    """Padded heavy-key parameter value for (bag, col), or None when the
+    statistics predict no imbalance (the SkewJoinP no-op case)."""
+    ts = stats.get(bag)
+    if ts is None:
+        return None
+    ks = decide_heavy_keys(ts, col, n_partitions, threshold, max_heavy)
+    if not ks:
+        return None
+    return pad_heavy(ks, max_heavy)

@@ -187,6 +187,14 @@ class DistContext:
             max(int(cap * self.cap_factor) // Pn, 1))
         self._add_max(f"size_need_{site}", jnp.max(counts))
 
+        # -- partition balance metering ---------------------------------
+        # total rows each partition will RECEIVE at this site (psum of
+        # the per-sender destination counts); the skew-smoke gate reads
+        # max/mean of these as the measured imbalance of the exchange
+        recv = jax.lax.psum(counts, self.axis)
+        self._add_max(f"part_max_{site}", jnp.max(recv))
+        self._add(f"part_rows_{site}", jnp.sum(counts))
+
         sent = jnp.sum(jnp.minimum(counts, bucket))
         self._add("overflow_rows", jnp.sum(jnp.maximum(counts - bucket, 0)))
         self._add("shuffle_rows", sent)
@@ -314,12 +322,24 @@ class DistContext:
     def join(self, left: FlatBag, right: FlatBag, left_on, right_on,
              how: str = "inner", unique_right: bool = True,
              broadcast: bool = False, skew_aware: bool = False,
-             expansion: float = 4.0) -> FlatBag:
+             expansion: float = 4.0,
+             heavy_keys: Optional[jnp.ndarray] = None) -> FlatBag:
+        """``heavy_keys`` (compiler-planned skew, ``plans.SkewJoinP``)
+        supplies the heavy-key set as a runtime value — a padded int64
+        array bound per call — instead of the per-call sampling of
+        ``skew_aware``. Both route through the same light-exchange +
+        heavy-broadcast skew triple."""
         if broadcast:
             rall = self.gather_all(right)
             return self._local_join(left, rall, left_on, right_on, how,
                                     unique_right, expansion)
+        if heavy_keys is not None:
+            _scount("skew_join_planned")
+            return self._skew_join(left, right, left_on, right_on, how,
+                                   unique_right, expansion,
+                                   heavy=heavy_keys)
         if skew_aware or self.skew_default:
+            _scount("skew_join_sampled")
             return self._skew_join(left, right, left_on, right_on, how,
                                    unique_right, expansion)
         lk, rk = self._copartition_keys(left, right, left_on, right_on)
@@ -383,15 +403,22 @@ class DistContext:
         return bag
 
     def _skew_join(self, left, right, left_on, right_on, how,
-                   unique_right, expansion):
+                   unique_right, expansion, heavy=None):
         """Paper Fig. 6: split the probe side by heavy keys; exchange the
         light component; leave heavy probe rows in place and broadcast
         the matching build rows. Each key set is packed once and
-        threaded through detection, split and exchange."""
+        threaded through detection, split and exchange. ``heavy``
+        (planned skew) supplies the key set directly — sorted here so
+        any runtime binding order works with the searchsorted member
+        test — replacing the sample + all_gather detection round."""
         left_on, right_on = tuple(left_on), tuple(right_on)
         lkey = X.pack_keys(left, left_on)
-        hk = self.heavy_keys(left, left_on, key=lkey)
-        heavy_mask = SK.is_member(lkey, hk) & left.valid
+        if heavy is not None:
+            hk = jnp.sort(heavy.astype(jnp.int64))
+        else:
+            hk = self.heavy_keys(left, left_on, key=lkey)
+        heavy_mask = SK.is_member(lkey, hk,
+                                  use_kernel=self.use_kernel) & left.valid
         # light plan: standard exchange join (co-partition aware)
         lk, rk = self._copartition_keys(left, right, left_on, right_on)
         rkey = X.pack_keys(right, right_on)
@@ -402,7 +429,7 @@ class DistContext:
         light = self._local_join(lex, rex, left_on, right_on, how,
                                  unique_right, expansion)
         # heavy plan: heavy probe rows stay; broadcast matching build rows
-        r_heavy = SK.is_member(rkey, hk)
+        r_heavy = SK.is_member(rkey, hk, use_kernel=self.use_kernel)
         rall = self.gather_all(right, keep=r_heavy)
         heavy = self._local_join(left.mask(heavy_mask), rall, left_on,
                                  right_on, how, unique_right, expansion)
@@ -473,7 +500,8 @@ class DistContext:
             return self.exchange(bag, ("label",))
         key = X.pack_keys(bag, ("label",))
         hk = self.heavy_keys(bag, ("label",), key=key)
-        heavy_mask = SK.is_member(key, hk) & bag.valid
+        heavy_mask = SK.is_member(key, hk,
+                                  use_kernel=self.use_kernel) & bag.valid
         light = self.exchange(bag, ("label",), keep=~heavy_mask, key=key)
         heavy = bag.mask(heavy_mask)
         # heavy labels keep their current location (skew resilience);
@@ -513,14 +541,35 @@ class DistRunner:
     shard_map (warm path — no retrace), which is the steady-state
     serving case the benchmarks time. ``stats`` is the host-side
     SHUFFLE_STATS snapshot of the final trace (collectives, elisions,
-    per-site sizes) and is merged into every call's metrics."""
+    per-site sizes) and is merged into every call's metrics.
 
-    def __init__(self, sm, stats: Dict[str, int]):
+    When the program was compiled with runtime parameters
+    (``compile_distributed(params=...)``) a warm call may rebind them —
+    ``runner(env, params=new_bindings)`` — with zero retracing as long
+    as shapes/dtypes match (the skew heavy-key contract)."""
+
+    def __init__(self, sm, stats: Dict[str, int],
+                 params: Optional[dict] = None):
         self._sm = sm
         self.stats = stats
+        self.params = params        # compile-time bindings (None = none)
 
-    def __call__(self, env) -> Tuple[dict, Dict[str, int]]:
-        out, metrics = self._sm(env)
+    def __call__(self, env, params: Optional[dict] = None
+                 ) -> Tuple[dict, Dict[str, int]]:
+        if self.params is None:
+            assert params is None, (
+                "program compiled without runtime parameters")
+            out, metrics = self._sm(env)
+        else:
+            p = dict(self.params)
+            if params:
+                unknown = set(params) - set(p)
+                assert not unknown, (
+                    f"unknown parameter(s) {sorted(unknown)}; this "
+                    f"program binds {sorted(p)}")
+                p.update(params)
+            out, metrics = self._sm(env, {k: jnp.asarray(v)
+                                          for k, v in p.items()})
         return out, _merge_host_stats(
             {k: int(v) for k, v in metrics.items()}, self.stats)
 
@@ -535,7 +584,8 @@ def compile_distributed(
         shuffle_mode: str = "packed",
         use_kernel: bool = False,
         adaptive: bool = False,
-        max_retries: int = 3
+        max_retries: int = 3,
+        params: Optional[dict] = None
 ) -> Tuple[DistRunner, dict, Dict[str, int]]:
     """Compile ``fn(env_local, ctx)`` SPMD over ``mesh[axis]`` and run
     it once. Returns ``(runner, outputs, metrics)`` — call ``runner``
@@ -543,6 +593,13 @@ def compile_distributed(
 
     Every FlatBag in env is row-sharded over the axis (capacities must
     divide the axis size).
+
+    ``params`` (optional) is a dict of runtime parameter arrays
+    replicated into the shard_map region; when given, ``fn`` is called
+    as ``fn(env_local, ctx, params_local)`` and warm runner calls may
+    rebind new values of the same shapes with zero retracing — the
+    mechanism behind parameterized distributed serving and the
+    ``SkewJoinP`` heavy-key sets.
 
     ``adaptive=True`` turns on adaptive capacity: the run records, per
     sizing site (exchange bucket / skew-union capacity), the true
@@ -566,30 +623,43 @@ def compile_distributed(
 
     from jax.experimental.shard_map import shard_map
 
-    in_specs = (P(axis),)            # pytree-prefix: every bag leaf sharded
-    out_specs = (P(axis), P())       # outputs sharded, metrics replicated
+    # pytree-prefix specs: bags row-sharded; params (when present)
+    # replicated; outputs sharded, metrics replicated
+    has_params = params is not None
+    in_specs = (P(axis), P()) if has_params else (P(axis),)
+    out_specs = (P(axis), P())
+    pvals = {k: jnp.asarray(v) for k, v in (params or {}).items()}
 
     size_plan: Optional[Tuple[int, ...]] = None
     attempt = 0
     while True:
         reset_shuffle_stats()
 
-        def inner(env_local, _plan=size_plan):
-            ctx = DistContext(axis, n, cap_factor=cap_factor,
-                              sample=256, threshold=threshold,
-                              skew_default=skew_default,
-                              packed=(shuffle_mode == "packed"),
-                              size_plan=_plan, use_kernel=use_kernel)
-            out = fn(env_local, ctx)
-            return out, ctx.finalize_metrics()
+        def make_ctx(_plan):
+            return DistContext(axis, n, cap_factor=cap_factor,
+                               sample=256, threshold=threshold,
+                               skew_default=skew_default,
+                               packed=(shuffle_mode == "packed"),
+                               size_plan=_plan, use_kernel=use_kernel)
+
+        if has_params:
+            def inner(env_local, params_local, _plan=size_plan):
+                ctx = make_ctx(_plan)
+                out = fn(env_local, ctx, params_local)
+                return out, ctx.finalize_metrics()
+        else:
+            def inner(env_local, _plan=size_plan):
+                ctx = make_ctx(_plan)
+                out = fn(env_local, ctx)
+                return out, ctx.finalize_metrics()
 
         sm = shard_map(inner, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
         if jit:
             sm = jax.jit(sm)
-        out, metrics = sm(env)
+        out, metrics = sm(env, pvals) if has_params else sm(env)
         host = dict(SHUFFLE_STATS)
-        runner = DistRunner(sm, host)
+        runner = DistRunner(sm, host, pvals if has_params else None)
         metrics = _merge_host_stats({k: int(v) for k, v in metrics.items()},
                                     host)
         if not adaptive or shuffle_mode != "packed" \

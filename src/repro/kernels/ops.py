@@ -19,7 +19,8 @@ from .gather_join import gather_rows_pallas, merge_positions_pallas
 from .rwkv6_scan import rwkv6_pallas
 from .segment_fused import segment_sum_first_pallas
 from .segment_reduce import segment_reduce_pallas
-from .shuffle_pack import pack_rows_pallas, unpack_cols_pallas
+from .shuffle_pack import (member_mask_pallas, pack_rows_pallas,
+                           unpack_cols_pallas)
 
 INTERPRET = True    # CPU container: interpret mode; launcher flips on TPU
 USE_REF = False
@@ -91,6 +92,14 @@ def unpack_cols(buf: jnp.ndarray) -> jnp.ndarray:
     if USE_REF:
         return ref.unpack_cols_ref(buf)
     return unpack_cols_pallas(buf, interpret=INTERPRET)
+
+
+def member_mask(keys: jnp.ndarray, heavy: jnp.ndarray) -> jnp.ndarray:
+    """Heavy-key membership (skew-triple probe split): out[i] = keys[i]
+    in the padded sorted heavy set."""
+    if USE_REF:
+        return ref.member_mask_ref(keys, heavy)
+    return member_mask_pallas(keys, heavy, interpret=INTERPRET)
 
 
 def flash_attention(q, k, v, causal: bool = True,

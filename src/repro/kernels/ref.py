@@ -70,6 +70,14 @@ def unpack_cols_ref(buf: jnp.ndarray) -> jnp.ndarray:
     return buf.T
 
 
+def member_mask_ref(keys: jnp.ndarray, heavy: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.shuffle_pack.member_mask: per-key membership
+    in the padded heavy-key set (I64_MAX padding never matches)."""
+    i64_max = jnp.iinfo(jnp.int64).max
+    hit = (keys[:, None] == heavy[None, :]) & (heavy[None, :] != i64_max)
+    return jnp.any(hit, axis=1) & (keys != i64_max)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, window: Optional[int] = None,
                   softcap: Optional[float] = None,

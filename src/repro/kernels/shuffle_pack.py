@@ -17,9 +17,17 @@ the pack/unpack around that collective into blocked vector work:
   ``(rows, lanes)`` wire buffer into ``(lanes, rows)`` so each lane
   unpacks into a contiguous column before its dtype bit-cast.
 
-Both are bit-for-bit equal to their jnp oracles (``ref.pack_rows_ref``,
-``ref.unpack_cols_ref``): comparisons, masked integer sums and
-transposes have no rounding.
+A third kernel serves the skew triple built on the same wire format:
+
+* ``member_mask_pallas`` — heavy-key membership: for each packed key,
+  whether it appears in the (tiny, padded) heavy-key set. The compare
+  is a dense ``(block_n, max_heavy)`` equality tile reduced along the
+  heavy axis — the light/heavy probe split of a planned ``SkewJoinP``
+  as one blocked VPU pass instead of a searchsorted gather chain.
+
+All are bit-for-bit equal to their jnp oracles (``ref.pack_rows_ref``,
+``ref.unpack_cols_ref``, ``ref.member_mask_ref``): comparisons, masked
+integer sums and transposes have no rounding.
 """
 
 from __future__ import annotations
@@ -88,6 +96,43 @@ def pack_rows_pallas(values: jnp.ndarray, idx: jnp.ndarray,
         interpret=interpret,
     )(idx.astype(jnp.int32), ok.astype(jnp.int32), values)
     return out[:m]
+
+
+def _member_kernel(keys_ref, heavy_ref, out_ref):
+    keys = keys_ref[...]            # (block_n,) int64 packed keys
+    heavy = heavy_ref[...]          # (m,) int64 sorted heavy set
+    i64_max = jnp.iinfo(jnp.int64).max
+    hit = (keys[:, None] == heavy[None, :]) & (heavy[None, :] != i64_max)
+    # int32 accumulation, not bool any: exact, and VPU-friendly
+    out_ref[...] = (jnp.sum(hit.astype(jnp.int32), axis=1) > 0) \
+        & (keys != i64_max)
+
+
+def member_mask_pallas(keys: jnp.ndarray, heavy: jnp.ndarray,
+                       block_n: int = DEF_BLOCK_M,
+                       interpret: bool = True) -> jnp.ndarray:
+    """out[i] = keys[i] in heavy (padding I64_MAX never matches, on
+    either side) — the skew-triple probe split."""
+    n = keys.shape[0]
+    block_n = min(block_n, n)
+    n_pad = (-n) % block_n
+    if n_pad:
+        keys = jnp.pad(keys, (0, n_pad),
+                       constant_values=jnp.iinfo(jnp.int64).max)
+    m = heavy.shape[0]
+    grid = ((n + n_pad) // block_n,)
+    out = pl.pallas_call(
+        _member_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda nb: (nb,)),
+            pl.BlockSpec((m,), lambda nb: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda nb: (nb,)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad,), jnp.bool_),
+        interpret=interpret,
+    )(keys, heavy)
+    return out[:n]
 
 
 def _unpack_kernel(buf_ref, out_ref):

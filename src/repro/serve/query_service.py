@@ -24,11 +24,24 @@ dead-code elimination) into a single ``jit_program`` executable — or,
 with a mesh, through ``codegen.compile_program_distributed`` with
 ``adaptive=True``, so the warmup run resolves exact exchange-bucket
 capacities (PR 2's adaptive retrace) before the warm runner is cached.
+On the distributed path the lifted constants are runtime parameters
+too (the shard_map region takes a replicated params pytree), so dist
+submissions differing only in constants ALSO hit one warm runner.
 
 ``execute_many`` batches concurrent invocations of one family: the
 parameter vectors stack into a leading batch axis and the SAME program
 function runs under ``jax.vmap`` — one compiled computation serves the
 whole batch.
+
+**Automated skew handling** (DESIGN.md "Automated skew handling"):
+with ``skew_mode="auto"`` the compiler inserts ``SkewJoinP`` nodes
+wherever heavy-hitter statistics predict partition imbalance — from a
+stored dataset's persisted sketches (``execute_stored``), or from
+caller-supplied ``skew_hints`` ({bag: {column: heavy keys}}). The
+heavy-key sets ride as runtime parameters: the cache key carries only
+the hint *shape* ((bag, column) pairs), so a warm call with a
+DIFFERENT heavy-key set rebinds with zero retraces, exactly like
+``N.Param`` constants.
 """
 
 from __future__ import annotations
@@ -101,7 +114,11 @@ class QueryService:
                  settings: Optional[ExecSettings] = None,
                  domain_elimination: bool = True,
                  mesh=None, dist_kwargs: Optional[dict] = None,
-                 max_entries: int = 64):
+                 max_entries: int = 64,
+                 skew_mode: str = "auto",
+                 skew_threshold: float = 0.025,
+                 skew_partitions: Optional[int] = None):
+        assert skew_mode in ("auto", "off"), skew_mode
         self.input_types = dict(input_types)
         self.catalog = catalog or Catalog()
         self.settings = settings or ExecSettings()
@@ -109,6 +126,13 @@ class QueryService:
         self.mesh = mesh
         self.dist_kwargs = dict(dist_kwargs or {})
         self.max_entries = max_entries
+        self.skew_mode = skew_mode
+        self.skew_threshold = skew_threshold
+        # imbalance is judged against the partition count queries will
+        # actually run over: the mesh size, unless pinned explicitly
+        # (a single partition can never be imbalanced -> pass disabled)
+        self.skew_partitions = skew_partitions if skew_partitions \
+            else (mesh.size if mesh is not None else 1)
         self._cache: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
         self.stats = {"hits": 0, "misses": 0, "evictions": 0,
                       "batch_calls": 0}
@@ -122,7 +146,18 @@ class QueryService:
                                         capacities, encoders)
 
     # -- fingerprinting ----------------------------------------------------
-    def fingerprint(self, program: N.Program, env: Dict[str, FlatBag]
+    @staticmethod
+    def _skew_shape(skew_hints: Optional[dict]) -> tuple:
+        """Structural component of a hint set: WHICH (bag, column)
+        pairs carry a heavy-key set — never the key values, which are
+        runtime parameter bindings."""
+        if not skew_hints:
+            return ()
+        return tuple(sorted((bag, col) for bag, cols in skew_hints.items()
+                            for col in cols))
+
+    def fingerprint(self, program: N.Program, env: Dict[str, FlatBag],
+                    skew_hints: Optional[dict] = None
                     ) -> Tuple[tuple, N.Program, list, Dict[str, int]]:
         """(cache key, lifted program, parameter values, class caps)."""
         lifted, values = lift_program(program)
@@ -138,15 +173,52 @@ class QueryService:
                            tuple((c, str(bag.data[c].dtype))
                                  for c in bag.columns)))
         key = (prog_fp, tuple(schema),
-               ("dist", tuple(values)) if self.mesh is not None
-               else "local")
+               "dist" if self.mesh is not None else "local",
+               ("skew",) + self._skew_shape(skew_hints))
         return key, lifted, values, class_caps
 
     # -- cache management --------------------------------------------------
-    def _lookup(self, program: N.Program, env: Dict[str, FlatBag]
+    def _hint_stats(self, skew_hints: Optional[dict],
+                    env_c: Dict[str, FlatBag]) -> Optional[dict]:
+        """Caller-supplied heavy-key hints as planner statistics: every
+        hinted key counts as definitely-heavy (count == rows), so the
+        automatic pass inserts a SkewJoinP at exactly the hinted
+        joins."""
+        if not skew_hints or self.skew_mode == "off" \
+                or self.skew_partitions <= 1:
+            return None
+        from repro.core.skew import TableStats
+        stats = {}
+        for bag, cols in skew_hints.items():
+            rows = env_c[bag].capacity if bag in env_c else 1
+            stats[bag] = TableStats(
+                rows=rows,
+                heavy={col: [(int(k), rows) for k in list(ks)]
+                       for col, ks in cols.items()})
+        return stats
+
+    def _skew_binds(self, cp: CG.CompiledProgram,
+                    skew_hints: Optional[dict]) -> Dict[str, object]:
+        """Warm-call heavy-key rebinding: hint values for the (bag,
+        column) pairs the compiled plan lifted as skew parameters.
+        Hints beyond the static MAX_HEAVY bound truncate, mirroring
+        the compile-time decision (`decide_heavy_keys` keeps 40)."""
+        if not skew_hints or not cp.skew_params:
+            return {}
+        from repro.core.skew import MAX_HEAVY, pad_heavy
+        out = {}
+        for name, (bag, attr) in cp.skew_params.items():
+            ks = (skew_hints.get(bag) or {}).get(attr)
+            if ks is not None:
+                out[name] = pad_heavy(list(ks)[:MAX_HEAVY])
+        return out
+
+    def _lookup(self, program: N.Program, env: Dict[str, FlatBag],
+                skew_hints: Optional[dict] = None
                 ) -> Tuple[CacheEntry, Dict[str, object],
                            Dict[str, FlatBag]]:
-        key, lifted, values, class_caps = self.fingerprint(program, env)
+        key, lifted, values, class_caps = self.fingerprint(
+            program, env, skew_hints)
         env_c = {name: bag if bag.capacity == class_caps[name]
                  else bag.resize(class_caps[name])
                  for name, bag in env.items()}
@@ -155,8 +227,10 @@ class QueryService:
             self._touch(key, entry)
         else:
             entry = self._remember(key, self._compile(
-                key, lifted, env_c, class_caps, len(values)))
+                key, lifted, env_c, class_caps, len(values),
+                skew_stats=self._hint_stats(skew_hints, env_c)))
         params = {f"__p{i}": v for i, v in enumerate(values)}
+        params.update(self._skew_binds(entry.cp, skew_hints))
         return entry, params, env_c
 
     def _touch(self, key: tuple, entry: CacheEntry) -> None:
@@ -175,10 +249,15 @@ class QueryService:
     def _compile(self, key: tuple, lifted: N.Program,
                  env_c: Dict[str, FlatBag],
                  class_caps: Dict[str, int],
-                 n_params: int = 0) -> CacheEntry:
+                 n_params: int = 0,
+                 skew_stats: Optional[dict] = None) -> CacheEntry:
         sp = M.shred_program(lifted, self.input_types,
                              domain_elimination=self.domain_elim)
-        cp = CG.compile_program(sp, self.catalog)
+        cp = CG.compile_program(sp, self.catalog,
+                                skew_stats=skew_stats,
+                                skew_mode=self.skew_mode,
+                                skew_partitions=self.skew_partitions,
+                                skew_threshold=self.skew_threshold)
         if self.mesh is not None:
             runner, _, _ = CG.compile_program_distributed(
                 cp, env_c, self.mesh,
@@ -201,22 +280,48 @@ class QueryService:
                           dict(class_caps), storage_req=storage_req)
 
     # -- execution ---------------------------------------------------------
-    def execute(self, program: N.Program, env) -> Dict[str, FlatBag]:
+    def execute(self, program: N.Program, env,
+                skew_hints: Optional[dict] = None) -> Dict[str, FlatBag]:
         """Run one program invocation; returns the output bags (every
         manifest top + dictionary). Warm path: cache hit, parameter
         rebind, zero shredding / plan passes / tracing. ``env`` is
         either an environment of FlatBags or a persisted
-        ``storage.StoredDataset`` (routed through
-        ``execute_stored``)."""
+        ``storage.StoredDataset`` (routed through ``execute_stored``).
+
+        ``skew_hints`` ({bag: {column: heavy-key iterable}}) marks
+        probe-side columns whose heavy keys should take the broadcast
+        path. The hint SHAPE joins the cache key; the key VALUES are
+        runtime parameters — warm calls may supply a different set per
+        call with zero retracing."""
         if hasattr(env, "load_env"):       # storage.StoredDataset
-            return self.execute_stored(program, env)
+            return self.execute_stored(program, env,
+                                       skew_hints=skew_hints)
         assert not hasattr(env, "ensure_loaded"), (
             "QueryService.execute received a lazy StorageEnv; pass the "
             "StoredDataset itself (execute / execute_stored), or run "
             "the eager path via codegen.run_flat_program")
-        entry, params, env_c = self._lookup(program, env)
+        entry, params, env_c = self._lookup(program, env, skew_hints)
         if entry.runner is not None:
-            out, _metrics = entry.runner(env_c)
+            rp = entry.runner.params or {}
+            bound = {k: v for k, v in params.items() if k in rp}
+            out, metrics = entry.runner(env_c, params=bound)
+            # a rebind that SHRINKS the warm heavy-key set can push a
+            # hot key back through an exchange bucket the adaptive
+            # warmup sized without it; the raw runner meters that as
+            # overflow (the skew safety valve), but a serving layer
+            # must not silently truncate — fail loudly, re-warm with
+            # the new set instead (DESIGN.md "Automated skew handling")
+            if entry.cp.skew_params and any(k in entry.cp.skew_params
+                                            for k in bound):
+                lost = metrics.get("overflow_rows", 0) \
+                    + metrics.get("compact_dropped_rows", 0)
+                if lost:
+                    raise RuntimeError(
+                        f"heavy-key rebind overflowed warm capacities "
+                        f"({lost} rows dropped); the adaptive sizes "
+                        f"were resolved for the warmup heavy-key set — "
+                        f"grow the set, or re-warm the entry for the "
+                        f"new one")
             return out
         return entry.exe(env_c, params)
 
@@ -254,31 +359,60 @@ class QueryService:
         return [_slice_outputs(batched, i) for i in range(B)]
 
     # -- storage-backed execution ------------------------------------------
-    def fingerprint_stored(self, program: N.Program, dataset
+    def fingerprint_stored(self, program: N.Program, dataset,
+                           skew_hints: Optional[dict] = None
                            ) -> Tuple[tuple, N.Program, list]:
         """Cache key for a (program, stored dataset) pair. The dataset
         fingerprint covers schemas and row totals but NOT chunk
         selection — one warm plan serves every parameter binding while
-        zone maps re-select chunks per call."""
+        zone maps re-select chunks per call. Heavy-key values are
+        likewise excluded (runtime parameters); only the hint shape
+        participates."""
         lifted, values = lift_program(program)
         key = (N.program_fingerprint(lifted),
-               ("stored",) + dataset.fingerprint())
+               ("stored",) + dataset.fingerprint(),
+               ("skew",) + self._skew_shape(skew_hints))
         return key, lifted, values
 
-    def _lookup_stored(self, program: N.Program, dataset
+    def _stored_skew_stats(self, dataset,
+                           skew_hints: Optional[dict]) -> Optional[dict]:
+        """Planner statistics for a stored dataset: the persisted
+        streaming sketches + zone-map distinct counts, overridden by
+        any caller hints (hinted keys count as definitely heavy)."""
+        if self.skew_mode == "off" or self.skew_partitions <= 1:
+            return None
+        from repro.core.skew import TableStats
+        from repro.storage import table_stats
+        stats = table_stats(dataset)
+        for bag, cols in (skew_hints or {}).items():
+            rows = dataset.parts[bag].rows if bag in dataset.parts else 1
+            ts = stats.get(bag) or TableStats(rows=rows)
+            for col, ks in cols.items():
+                ts.heavy[col] = [(int(k), max(rows, 1)) for k in list(ks)]
+            stats[bag] = ts
+        return stats
+
+    def _lookup_stored(self, program: N.Program, dataset,
+                       skew_hints: Optional[dict] = None
                        ) -> Tuple[CacheEntry, Dict[str, object],
                                   Dict[str, FlatBag]]:
         from repro.storage import storage_requirements
         assert self.mesh is None, (
             "storage-backed serving is a local-path feature")
-        key, lifted, values = self.fingerprint_stored(program, dataset)
+        key, lifted, values = self.fingerprint_stored(program, dataset,
+                                                      skew_hints)
         entry = self._cache.get(key)
         if entry is not None:
             self._touch(key, entry)
         else:
             sp = M.shred_program(lifted, self.input_types,
                                  domain_elimination=self.domain_elim)
-            cp = CG.compile_program(sp, self.catalog)
+            cp = CG.compile_program(
+                sp, self.catalog,
+                skew_stats=self._stored_skew_stats(dataset, skew_hints),
+                skew_mode=self.skew_mode,
+                skew_partitions=self.skew_partitions,
+                skew_threshold=self.skew_threshold)
             req = storage_requirements(cp, set(dataset.parts))
             # capacities pin to the FULL part's class regardless of the
             # per-call chunk selection, so traced shapes never change
@@ -287,21 +421,31 @@ class QueryService:
             entry = self._remember(key, self._local_entry(
                 key, sp, cp, class_caps, len(values), storage_req=req))
         params = {f"__p{i}": v for i, v in enumerate(values)}
+        params.update(self._skew_binds(entry.cp, skew_hints))
         env = dataset.load_env(
             columns={p: r.columns for p, r in entry.storage_req.items()},
             preds={p: r.pred for p, r in entry.storage_req.items()},
             params=params, capacities=entry.class_caps)
         return entry, params, env
 
-    def execute_stored(self, program: N.Program, dataset
+    def execute_stored(self, program: N.Program, dataset,
+                       skew_hints: Optional[dict] = None
                        ) -> Dict[str, FlatBag]:
         """Run one invocation against a persisted dataset
         (``storage.StoredDataset``). The warm path re-resolves the
         pushed-down ``N.Param`` predicates against the dataset's zone
         maps at bind time — chunk selection adapts per call while the
         cached executable re-runs with ZERO tracing (capacities are
-        pinned to the full part's class)."""
-        entry, params, env = self._lookup_stored(program, dataset)
+        pinned to the full part's class). With ``skew_partitions > 1``
+        (an explicit opt-in — stored serving is local, where a
+        SkewJoinP evaluates as its plain join and costs the join-agg
+        fusion), skew decisions come from the dataset's persisted
+        heavy-key sketches plus ``skew_hints`` overrides and the
+        heavy-key sets bind as runtime parameters — useful for
+        inspecting/shaping plans destined for distributed serving, a
+        no-op for pure local throughput."""
+        entry, params, env = self._lookup_stored(program, dataset,
+                                                 skew_hints)
         return entry.exe(env, params)
 
     def unshred_stored(self, program: N.Program, dataset,
@@ -327,12 +471,12 @@ class QueryService:
             parts[path] = outputs[name]
         return CG.parts_to_rows(parts, man.ty)
 
-    def warmup(self, program: N.Program, env: Dict[str, FlatBag]
-               ) -> Dict[str, FlatBag]:
+    def warmup(self, program: N.Program, env: Dict[str, FlatBag],
+               skew_hints: Optional[dict] = None) -> Dict[str, FlatBag]:
         """Populate the cache (and, on the dist path, resolve adaptive
         capacities — pass ``dist_kwargs=dict(adaptive=True)``) by
         running the program once."""
-        return self.execute(program, env)
+        return self.execute(program, env, skew_hints=skew_hints)
 
     # -- results -----------------------------------------------------------
     def unshred(self, program: N.Program, env: Dict[str, FlatBag],

@@ -6,11 +6,11 @@ from .catalog import (PartRequirement, StorageCatalog, StorageEnv,
                       storage_requirements)
 from .format import DatasetMeta, PartMeta, chunk_may_match
 from .reader import (STORAGE_STATS, StoredDataset, StoredPart,
-                     reset_storage_stats, restore_encoders)
+                     reset_storage_stats, restore_encoders, table_stats)
 from .writer import DatasetWriter
 
 __all__ = ["DatasetMeta", "DatasetWriter", "PartMeta", "PartRequirement",
            "STORAGE_STATS", "StorageCatalog", "StorageEnv",
            "StoredDataset", "StoredPart", "chunk_may_match",
            "reset_storage_stats", "restore_encoders",
-           "storage_requirements"]
+           "storage_requirements", "table_stats"]

@@ -26,7 +26,7 @@ from typing import Dict, List, Optional
 
 from repro.core import nrc as N
 from repro.core.plans import (FusedJoinAggP, JoinP, MapP, OuterUnnestP,
-                              Plan, ScanP, SelectP, UnionP,
+                              Plan, ScanP, SelectP, SkewJoinP, UnionP,
                               _PrunedScan, col_expr_deps,
                               scan_keep_attrs)
 
@@ -73,6 +73,11 @@ def _collect_sites(p: Plan, preds: List[N.Expr], out: List[_ScanSite]
     if isinstance(p, _PrunedScan):
         out.append(_ScanSite(p.inner.bag, p.inner.alias, set(p.keep),
                              preds))
+        return
+    if isinstance(p, SkewJoinP):
+        # row-set-wise identical to its embedded join (skew only moves
+        # rows between partitions), so predicates flow the same way
+        _collect_sites(p.join, preds, out)
         return
     if isinstance(p, JoinP):
         _collect_sites(p.left, preds, out)

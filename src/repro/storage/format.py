@@ -148,6 +148,10 @@ class PartMeta:
     # round trip because chunks are read back in written row order
     sorted_by: Optional[tuple] = None
     partitioning: Optional[tuple] = None
+    # streaming heavy-key sketches (core.skew.HeavyKeySketch JSON), one
+    # per integer-kind column — the statistics the automatic skew pass
+    # reads (optional: absent on datasets written before the field)
+    sketches: Dict[str, dict] = dc_field(default_factory=dict)
 
     @property
     def rows(self) -> int:
@@ -161,7 +165,8 @@ class PartMeta:
                 "sorted_by": list(self.sorted_by) if self.sorted_by
                 else None,
                 "partitioning": list(self.partitioning)
-                if self.partitioning else None}
+                if self.partitioning else None,
+                "sketches": self.sketches}
 
     @staticmethod
     def from_json(d: dict) -> "PartMeta":
@@ -171,7 +176,8 @@ class PartMeta:
             chunks=[ChunkMeta(c["rows"], c["zones"]) for c in d["chunks"]],
             sorted_by=tuple(d["sorted_by"]) if d.get("sorted_by") else None,
             partitioning=tuple(d["partitioning"])
-            if d.get("partitioning") else None)
+            if d.get("partitioning") else None,
+            sketches=dict(d.get("sketches", {})))
 
 
 @dataclass

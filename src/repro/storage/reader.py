@@ -75,6 +75,24 @@ class StoredPart:
     def bytes_on_disk(self) -> int:
         return dir_bytes(os.path.join(self.dirpath, self.meta.name))
 
+    # -- planner statistics -------------------------------------------------
+    def stats(self):
+        """``skew.TableStats`` for this part: total rows, per-column
+        distinct-count upper bounds summed over chunk zone maps, and the
+        persisted streaming heavy-key sketch candidates. This is what
+        the automatic skew pass (``plans.apply_skew_program``) consumes
+        via ``table_stats``."""
+        from repro.core.skew import HeavyKeySketch, TableStats
+        distinct = {}
+        for c in self.meta.chunks:
+            for col, z in c.zones.items():
+                distinct[col] = distinct.get(col, 0) + int(z["distinct"])
+        heavy = {}
+        for col, sj in self.meta.sketches.items():
+            sk = HeavyKeySketch.from_json(sj)
+            heavy[col] = [(v, cnt) for v, cnt in sk.counts.items()]
+        return TableStats(rows=self.rows, distinct=distinct, heavy=heavy)
+
     # -- zone-map chunk selection -----------------------------------------
     def select_chunks(self, pred: Optional[N.Expr],
                       params: Optional[dict] = None) -> List[int]:
@@ -153,6 +171,13 @@ class StoredPart:
             else None
         return PhysicalProps(sorted_by=sb, invalid_last=True,
                              partitioning=part)
+
+
+def table_stats(dataset: "StoredDataset") -> Dict[str, object]:
+    """{part name: skew.TableStats} over a whole dataset — the
+    statistics bundle ``codegen.compile_program(skew_stats=...)`` and
+    the query service feed to the automatic skew pass."""
+    return {name: part.stats() for name, part in dataset.parts.items()}
 
 
 class StoredDataset:

@@ -28,6 +28,7 @@ from repro.columnar.table import DTYPES, FlatBag, StringEncoder
 from repro.core import codegen as CG
 from repro.core import nrc as N
 from repro.core.materialization import mat_input_name
+from repro.core.skew import HeavyKeySketch
 
 from .format import (ChunkMeta, DatasetMeta, PartMeta, chunk_path,
                      dir_bytes, flat_part_schema, label_domains,
@@ -97,6 +98,13 @@ class DatasetWriter:
                         name=key, schema=schema,
                         dtypes={c: str(np.dtype(DTYPES[k]))
                                 for c, k in schema.items()})
+        # streaming heavy-key sketches, one per (part, integer-kind
+        # column) — restored from the footer on resume so a restarted
+        # process keeps counting where the previous one stopped
+        self._sketches: Dict[str, Dict[str, HeavyKeySketch]] = {
+            part: {col: HeavyKeySketch.from_json(sj)
+                   for col, sj in pm.sketches.items()}
+            for part, pm in self.meta.parts.items()}
         # label-kind column -> part name holding that domain's rids
         self._domain_parent: Dict[str, Dict[str, str]] = {}
         for iname, ty in self.meta.input_types.items():
@@ -162,11 +170,17 @@ class DatasetWriter:
         if n == 0:
             return      # nothing appended: footer (and props) unchanged
         host = {}
+        sketches = self._sketches.setdefault(part, {})
         for col in bag.data:
             a = np.asarray(bag.data[col])[valid]
             if label_offsets and label_offsets.get(col):
                 a = a + np.asarray(label_offsets[col], dtype=a.dtype)
             host[col] = a
+            # streaming heavy-key statistics: integer-kind columns
+            # (ints, dates, label rids, string codes) are join-key
+            # candidates; reals/bools are not equi-join keys
+            if np.issubdtype(a.dtype, np.integer):
+                sketches.setdefault(col, HeavyKeySketch()).update(a)
         if pm.chunks:
             # appending to a non-empty part: the concatenation is no
             # longer globally sorted/placed, so persisted props from an
@@ -195,6 +209,9 @@ class DatasetWriter:
     def _flush(self) -> None:
         self.meta.encoders = {c: list(e.rev)
                               for c, e in self.encoders.items()}
+        for part, sk in self._sketches.items():
+            self.meta.parts[part].sketches = {c: s.to_json()
+                                              for c, s in sk.items()}
         write_footer(self.dir, self.meta)
 
     def bytes_on_disk(self) -> int:

@@ -1,0 +1,273 @@
+"""Differential property suite: hypothesis-generated small NRC
+programs (maps, selects, equi-joins, sum_by, nesting; skewed and
+uniform key draws) asserting parity across the four evaluation paths —
+
+  1. the flat interpreter (``I.eval_expr``, the oracle),
+  2. the whole-program local jit (``CG.jit_program``),
+  3. distributed shard_map execution
+     (``CG.compile_program_distributed``, 8 virtual devices), and
+  4. storage-backed serving (``QueryService.execute_stored`` over a
+     freshly persisted dataset, automatic skew decisions enabled).
+
+Values are integer-valued floats, so float64 sums are exact in any
+association order and the comparison is bit-for-bit (``bags_equal`` at
+12 digits never rounds an exact value).
+
+Runs under the real ``hypothesis`` when installed, else the
+deterministic tier-1 shim (``_hypothesis_shim``)."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+    sys.modules["hypothesis"] = _hypothesis_shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.unnesting import Catalog
+
+PART_T = N.bag(N.tuple_t(pid=N.INT, pname=N.INT, price=N.REAL))
+ORD_T = N.bag(N.tuple_t(
+    odate=N.INT, oparts=N.bag(N.tuple_t(pid=N.INT, qty=N.REAL))))
+TYPES = {"Ord": ORD_T, "Part": PART_T}
+CATALOG = Catalog(unique_keys={"Part__F": ("pid",)})
+
+SHAPES = ("nested_agg", "flat_agg", "nested_map", "nested_join_plain")
+SELS = (None, "qty_ge", "pid_le")
+
+
+# ---------------------------------------------------------------------------
+# case construction (plain data in, so the distributed subprocess can
+# reproduce a case from its spec dict without hypothesis)
+# ---------------------------------------------------------------------------
+
+def gen_inputs(spec):
+    rng = np.random.RandomState(spec["seed"])
+    n_parts = spec["n_parts"]
+    orders = []
+    for i in range(spec["n_orders"]):
+        items = []
+        for _ in range(rng.randint(0, 6)):
+            if spec["zipf"] > 0 and rng.rand() < spec["zipf"]:
+                pid = 1 + (spec["seed"] % n_parts)   # one hot key
+            else:
+                pid = int(rng.randint(1, n_parts + 1))
+            items.append({"pid": pid, "qty": float(rng.randint(1, 5))})
+        orders.append({"odate": 20200100 + i, "oparts": items})
+    parts = [{"pid": i, "pname": 100 + i, "price": float(i % 7 + 1)}
+             for i in range(1, n_parts + 1)]
+    return {"Ord": orders, "Part": parts}
+
+
+def build_query(spec) -> N.Expr:
+    Ord = N.Var("Ord", ORD_T)
+    Part = N.Var("Part", PART_T)
+    sel, selc = spec["sel"], spec["selc"]
+
+    def guard(op, base):
+        if sel == "qty_ge":
+            return N.IfThen(op.qty.ge(N.Const(float(selc), N.REAL)), base)
+        if sel == "pid_le":
+            return N.IfThen(op.pid.le(N.Const(int(selc), N.INT)), base)
+        return base
+
+    def joined(op, body):
+        return N.for_in("p", Part, lambda p:
+            N.IfThen(op.pid.eq(p.pid), body(p)))
+
+    shape = spec["shape"]
+    if shape == "nested_agg":
+        def tops(x):
+            inner = N.for_in("op", x.oparts, lambda op: guard(op,
+                joined(op, lambda p: N.Singleton(N.record(
+                    pname=p.pname, total=op.qty * p.price)))))
+            return N.SumBy(inner, keys=("pname",), values=("total",))
+        return N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+            odate=x.odate, tops=tops(x))))
+    if shape == "flat_agg":
+        inner = N.for_in("x", Ord, lambda x:
+            N.for_in("op", x.oparts, lambda op: guard(op,
+                joined(op, lambda p: N.Singleton(N.record(
+                    odate=x.odate, total=op.qty * p.price))))))
+        return N.SumBy(inner, keys=("odate",), values=("total",))
+    if shape == "nested_map":
+        return N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+            odate=x.odate,
+            items=N.for_in("op", x.oparts, lambda op: guard(op,
+                N.Singleton(N.record(pid2=op.pid + N.Const(3, N.INT),
+                                     q=op.qty)))))))
+    assert shape == "nested_join_plain", shape
+    return N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate,
+        items=N.for_in("op", x.oparts, lambda op: guard(op,
+            joined(op, lambda p: N.Singleton(N.record(
+                pname=p.pname, s=op.qty * p.price))))))))
+
+
+def random_spec(rng) -> dict:
+    sel = SELS[int(rng.randint(0, len(SELS)))]
+    return dict(seed=int(rng.randint(0, 10000)),
+                n_orders=int(rng.randint(3, 12)),
+                n_parts=int(rng.randint(4, 10)),
+                zipf=float([0.0, 0.5, 0.9][int(rng.randint(0, 3))]),
+                shape=SHAPES[int(rng.randint(0, len(SHAPES)))],
+                sel=sel, selc=int(rng.randint(1, 4)))
+
+
+def spec_st():
+    return st.composite(
+        lambda draw: dict(
+            seed=draw(st.integers(0, 10000)),
+            n_orders=draw(st.integers(3, 12)),
+            n_parts=draw(st.integers(4, 10)),
+            zipf=draw(st.sampled_from([0.0, 0.5, 0.9])),
+            shape=draw(st.sampled_from(SHAPES)),
+            sel=draw(st.sampled_from(SELS)),
+            selc=draw(st.integers(1, 4))))()
+
+
+def equal(a, b) -> bool:
+    return I.bags_equal(a, b, float_digits=12)
+
+
+# -- evaluation paths -------------------------------------------------------
+
+def run_jit(q, inputs):
+    prog = N.Program([N.Assignment("Q", q)])
+    sp = M.shred_program(prog, TYPES, domain_elimination=True)
+    cp = CG.compile_program(sp, CATALOG)
+    env = CG.columnar_shred_inputs(inputs, TYPES)
+    out = CG.jit_program(cp)(env)
+    man = sp.manifests["Q"]
+    parts = {(): out[man.top], **{p: out[n]
+                                  for p, n in man.dicts.items()}}
+    return CG.parts_to_rows(parts, q.ty)
+
+
+def run_stored(q, inputs, tmpdir):
+    from repro.serve import QueryService
+    from repro.storage import StorageCatalog
+    cat = StorageCatalog(tmpdir)
+    w = cat.writer("d", TYPES, chunk_rows=16)
+    w.append(inputs)
+    ds = cat.open("d")
+    # skew_partitions=8: automatic SkewJoinP decisions exercise the
+    # whole compile path even though local evaluation is placement-free
+    svc = QueryService(TYPES, catalog=CATALOG, skew_partitions=8)
+    prog = N.Program([N.Assignment("Q", q)])
+    out = svc.execute_stored(prog, ds)
+    return svc.unshred_stored(prog, ds, out, "Q")
+
+
+# ---------------------------------------------------------------------------
+# fast tier: interpreter vs local jit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(spec_st())
+def test_differential_interpreter_vs_jit(spec):
+    q = build_query(spec)
+    inputs = gen_inputs(spec)
+    direct = I.eval_expr(q, inputs)
+    assert equal(direct, run_jit(q, inputs)), spec
+
+
+# ---------------------------------------------------------------------------
+# second tier: storage-backed serving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(spec_st())
+def test_differential_stored(spec):
+    q = build_query(spec)
+    inputs = gen_inputs(spec)
+    direct = I.eval_expr(q, inputs)
+    with tempfile.TemporaryDirectory() as td:
+        assert equal(direct, run_stored(q, inputs, td)), spec
+
+
+# ---------------------------------------------------------------------------
+# second tier: all four paths on 8 virtual devices (one subprocess
+# loops the examples, per the dry-run isolation rule)
+# ---------------------------------------------------------------------------
+
+_DIST_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, tempfile
+sys.path.insert(0, %(src)r)
+sys.path.insert(0, %(tests)r)
+import numpy as np
+import repro
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.exec.dist import device_mesh_1d
+from repro.storage import StorageCatalog, table_stats
+import test_differential as TD
+
+mesh = device_mesh_1d(8)
+rng = np.random.RandomState(20260731)
+for case in range(%(examples)d):
+    spec = TD.random_spec(rng)
+    q = TD.build_query(spec)
+    inputs = TD.gen_inputs(spec)
+    direct = I.eval_expr(q, inputs)
+    assert TD.equal(direct, TD.run_jit(q, inputs)), ("jit", spec)
+    with tempfile.TemporaryDirectory() as td:
+        assert TD.equal(direct, TD.run_stored(q, inputs, td)), \\
+            ("stored", spec)
+        # distributed: compile with storage-derived skew statistics so
+        # skewed draws actually lower through SkewJoinP on the wire
+        cat = StorageCatalog(td)
+        w = cat.writer("d8", TD.TYPES, chunk_rows=16)
+        w.append(inputs)
+        ds = cat.open("d8")
+        prog = N.Program([N.Assignment("Q", q)])
+        sp = M.shred_program(prog, TD.TYPES, domain_elimination=True)
+        cp = CG.compile_program(sp, TD.CATALOG,
+                                skew_stats=table_stats(ds),
+                                skew_partitions=8)
+        env = CG.columnar_shred_inputs(inputs, TD.TYPES)
+        env = {k: b.resize(((b.capacity + 7) // 8) * 8)
+               for k, b in env.items()}
+        runner, out, metrics = CG.compile_program_distributed(
+            cp, env, mesh, cap_factor=16.0)
+        man = sp.manifests["Q"]
+        parts = {(): out[man.top],
+                 **{p: out[n] for p, n in man.dicts.items()}}
+        assert TD.equal(direct, CG.parts_to_rows(parts, q.ty)), \\
+            ("dist", spec)
+print("OK %(examples)d cases")
+"""
+
+
+@pytest.mark.slow
+def test_differential_distributed_four_paths():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _DIST_CHILD % {"src": os.path.abspath(src),
+                            "tests": os.path.dirname(
+                                os.path.abspath(__file__)),
+                            "examples": 5}
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, \
+        f"STDOUT:{res.stdout}\nSTDERR:{res.stderr}"
+    assert "OK" in res.stdout

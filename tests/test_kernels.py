@@ -131,7 +131,7 @@ def test_gather_rows_hypothesis(r, n, d, seed):
 # -- packed-shuffle dest-scatter + column unpack ------------------------------
 
 from repro.kernels.shuffle_pack import (  # noqa: E402
-    pack_rows_pallas, unpack_cols_pallas)
+    member_mask_pallas, pack_rows_pallas, unpack_cols_pallas)
 
 
 @settings(max_examples=15, deadline=None)
@@ -165,6 +165,28 @@ def test_unpack_cols_hypothesis(m, d, seed):
     got = unpack_cols_pallas(jnp.asarray(buf), block_t=16)
     want = R.unpack_cols_ref(jnp.asarray(buf))
     assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 70), st.integers(0, 12), st.integers(0, 3))
+def test_member_mask_hypothesis(n, n_heavy, seed):
+    """Heavy-key membership kernel == ref == searchsorted semantics,
+    I64_MAX padding inert on both sides."""
+    I64 = np.iinfo(np.int64).max
+    rng = np.random.RandomState(seed)
+    keys = rng.randint(-40, 40, n).astype(np.int64)
+    if n > 2:
+        keys[rng.randint(0, n, max(n // 4, 1))] = I64   # padded keys
+    heavy = np.full(40, I64, np.int64)
+    heavy[:n_heavy] = np.sort(rng.choice(
+        np.arange(-40, 40), size=n_heavy, replace=False)).astype(np.int64)
+    got = member_mask_pallas(jnp.asarray(keys), jnp.asarray(heavy),
+                             block_n=16)
+    want = R.member_mask_ref(jnp.asarray(keys), jnp.asarray(heavy))
+    assert (np.asarray(got) == np.asarray(want)).all()
+    from repro.core.skew import is_member
+    srch = is_member(jnp.asarray(keys), jnp.asarray(heavy))
+    assert (np.asarray(want) == np.asarray(srch)).all()
 
 
 # -- flash attention -----------------------------------------------------------

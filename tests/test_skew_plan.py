@@ -1,0 +1,288 @@
+"""Compiler-integrated automated skew handling: the streaming
+heavy-key sketch, the plan-time decision (``apply_skew_program``), the
+``SkewJoinP`` lowering, and the degenerate cases — zero heavy keys
+(byte-identical plan + identical SHUFFLE_STATS vs the plain join), all
+keys heavy, and a heavy key absent from the probe side.
+
+Distributed assertions run on a single-device mesh: collective COUNTS
+and trace counts are trace-time host counters, so the plan shape is
+fully observable without the 8-virtual-device subprocess (which the
+differential suite covers)."""
+
+import numpy as np
+import pytest
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core import skew as SK
+from repro.core.plans import SkewJoinP, _walk_plan, collect_plan_params
+from repro.core.unnesting import Catalog
+from repro.exec.dist import device_mesh_1d
+
+import helpers as H
+
+CATALOG = Catalog(unique_keys={"Part__F": ("pid",)})
+OPARTS = "COP__D_corders_oparts"
+
+
+@pytest.fixture(scope="module")
+def case():
+    data = {"COP": H.gen_cop(n_cust=16, seed=2, zipf=0.6),
+            "Part": H.gen_parts(29)}
+    prog = N.Program([N.Assignment("Q", H.running_example_query())])
+    sp = M.shred_program(prog, H.INPUT_TYPES, domain_elimination=True)
+    direct = I.eval_expr(H.running_example_query(), data)
+    return data, prog, sp, direct
+
+
+def compile_with(sp, stats, **kw):
+    kw.setdefault("skew_partitions", 8)
+    return CG.compile_program(sp, CATALOG, skew_stats=stats, **kw)
+
+
+def skew_nodes(cp):
+    return [s for _, p in cp.plans for s in _walk_plan(p)
+            if isinstance(s, SkewJoinP)]
+
+
+def heavy_stats(keys, rows=500):
+    return {OPARTS: SK.TableStats(
+        rows=rows, distinct={"pid": 29},
+        heavy={"pid": [(int(k), rows) for k in keys]})}
+
+
+def run_dist(cp, sp, data, heavy_rebind=None):
+    """One-device distributed run; returns (rows, metrics, runner)."""
+    env = CG.columnar_shred_inputs(data, H.INPUT_TYPES)
+    mesh = device_mesh_1d(1)
+    runner, out, metrics = CG.compile_program_distributed(
+        cp, env, mesh, cap_factor=16.0)
+    if heavy_rebind is not None:
+        out, metrics = runner(env, params=heavy_rebind)
+    man = sp.manifests["Q"]
+    parts = {(): out[man.top], **{p: out[n]
+                                  for p, n in man.dicts.items()}}
+    rows = CG.parts_to_rows(parts, H.running_example_query().ty)
+    return rows, metrics, runner
+
+
+# ---------------------------------------------------------------------------
+# the streaming sketch
+# ---------------------------------------------------------------------------
+
+def test_sketch_streams_and_bounds():
+    rng = np.random.RandomState(0)
+    sk = SK.HeavyKeySketch(k=8)
+    stream = np.concatenate([np.full(600, 7), rng.randint(0, 1000, 400)])
+    rng.shuffle(stream)
+    for i in range(0, 1000, 64):          # streamed in chunks
+        sk.update(stream[i:i + 64])
+    assert sk.total == 1000
+    # guaranteed retention: frequency 600 > total/k = 125
+    heavy = dict(sk.heavy(threshold=0.025))
+    assert 7 in heavy
+    # counts are lower bounds
+    assert heavy[7] <= 600
+    assert heavy[7] >= 600 - sk.error_bound()
+    # JSON round trip is exact
+    back = SK.HeavyKeySketch.from_json(sk.to_json())
+    assert back.counts == sk.counts and back.total == sk.total
+
+
+def test_sketch_uniform_has_no_heavy():
+    rng = np.random.RandomState(1)
+    sk = SK.HeavyKeySketch(k=16)
+    sk.update(rng.randint(0, 10000, 5000))
+    assert sk.heavy(threshold=0.025) == []
+
+
+def test_decide_heavy_keys_threshold_and_partitions():
+    ts = SK.TableStats(rows=1000, distinct={"pid": 50},
+                       heavy={"pid": [(7, 300), (3, 10)]})
+    # only the 30% key clears the 2.5% bar
+    assert SK.decide_heavy_keys(ts, "pid", n_partitions=8) == [7]
+    # one partition can never be imbalanced
+    assert SK.decide_heavy_keys(ts, "pid", n_partitions=1) == []
+    # unknown column: nothing
+    assert SK.decide_heavy_keys(ts, "qty", n_partitions=8) == []
+
+
+def test_pad_heavy_shape_and_order():
+    a = SK.pad_heavy([9, 3, 7])
+    assert a.shape == (SK.MAX_HEAVY,) and a.dtype == np.int64
+    assert list(a[:3]) == [3, 7, 9]
+    assert a[3] == np.iinfo(np.int64).max
+
+
+# ---------------------------------------------------------------------------
+# degenerate cases
+# ---------------------------------------------------------------------------
+
+def test_zero_heavy_keys_is_noop_vs_plain_join(case):
+    """No predicted heavy keys -> no SkewJoinP, and the distributed
+    execution is THE SAME PLAN as the skew-less compile: identical
+    SHUFFLE_STATS (collectives, exchanges, elisions), no planned skew
+    join, bit-identical results."""
+    data, prog, sp, direct = case
+    plain = CG.compile_program(sp, CATALOG)
+    noop = compile_with(sp, heavy_stats([]))     # stats, zero heavy
+    assert skew_nodes(noop) == [] and noop.skew_params == {}
+    r_plain, m_plain, run_plain = run_dist(plain, sp, data)
+    r_noop, m_noop, run_noop = run_dist(noop, sp, data)
+    assert I.bags_equal(direct, r_plain) and I.bags_equal(direct, r_noop)
+    for k in ("shuffle_collectives", "exchanges", "exchanges_elided",
+              "shuffle_rows"):
+        assert m_plain[k] == m_noop[k], (k, m_plain[k], m_noop[k])
+    assert "skew_join_planned" not in run_noop.stats
+    # sanity: an actually-heavy stat DOES change the plan
+    auto = compile_with(sp, heavy_stats([7]))
+    assert len(skew_nodes(auto)) == 1
+
+
+def test_all_keys_heavy_parity(case):
+    """Every probe key heavy: the whole probe side takes the broadcast
+    path, the light exchange ships nothing — results unchanged."""
+    data, prog, sp, direct = case
+    cp = compile_with(sp, heavy_stats(list(range(1, 30))))
+    (sj,) = skew_nodes(cp)
+    assert len([k for k in sj.heavy_default
+                if k != np.iinfo(np.int64).max]) == 29
+    rows, metrics, runner = run_dist(cp, sp, data)
+    assert I.bags_equal(direct, rows)
+    assert runner.stats.get("skew_join_planned") == 1
+
+
+def test_heavy_key_absent_from_probe_parity(case):
+    """A heavy key that never occurs on the probe side: the split is
+    empty on the heavy branch; parity must hold and a rebind to the
+    absent key must equal the plain answer."""
+    data, prog, sp, direct = case
+    cp = compile_with(sp, heavy_stats([424242]))   # no such pid
+    assert len(skew_nodes(cp)) == 1
+    rows, metrics, _ = run_dist(cp, sp, data)
+    assert I.bags_equal(direct, rows)
+
+
+def test_warm_rebind_new_heavy_set_zero_retraces(case):
+    """The plan-cache contract: a warm runner rebinds a DIFFERENT
+    heavy-key set (runtime parameter) with zero retraces and correct
+    results."""
+    data, prog, sp, direct = case
+    cp = compile_with(sp, heavy_stats([7]))
+    (name,) = collect_plan_params(cp.graph)
+    env = CG.columnar_shred_inputs(data, H.INPUT_TYPES)
+    mesh = device_mesh_1d(1)
+    CG.reset_trace_stats()
+    runner, out, _ = CG.compile_program_distributed(cp, env, mesh,
+                                                    cap_factor=16.0)
+    t0 = CG.TRACE_STATS.get("traces", 0)
+    for keys in ([3, 9, 21], [], list(range(1, 30))):
+        out2, _m = runner(env, params={name: SK.pad_heavy(keys)})
+        man = sp.manifests["Q"]
+        parts = {(): out2[man.top],
+                 **{p: out2[n] for p, n in man.dicts.items()}}
+        rows = CG.parts_to_rows(parts, H.running_example_query().ty)
+        assert I.bags_equal(direct, rows), keys
+    assert CG.TRACE_STATS.get("traces", 0) == t0   # zero retraces
+
+
+def test_local_jit_ignores_heavy_but_binds_param(case):
+    """Locally a SkewJoinP degrades to its plain join; the heavy param
+    still exists in the executable's binding surface (shape-stable
+    family contract)."""
+    data, prog, sp, direct = case
+    cp = compile_with(sp, heavy_stats([7]))
+    exe = CG.jit_program(cp)
+    assert "__hk0" in exe.param_defaults
+    env = CG.columnar_shred_inputs(data, H.INPUT_TYPES)
+    out = exe(env, {"__hk0": SK.pad_heavy([5])})
+    man = sp.manifests["Q"]
+    parts = {(): out[man.top], **{p: out[n]
+                                  for p, n in man.dicts.items()}}
+    assert I.bags_equal(direct, CG.parts_to_rows(
+        parts, H.running_example_query().ty))
+
+
+def test_service_shrinking_rebind_fails_loudly(case):
+    """A warm heavy-key rebind that SHRINKS the set can overflow the
+    adaptively sized exchange buckets; the QueryService must raise
+    (advising a re-warm) instead of returning silently truncated
+    aggregates. A growing rebind keeps serving fine."""
+    from repro.serve import QueryService
+    data, prog, sp, direct = case
+    mesh = device_mesh_1d(1)
+    # tight buckets + adaptive: the warmup pins every site to its
+    # exact need under the warm heavy-key set
+    svc = QueryService(H.INPUT_TYPES, catalog=CATALOG, mesh=mesh,
+                       dist_kwargs=dict(cap_factor=0.25, adaptive=True),
+                       skew_partitions=8)
+    env = CG.columnar_shred_inputs(data, H.INPUT_TYPES)
+    hints = {OPARTS: {"pid": [7]}}       # zipf hot key broadcast-side
+    svc.execute(prog, env, skew_hints=hints)
+    # superset rebind: only moves rows to the broadcast path
+    svc.execute(prog, env, skew_hints={OPARTS: {"pid": [7, 11]}})
+    # shrinking rebind: the hot key floods the light bucket sized
+    # without it -> loud failure, not silent truncation
+    with pytest.raises(RuntimeError, match="re-warm"):
+        svc.execute(prog, env, skew_hints={OPARTS: {"pid": [424242]}})
+
+
+def test_service_hints_beyond_max_heavy_truncate(case):
+    """More hinted keys than the static MAX_HEAVY bound truncate
+    consistently with the compile-time decision instead of crashing."""
+    from repro.serve import QueryService
+    data, prog, sp, direct = case
+    mesh = device_mesh_1d(1)
+    svc = QueryService(H.INPUT_TYPES, catalog=CATALOG, mesh=mesh,
+                       dist_kwargs=dict(cap_factor=16.0),
+                       skew_partitions=8)
+    env = CG.columnar_shred_inputs(data, H.INPUT_TYPES)
+    many = list(range(1, SK.MAX_HEAVY + 12))
+    out = svc.execute(prog, env, skew_hints={OPARTS: {"pid": many}})
+    man = sp.manifests["Q"]
+    parts = {(): out[man.top], **{p: out[n]
+                                  for p, n in man.dicts.items()}}
+    assert I.bags_equal(direct, CG.parts_to_rows(
+        parts, H.running_example_query().ty))
+
+
+def test_fused_join_agg_unfuses_under_skew():
+    """A Gamma+ fused onto a qualifying join (FusedJoinAggP, the
+    push_order physical fusion) un-fuses into Gamma+ over SkewJoinP
+    when the probe statistics are skewed (placement beats fusion), and
+    the rewritten plan evaluates to the same result locally."""
+    from repro.columnar.table import FlatBag
+    from repro.core import plans as P
+    rng = np.random.RandomState(0)
+    n = 64
+    lrows = [{"k": 7 if rng.rand() < 0.5 else int(rng.randint(0, 8)),
+              "g": int(rng.randint(0, 3)), "v": float(rng.randint(1, 5))}
+             for _ in range(n)]
+    left = FlatBag.from_rows(lrows, {"k": "int", "g": "int", "v": "real"},
+                             capacity=n)
+    right = FlatBag.from_rows([{"k": i, "w": float(10 * i)}
+                               for i in range(8)],
+                              {"k": "int", "w": "real"}, capacity=8)
+    join = P.JoinP(P.ScanP("L", "l"), P.ScanP("R", "r"),
+                   ("l.k",), ("r.k",))
+    fused = P.push_order(P.SumAggP(join, keys=("l.g",), vals=("l.v",)))
+    assert isinstance(fused, P.FusedJoinAggP)
+    graph = P.build_program_graph([("Q", fused)], outputs=("Q",))
+    stats = {"L": SK.TableStats(rows=n, distinct={"k": 8},
+                                heavy={"k": [(7, n // 2)]})}
+    info = P.apply_skew_program(graph, stats, n_partitions=8)
+    (nd,) = graph.nodes
+    assert isinstance(nd.plan, P.SumAggP)       # un-fused
+    assert isinstance(nd.plan.child, P.SkewJoinP)
+    assert info["__hk0"][0] == "L" and info["__hk0"][1] == "k"
+    env = {"L": left, "R": right}
+    got = P.eval_plan(nd.plan, env)
+    want = {}
+    for r in lrows:
+        want[r["g"]] = want.get(r["g"], 0.0) + r["v"]
+    host = {int(g): float(v) for g, v, ok in
+            zip(np.asarray(got.col("l.g")), np.asarray(got.col("l.v")),
+                np.asarray(got.valid)) if ok}
+    assert host == want

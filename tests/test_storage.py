@@ -438,6 +438,70 @@ def test_zero_row_append_keeps_props(data, tmp_path):
     assert w.meta.parts["Part__F"].sorted_by == ("pid",)
 
 
+def test_resume_after_interrupted_append(data, tmp_path):
+    """Regression: a crash mid-append leaves chunk files of the aborted
+    batch on disk (the last one partial/corrupt) while the footer still
+    describes the previous state. ``resume=True`` must take its row
+    totals — and therefore the label bases of the next append — from
+    the FOOTER, never from the stray files, and re-appending must
+    overwrite the stale chunks: the final dataset is bit-for-bit the
+    uninterrupted stream."""
+    import os
+    cat = StorageCatalog(str(tmp_path))
+    orders = data["Ord"]
+    w = cat.writer("intr", INPUT_TYPES, chunk_rows=16)
+    w.append({"Ord": orders[:20], "Part": data["Part"]})
+    # simulate the interrupted second append: for every column of the
+    # Ord top part, the next chunk file landed (index == current chunk
+    # count) but the footer was never rewritten; one file is truncated
+    pm = w.meta.parts["Ord__F"]
+    idx = len(pm.chunks)
+    for col in pm.schema:
+        path = os.path.join(w.dir, "Ord__F", col, f"c{idx:05d}.npy")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        np.save(path, np.arange(13, dtype=np.int64))
+    with open(path, "r+b") as f:
+        f.truncate(40)                      # partial last chunk
+    # restarted process: resume and replay the remaining rows
+    w2 = cat.writer("intr", INPUT_TYPES, chunk_rows=16, resume=True)
+    assert w2.meta.parts["Ord__F"].rows == 20   # footer, not files
+    w2.append({"Ord": orders[20:]})
+    env_mem = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    env_disk = cat.open("intr", refresh=True).load_env()
+    for name, bag in env_mem.items():
+        for c in bag.data:
+            assert np.array_equal(np.asarray(bag.data[c]),
+                                  np.asarray(env_disk[name].data[c])), \
+                (name, c)
+
+
+def test_sketch_persists_and_resumes(data, tmp_path):
+    """The streaming heavy-key sketch rides the footer: totals count
+    every appended batch exactly once, survive resume, and feed
+    ``table_stats`` for the automatic skew pass."""
+    from repro.storage import table_stats
+    cat = StorageCatalog(str(tmp_path))
+    orders = data["Ord"]
+    w = cat.writer("sk", INPUT_TYPES, chunk_rows=16)
+    w.append({"Ord": orders[:20], "Part": data["Part"]})
+    w2 = cat.writer("sk", INPUT_TYPES, chunk_rows=16, resume=True)
+    w2.append({"Ord": orders[20:]})
+    ds = cat.open("sk", refresh=True)
+    st = table_stats(ds)
+    ts = st["Ord__D_oparts"]
+    assert ts.rows == ds.parts["Ord__D_oparts"].rows
+    from repro.core.skew import HeavyKeySketch
+    sk = HeavyKeySketch.from_json(
+        ds.parts["Ord__D_oparts"].meta.sketches["pid"])
+    assert sk.total == ts.rows          # streamed once, no double count
+    # note=7 on every row: the constant column is maximally heavy
+    sk_note = HeavyKeySketch.from_json(
+        ds.parts["Ord__D_oparts"].meta.sketches["note"])
+    assert dict(sk_note.heavy(0.5)) == {7: ts.rows}
+    # reals carry no sketch (not equi-join keys)
+    assert "qty" not in ds.parts["Ord__D_oparts"].meta.sketches
+
+
 def test_resume_rejects_conflicting_encoder(tmp_path):
     rows = [{"k": 1, "city": "lyon"}, {"k": 2, "city": "oslo"}]
     cat = StorageCatalog(str(tmp_path))
