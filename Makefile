@@ -4,7 +4,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-slow bench-quick bench serve-smoke storage-smoke \
-	skew-smoke ci
+	skew-smoke chaos-smoke ci
 
 # fast tier: everything except the @slow tests (multi-device
 # subprocesses, hypothesis sweeps) — those run in the second tier
@@ -33,10 +33,20 @@ test-slow:
 # measured partition imbalance + >=1.3x shuffled-row cut at high Zipf,
 # and zero warm retraces across two different heavy-key sets (both the
 # raw DistRunner rebind and the QueryService skew_hints path).
-ci: test test-slow bench-quick serve-smoke storage-smoke skew-smoke
+# chaos-smoke serves a request stream through the ServingRuntime under
+# the seeded fault schedule (DESIGN.md "Fault model and recovery") and
+# gates on: >=1 injection of every fault class, zero crashes, answers
+# bit-for-bit identical to the fault-free run for all non-shed
+# requests, and a simulated restart warm-replaying the persisted plan
+# manifest with zero retraces (codegen.TRACE_STATS).
+ci: test test-slow bench-quick serve-smoke storage-smoke skew-smoke \
+	chaos-smoke
 
 serve-smoke:
 	$(PY) -m benchmarks.serving --smoke
+
+chaos-smoke:
+	$(PY) -m benchmarks.serving --chaos
 
 storage-smoke:
 	$(PY) -m benchmarks.storage --smoke

@@ -193,11 +193,148 @@ def run(n_orders: int = 2000, invocations: int = 50,
             "retraces": retraces, "joins": joins}
 
 
+def run_chaos(n_orders: int = 300, seed: int = 0) -> dict:
+    """Chaos smoke (``make chaos-smoke``): serve a request stream under
+    the seeded fault schedule and gate on the three robustness
+    invariants — (1) every fault class injected at least once, (2) zero
+    requests escape as exceptions and every non-shed answer is
+    bit-for-bit the fault-free answer, (3) a simulated restart
+    warm-replays the persisted plan-cache manifest to zero retraces."""
+    import os
+    import tempfile
+
+    from repro.errors import FooterError
+    from repro.faults import FAULTS
+    from repro.serve import QueryRequest, ServingRuntime
+    from repro.serve.faults import arm_chaos_schedule, chaos_coverage
+    from repro.storage import DatasetWriter, StoredDataset
+
+    data = gen_data(n_orders, seed=seed)
+    ths = [float(t) for t in np.linspace(1.0, 19.0, 8)]
+
+    def stored_rows(svc, ds, outs, th):
+        return svc.unshred_stored(family(th), ds, outs, "Q")
+
+    with tempfile.TemporaryDirectory() as td:
+        DatasetWriter(td, "chaos", INPUT_TYPES, chunk_rows=64).write(data)
+        dsdir = os.path.join(td, "chaos")
+        manifest = os.path.join(td, "plans.json")
+
+        # ---- fault-free reference pass ------------------------------
+        FAULTS.reset()
+        ref_svc = QueryService(INPUT_TYPES, catalog=CATALOG)
+        ref_ds = StoredDataset(dsdir)
+        ref = {th: stored_rows(
+            ref_svc, ref_ds,
+            ref_svc.execute_stored(family(th), ref_ds), th)
+            for th in ths}
+        env = ref_svc.shred_inputs(data)
+        ref_local = {th: ref_svc.unshred(
+            family(th), env, ref_svc.execute(family(th), env), "Q")
+            for th in ths[:3]}
+
+        # ---- chaos pass ---------------------------------------------
+        arm_chaos_schedule(seed)
+        # fault class storage.footer: the first open hits the injected
+        # corrupt footer; recovery = surface the typed error to the
+        # caller and re-open (the server was never at risk)
+        try:
+            StoredDataset(dsdir)
+            raise AssertionError("injected footer corruption not hit")
+        except FooterError:
+            pass
+        ds = StoredDataset(dsdir)
+        svc = QueryService(INPUT_TYPES, catalog=CATALOG)
+        rt = ServingRuntime(svc, manifest_path=manifest, seed=seed,
+                            verify_reads=True)
+        responses = [rt.submit(QueryRequest(family(th), ds))
+                     for th in ths]
+        # distributed tier: injected exchange failure (retry) and
+        # inflated receive-load imbalance (degrade to the local twin)
+        from repro.exec.dist import device_mesh_1d
+        dsvc = QueryService(INPUT_TYPES, catalog=CATALOG,
+                            mesh=device_mesh_1d(1),
+                            dist_kwargs=dict(adaptive=True))
+        twin = QueryService(INPUT_TYPES, catalog=CATALOG)
+        rt_d = ServingRuntime(dsvc, local_fallback=twin, seed=seed)
+        responses_d = [rt_d.submit(QueryRequest(family(th), env))
+                       for th in ths[:3]]
+        cov = chaos_coverage()
+        FAULTS.reset()
+
+        # gate 1: every fault class injected at least once
+        missing = [c for c, n in cov.items() if n == 0]
+        assert not missing, f"chaos classes never injected: {missing}"
+        # gate 2: zero crashes — every submit returned a response and
+        # every non-shed answer matches the fault-free run bit-for-bit
+        assert len(responses) == len(ths) \
+            and len(responses_d) == len(ths[:3])
+        for th, r in zip(ths, responses):
+            assert r.ok, (th, r.error)
+            assert I.bags_equal(stored_rows(svc, ds, r.outputs, th),
+                                ref[th], float_digits=12), th
+        for th, r in zip(ths, responses_d):
+            assert r.ok, (th, r.error)
+            got = twin.unshred(family(th), env, r.outputs, "Q")
+            assert I.bags_equal(got, ref_local[th], float_digits=12), th
+        assert rt_d.stats["degraded_imbalance"] >= 1
+        for name, rtime in (("chaos_stored", rt), ("chaos_dist", rt_d)):
+            emit(name, 0.0,
+                 f"ok={rtime.stats['ok']};retried={rtime.stats['retried']};"
+                 f"shed={rtime.stats['shed_quota'] + rtime.stats['shed_queue'] + rtime.stats['shed_compile']};"
+                 f"degraded_no_skip={rtime.stats['degraded_no_skip']};"
+                 f"degraded_dist_local={rtime.stats['degraded_dist_local']};"
+                 f"degraded_imbalance={rtime.stats['degraded_imbalance']};"
+                 f"evictions={rtime.stats['injected_evictions']};"
+                 f"compiles={rtime.stats['compiles']}")
+        injected = ";".join(f"{site}:{kind}={n}"
+                            for (site, kind), n in sorted(cov.items()))
+        emit("chaos_injected", 0.0, injected)
+
+        # gate 3: restart + warm replay reaches zero-retrace steady
+        # state (the crash-recoverable plan cache)
+        svc2 = QueryService(INPUT_TYPES, catalog=CATALOG)
+        rt2 = ServingRuntime(svc2, manifest_path=manifest, seed=seed)
+        t0 = time.perf_counter()
+        replayed = rt2.warm_replay()
+        replay_s = time.perf_counter() - t0
+        assert replayed >= 1, "manifest recorded no family"
+        CG.reset_trace_stats()
+        ds2 = StoredDataset(dsdir)
+        for th in ths:
+            r = rt2.submit(QueryRequest(family(th), ds2))
+            assert r.ok, (th, r.error)
+            assert I.bags_equal(stored_rows(svc2, ds2, r.outputs, th),
+                                ref[th], float_digits=12), th
+        retraces = CG.TRACE_STATS.get("traces", 0)
+        assert retraces == 0, (
+            f"post-restart traffic retraced {retraces}x — warm replay "
+            f"did not reproduce the traced shapes")
+        emit("chaos_warm_replay", replay_s * 1e6,
+             f"replayed={replayed};post_restart_retraces={retraces}",
+             compile_ms=replay_s * 1e3)
+    print(f"# chaos smoke OK: {len(cov)} fault classes injected, "
+          f"{rt.stats['ok'] + rt_d.stats['ok']} requests served with "
+          f"bit-for-bit parity, restart replayed {replayed} "
+          f"family(ies) with 0 retraces")
+    return {"coverage": cov, "stats": rt.stats, "dist": rt_d.stats,
+            "replayed": replayed}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes + hard assertions (make ci)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault schedule + recovery gates "
+                         "(make chaos-smoke)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.chaos:
+        set_section("serving under injected faults (chaos smoke)")
+        run_chaos(seed=args.seed)
+        set_section(None)
+        return
     set_section("serving (plan-cache query service)")
     if args.smoke:
         run(n_orders=200, invocations=8, smoke=True)

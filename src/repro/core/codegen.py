@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.columnar.table import FlatBag
+from repro.errors import CompileError
+from repro.faults import FAULTS
 from repro.exec import ops as X
 from . import interpreter as I
 from . import nrc as N
@@ -235,6 +237,21 @@ def reset_trace_stats() -> None:
     TRACE_STATS.clear()
 
 
+def _compile_fault(what: str) -> None:
+    """``codegen.compile`` fault site, consulted at the top of both
+    compile entry points: ``fail`` models a failed compile (raises
+    transient ``CompileError``; clears on retry), ``delay`` a
+    cold-compile latency spike (sleeps ``arg`` seconds)."""
+    rule = FAULTS.hit("codegen.compile", what=what)
+    if rule is None:
+        return
+    if rule.kind == "fail":
+        raise CompileError(f"injected compile failure ({what})")
+    if rule.kind == "delay":
+        import time
+        time.sleep(float(rule.arg or 0.01))
+
+
 @dataclass
 class ProgramExecutable:
     """One jitted callable for a whole shredded program. Calling it with
@@ -283,6 +300,7 @@ def jit_program(cp: CompiledProgram,
     them as soon as their last consumer runs); ``donate_env=True``
     additionally donates the input environment's buffers (one-shot
     pipelines only — donated bags are unusable afterwards)."""
+    _compile_fault("jit_program")
     base = settings or ExecSettings()
     outputs = tuple(cp.outputs) or tuple(n for n, _ in cp.plans)
 
@@ -322,6 +340,7 @@ def compile_program_distributed(
     warm ``runner(env, params=new_bindings)`` rebinds new values with
     ZERO retracing, exactly like the local jit path (``TRACE_STATS``
     moves only on an actual retrace)."""
+    _compile_fault("dist")
     from repro.exec import dist as D
     outs = tuple(outputs) if outputs is not None \
         else (tuple(cp.outputs) or tuple(n for n, _ in cp.plans))

@@ -54,6 +54,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.columnar.table import FlatBag, concat_bags, concat_compact
 from repro.core import skew as SK
+from repro.errors import ExchangeError
+from repro.faults import FAULTS
 from . import ops as X
 from .hashing import mix64
 
@@ -150,6 +152,10 @@ class DistContext:
         buffer — one ``all_to_all`` total. Within each (sender, dest)
         block rows arrive contiguously in sender order; slots past the
         sender's count arrive zero with validity 0."""
+        rule = FAULTS.hit("dist.exchange", keys=tuple(key_cols))
+        if rule is not None and rule.kind == "fail":
+            raise ExchangeError(
+                f"injected exchange failure (keys={tuple(key_cols)})")
         key_cols = tuple(key_cols)
         if not self.packed:
             return self._exchange_legacy(bag, key_cols, keep, key)

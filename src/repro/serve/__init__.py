@@ -1,2 +1,5 @@
 from .engine import ServeEngine, Request  # noqa: F401
 from .query_service import QueryService, lift_program  # noqa: F401
+from .runtime import (PlanCacheManifest, QueryRequest,  # noqa: F401
+                      QueryResponse, ServingRuntime)
+from .faults import FAULTS, arm_chaos_schedule  # noqa: F401

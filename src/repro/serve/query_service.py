@@ -59,6 +59,7 @@ from repro.core import materialization as M
 from repro.core import nrc as N
 from repro.core.plans import ExecSettings
 from repro.core.unnesting import Catalog
+from repro.errors import CapacityOverflowError
 
 
 def lift_program(program: N.Program) -> Tuple[N.Program, list]:
@@ -136,6 +137,9 @@ class QueryService:
         self._cache: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
         self.stats = {"hits": 0, "misses": 0, "evictions": 0,
                       "batch_calls": 0}
+        # shuffle/overflow metrics of the most recent dist execute —
+        # the serving runtime reads receive-load imbalance off these
+        self.last_metrics: Optional[dict] = None
 
     # -- ingestion helper --------------------------------------------------
     def shred_inputs(self, inputs: Dict[str, list],
@@ -233,6 +237,24 @@ class QueryService:
         params.update(self._skew_binds(entry.cp, skew_hints))
         return entry, params, env_c
 
+    def is_warm(self, key: tuple) -> bool:
+        """True when ``key`` is cached (no stats / LRU side effects)."""
+        return key in self._cache
+
+    def evict(self, key: Optional[tuple] = None) -> int:
+        """Drop one cached entry (or all with ``key=None``); returns
+        the number evicted. The serving runtime uses this to re-warm a
+        family whose adaptive capacities went stale
+        (``CapacityOverflowError``) and to inject mid-flight evictions
+        in the chaos schedule."""
+        if key is None:
+            n = len(self._cache)
+            self._cache.clear()
+        else:
+            n = 1 if self._cache.pop(key, None) is not None else 0
+        self.stats["evictions"] += n
+        return n
+
     def _touch(self, key: tuple, entry: CacheEntry) -> None:
         self.stats["hits"] += 1
         entry.hits += 1
@@ -305,6 +327,7 @@ class QueryService:
             rp = entry.runner.params or {}
             bound = {k: v for k, v in params.items() if k in rp}
             out, metrics = entry.runner(env_c, params=bound)
+            self.last_metrics = metrics
             # a rebind that SHRINKS the warm heavy-key set can push a
             # hot key back through an exchange bucket the adaptive
             # warmup sized without it; the raw runner meters that as
@@ -316,7 +339,7 @@ class QueryService:
                 lost = metrics.get("overflow_rows", 0) \
                     + metrics.get("compact_dropped_rows", 0)
                 if lost:
-                    raise RuntimeError(
+                    raise CapacityOverflowError(
                         f"heavy-key rebind overflowed warm capacities "
                         f"({lost} rows dropped); the adaptive sizes "
                         f"were resolved for the warmup heavy-key set — "
@@ -393,7 +416,8 @@ class QueryService:
         return stats
 
     def _lookup_stored(self, program: N.Program, dataset,
-                       skew_hints: Optional[dict] = None
+                       skew_hints: Optional[dict] = None,
+                       no_skip: bool = False, verify: bool = False
                        ) -> Tuple[CacheEntry, Dict[str, object],
                                   Dict[str, FlatBag]]:
         from repro.storage import storage_requirements
@@ -424,12 +448,14 @@ class QueryService:
         params.update(self._skew_binds(entry.cp, skew_hints))
         env = dataset.load_env(
             columns={p: r.columns for p, r in entry.storage_req.items()},
-            preds={p: r.pred for p, r in entry.storage_req.items()},
-            params=params, capacities=entry.class_caps)
+            preds=None if no_skip else
+            {p: r.pred for p, r in entry.storage_req.items()},
+            params=params, capacities=entry.class_caps, verify=verify)
         return entry, params, env
 
     def execute_stored(self, program: N.Program, dataset,
-                       skew_hints: Optional[dict] = None
+                       skew_hints: Optional[dict] = None,
+                       no_skip: bool = False, verify: bool = False
                        ) -> Dict[str, FlatBag]:
         """Run one invocation against a persisted dataset
         (``storage.StoredDataset``). The warm path re-resolves the
@@ -443,9 +469,14 @@ class QueryService:
         heavy-key sketches plus ``skew_hints`` overrides and the
         heavy-key sets bind as runtime parameters — useful for
         inspecting/shaping plans destined for distributed serving, a
-        no-op for pure local throughput."""
-        entry, params, env = self._lookup_stored(program, dataset,
-                                                 skew_hints)
+        no-op for pure local throughput.
+
+        ``no_skip=True`` disables zone-map chunk skipping for this call
+        (the degraded re-scan after a chunk fault: capacities stay
+        pinned, so the full scan reuses the warm executable);
+        ``verify=True`` CRC-checks every loaded chunk."""
+        entry, params, env = self._lookup_stored(
+            program, dataset, skew_hints, no_skip=no_skip, verify=verify)
         return entry.exe(env, params)
 
     def unshred_stored(self, program: N.Program, dataset,

@@ -22,12 +22,15 @@ from __future__ import annotations
 
 import json
 import os
+import zlib
 from dataclasses import dataclass, field as dc_field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import nrc as N
+from repro.errors import FooterError
+from repro.faults import FAULTS
 
 FORMAT_VERSION = 1
 FOOTER = "footer.json"
@@ -66,7 +69,7 @@ def type_from_json(d: dict) -> N.Type:
                               for n, ft in d["fields"]))
     if k == "bag":
         return N.BagT(type_from_json(d["elem"]))
-    raise ValueError(f"type_from_json: {k!r}")
+    raise FooterError(f"type_from_json: unknown type tag {k!r}")
 
 
 def flat_part_schema(ty: N.BagT, path: tuple) -> Dict[str, str]:
@@ -132,10 +135,21 @@ def zone_stats(col: np.ndarray) -> dict:
             "distinct": int(np.unique(col).size)}
 
 
+def chunk_crc(col: np.ndarray) -> int:
+    """CRC32 over a chunk column's raw bytes — what ``StoredPart.load``
+    re-computes under ``verify=True`` to catch torn writes and bit rot
+    the row-count check cannot see."""
+    return zlib.crc32(np.ascontiguousarray(col).tobytes()) & 0xFFFFFFFF
+
+
 @dataclass
 class ChunkMeta:
     rows: int
     zones: Dict[str, dict]           # column -> zone_stats
+    # column -> CRC32 of the chunk file's array bytes. Optional for
+    # backward compatibility: footers written before the field verify
+    # nothing (empty dict), they do not fail to load.
+    crcs: Dict[str, int] = dc_field(default_factory=dict)
 
 
 @dataclass
@@ -160,7 +174,8 @@ class PartMeta:
     def to_json(self) -> dict:
         return {"name": self.name, "schema": self.schema,
                 "dtypes": self.dtypes,
-                "chunks": [{"rows": c.rows, "zones": c.zones}
+                "chunks": [{"rows": c.rows, "zones": c.zones,
+                            "crcs": c.crcs}
                            for c in self.chunks],
                 "sorted_by": list(self.sorted_by) if self.sorted_by
                 else None,
@@ -173,7 +188,10 @@ class PartMeta:
         return PartMeta(
             name=d["name"], schema=dict(d["schema"]),
             dtypes=dict(d["dtypes"]),
-            chunks=[ChunkMeta(c["rows"], c["zones"]) for c in d["chunks"]],
+            chunks=[ChunkMeta(c["rows"], c["zones"],
+                              {n: int(v) for n, v in
+                               c.get("crcs", {}).items()})
+                    for c in d["chunks"]],
             sorted_by=tuple(d["sorted_by"]) if d.get("sorted_by") else None,
             partitioning=tuple(d["partitioning"])
             if d.get("partitioning") else None,
@@ -198,8 +216,10 @@ class DatasetMeta:
 
     @staticmethod
     def from_json(d: dict) -> "DatasetMeta":
-        assert d["version"] == FORMAT_VERSION, (
-            f"storage format version {d['version']} != {FORMAT_VERSION}")
+        if d.get("version") != FORMAT_VERSION:
+            raise FooterError(
+                f"storage format version {d.get('version')} != "
+                f"{FORMAT_VERSION}")
         types = {n: type_from_json(t) for n, t in d["input_types"].items()}
         return DatasetMeta(
             name=d["name"], chunk_rows=int(d["chunk_rows"]),
@@ -216,8 +236,27 @@ def write_footer(dirpath: str, meta: DatasetMeta) -> None:
 
 
 def read_footer(dirpath: str) -> DatasetMeta:
-    with open(os.path.join(dirpath, FOOTER)) as f:
-        return DatasetMeta.from_json(json.load(f))
+    """Parse the dataset footer. Any failure on this edge — file
+    missing, invalid JSON, structural surprises — surfaces as a typed
+    ``FooterError`` so a serving layer can fail the one query (or
+    dataset) instead of the process. ``storage.footer`` is a fault
+    site (kind ``corrupt``)."""
+    if FAULTS.enabled and FAULTS.hit("storage.footer", dir=dirpath):
+        raise FooterError(f"injected footer corruption: {dirpath}")
+    path = os.path.join(dirpath, FOOTER)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FooterError:
+        raise
+    except (OSError, ValueError) as e:
+        raise FooterError(f"unreadable footer {path}: {e}") from e
+    try:
+        return DatasetMeta.from_json(doc)
+    except FooterError:
+        raise
+    except (KeyError, TypeError, ValueError) as e:
+        raise FooterError(f"malformed footer {path}: {e!r}") from e
 
 
 def chunk_path(dirpath: str, part: str, col: str, idx: int) -> str:

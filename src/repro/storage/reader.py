@@ -23,9 +23,11 @@ import numpy as np
 from repro.columnar.props import PhysicalProps
 from repro.columnar.table import FlatBag, StringEncoder
 from repro.core import nrc as N
+from repro.errors import ChunkCorruptionError, MissingChunkError
+from repro.faults import FAULTS
 
-from .format import (DatasetMeta, PartMeta, chunk_may_match, chunk_path,
-                     dir_bytes, read_footer)
+from .format import (DatasetMeta, PartMeta, chunk_crc, chunk_may_match,
+                     chunk_path, dir_bytes, read_footer)
 
 STORAGE_STATS: Dict[str, int] = {}
 """Host-side scan counters: ``chunks_read`` / ``chunks_skipped`` (zone
@@ -105,13 +107,55 @@ class StoredPart:
                 if chunk_may_match(pred, c.zones, self.meta.schema, params)]
 
     # -- loading -----------------------------------------------------------
+    def _load_chunk(self, col: str, i: int, verify: bool) -> np.ndarray:
+        """np-load one chunk with the ``storage.chunk`` fault site and
+        integrity checks. A *torn* chunk (fewer rows on disk than the
+        footer promises) is caught unconditionally by the row-count
+        check; silent *bit corruption* keeps the row count and is only
+        caught by the CRC under ``verify=True``."""
+        meta = self.meta
+        path = chunk_path(self.dirpath, meta.name, col, i)
+        rule = FAULTS.hit("storage.chunk", part=meta.name, col=col, chunk=i)
+        if rule is not None and rule.kind == "missing":
+            raise MissingChunkError(
+                f"injected missing chunk: {meta.name}.{col} chunk {i}")
+        try:
+            a = np.load(path, mmap_mode="r")
+        except FileNotFoundError as e:
+            raise MissingChunkError(
+                f"{meta.name}.{col} chunk {i}: {path} does not exist"
+            ) from e
+        except (OSError, ValueError) as e:
+            raise ChunkCorruptionError(
+                f"{meta.name}.{col} chunk {i}: unreadable npy "
+                f"({e})") from e
+        if rule is not None and rule.kind == "torn":
+            frac = float(rule.arg) if rule.arg is not None else 0.5
+            a = np.asarray(a)[:int(a.shape[0] * frac)]
+        elif rule is not None and rule.kind == "corrupt" and a.size:
+            a = np.array(a)         # writable copy of the mmap
+            a.view(np.uint8).flat[0] ^= 0xFF
+        if a.shape[0] != meta.chunks[i].rows:
+            raise ChunkCorruptionError(
+                f"{meta.name}.{col} chunk {i}: {a.shape[0]} rows on "
+                f"disk != {meta.chunks[i].rows} in footer (torn write?)")
+        if verify:
+            want = meta.chunks[i].crcs.get(col)
+            if want is not None and chunk_crc(np.asarray(a)) != want:
+                raise ChunkCorruptionError(
+                    f"{meta.name}.{col} chunk {i}: checksum mismatch")
+        return a
+
     def load(self, columns: Optional[Sequence[str]] = None,
              chunks: Optional[Sequence[int]] = None,
-             capacity: Optional[int] = None) -> FlatBag:
+             capacity: Optional[int] = None,
+             verify: bool = False) -> FlatBag:
         """Read ``columns`` (default all) of ``chunks`` (default all)
         into a FlatBag of ``capacity`` (default: exactly the loaded
         rows; larger capacities pad with invalid rows so one compiled
-        plan serves every chunk selection of the part)."""
+        plan serves every chunk selection of the part). ``verify=True``
+        checks each chunk against its footer CRC32 (chunks persisted
+        before checksums existed are skipped)."""
         meta = self.meta
         if columns is None:
             cols = sorted(meta.schema)
@@ -137,11 +181,7 @@ class StoredPart:
             buf = np.zeros(cap, dtype=dtype)
             off = 0
             for i in sel:
-                a = np.load(chunk_path(self.dirpath, meta.name, col, i),
-                            mmap_mode="r")
-                assert a.shape[0] == meta.chunks[i].rows, (
-                    f"{meta.name}.{col} chunk {i}: {a.shape[0]} rows on "
-                    f"disk != {meta.chunks[i].rows} in footer")
+                a = self._load_chunk(col, i, verify)
                 buf[off:off + a.shape[0]] = a
                 _count("bytes_read", a.shape[0] * dtype.itemsize)
                 off += a.shape[0]
@@ -215,7 +255,8 @@ class StoredDataset:
                  columns: Optional[Dict[str, Optional[set]]] = None,
                  preds: Optional[Dict[str, Optional[N.Expr]]] = None,
                  params: Optional[dict] = None,
-                 capacities: Optional[Dict[str, int]] = None
+                 capacities: Optional[Dict[str, int]] = None,
+                 verify: bool = False
                  ) -> Dict[str, FlatBag]:
         """Materialize parts as an execution environment. ``columns``
         restricts parts AND their loaded columns (None value = all
@@ -234,5 +275,5 @@ class StoredDataset:
             cap = (capacities or {}).get(name)
             env[name] = part.load(
                 columns=sorted(cols) if cols is not None else None,
-                chunks=sel, capacity=cap)
+                chunks=sel, capacity=cap, verify=verify)
         return env

@@ -30,9 +30,10 @@ from repro.core import nrc as N
 from repro.core.materialization import mat_input_name
 from repro.core.skew import HeavyKeySketch
 
-from .format import (ChunkMeta, DatasetMeta, PartMeta, chunk_path,
-                     dir_bytes, flat_part_schema, label_domains,
-                     read_footer, write_footer, zone_stats)
+from .format import (ChunkMeta, DatasetMeta, PartMeta, chunk_crc,
+                     chunk_path, dir_bytes, flat_part_schema,
+                     label_domains, read_footer, write_footer,
+                     zone_stats)
 
 
 def _all_paths(ty: N.BagT, path: tuple = ()) -> List[tuple]:
@@ -100,7 +101,20 @@ class DatasetWriter:
                                 for c, k in schema.items()})
         # streaming heavy-key sketches, one per (part, integer-kind
         # column) — restored from the footer on resume so a restarted
-        # process keeps counting where the previous one stopped
+        # process keeps counting where the previous one stopped. A
+        # sketch whose stream total exceeds the part's footer rows is
+        # TORN state: a prior incarnation counted a batch whose chunks
+        # never made the footer (crash mid-append), and the overcount
+        # cannot be subtracted back out. Quarantine it — skew decisions
+        # must not read statistics the data does not back.
+        self.quarantined_sketches: Dict[str, Dict[str, dict]] = {}
+        if resume:
+            for part, pm in self.meta.parts.items():
+                stale = {col for col, sj in pm.sketches.items()
+                         if int(sj.get("total", 0)) > pm.rows}
+                if stale:
+                    self.quarantined_sketches[part] = {
+                        col: pm.sketches.pop(col) for col in sorted(stale)}
         self._sketches: Dict[str, Dict[str, HeavyKeySketch]] = {
             part: {col: HeavyKeySketch.from_json(sj)
                    for col, sj in pm.sketches.items()}
@@ -117,17 +131,38 @@ class DatasetWriter:
 
     # -- streaming ingest --------------------------------------------------
     def append(self, inputs: Dict[str, list]) -> "DatasetWriter":
-        """Shred and append one batch of nested rows per input root."""
+        """Shred and append one batch of nested rows per input root.
+
+        In-memory state is transactional per batch: if any part's
+        append raises (disk full, injected fault...), the writer's
+        sketches and chunk metadata roll back to the pre-batch
+        snapshot before re-raising — a caught failure followed by a
+        later successful flush must not persist sketch counters ahead
+        of the footer's rows (the torn state ``resume`` quarantines)."""
         env = CG.columnar_shred_inputs(
             inputs, {n: self.meta.input_types[n] for n in inputs},
             encoders=self.encoders)
         # label bases are the PRE-batch row totals: compute them all
         # before any part of the batch lands
         bases = {part: pm.rows for part, pm in self.meta.parts.items()}
-        for part, bag in env.items():
-            offsets = {col: bases[parent] for col, parent
-                       in self._domain_parent[part].items()}
-            self._append_part(part, bag, label_offsets=offsets)
+        snap_sketches = {part: {col: HeavyKeySketch.from_json(s.to_json())
+                                for col, s in sk.items()}
+                         for part, sk in self._sketches.items()}
+        snap_chunks = {part: list(pm.chunks)
+                       for part, pm in self.meta.parts.items()}
+        snap_props = {part: (pm.sorted_by, pm.partitioning)
+                      for part, pm in self.meta.parts.items()}
+        try:
+            for part, bag in env.items():
+                offsets = {col: bases[parent] for col, parent
+                           in self._domain_parent[part].items()}
+                self._append_part(part, bag, label_offsets=offsets)
+        except BaseException:
+            self._sketches = snap_sketches
+            for part, pm in self.meta.parts.items():
+                pm.chunks = snap_chunks[part]
+                pm.sorted_by, pm.partitioning = snap_props[part]
+            raise
         self._flush()
         return self
 
@@ -198,13 +233,16 @@ class DatasetWriter:
             stop = min(start + step, n)
             idx = len(pm.chunks)
             zones = {}
+            crcs = {}
             for col, a in host.items():
                 piece = a[start:stop]
                 path = chunk_path(self.dir, part, col, idx)
                 os.makedirs(os.path.dirname(path), exist_ok=True)
                 np.save(path, piece)
                 zones[col] = zone_stats(piece)
-            pm.chunks.append(ChunkMeta(rows=stop - start, zones=zones))
+                crcs[col] = chunk_crc(piece)
+            pm.chunks.append(
+                ChunkMeta(rows=stop - start, zones=zones, crcs=crcs))
 
     def _flush(self) -> None:
         self.meta.encoders = {c: list(e.rev)

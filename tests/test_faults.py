@@ -1,0 +1,419 @@
+"""Fault-injection registry, typed-error policy, and the serving
+runtime's recovery ladder (DESIGN.md "Fault model and recovery").
+
+Fast tier: deterministic admission / deadline / retry / breaker /
+manifest machinery on a virtual clock (no real sleeping), plus one
+compiled family per service so each recovery rung is exercised by an
+injected fault end to end.
+
+Slow tier: a hypothesis differential property extending the PR 5
+harness — for generated query specs, the answer served THROUGH a
+recovery path (retry-after-transient, skip-disabled re-scan,
+dist→single-device fallback) is bit-for-bit the answer of the
+fault-free run."""
+
+import os
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+    sys.modules["hypothesis"] = _hypothesis_shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies
+
+from hypothesis import given, settings
+from hypothesis import strategies as st  # noqa: F401
+
+import test_differential as TD
+
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import nrc as N
+from repro.errors import (AdmissionError, CapacityOverflowError,
+                          ChunkCorruptionError, CircuitOpenError,
+                          CompileError, DeadlineExceeded, ExchangeError,
+                          FooterError, MissingChunkError, ReproError,
+                          ShedError, StorageError)
+from repro.faults import FAULTS, FaultRegistry
+from repro.serve import (QueryRequest, QueryService, ServingRuntime)
+from repro.serve.faults import CHAOS_CLASSES, arm_chaos_schedule
+from repro.storage import StorageCatalog
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    FAULTS.reset()
+    yield
+    FAULTS.reset()
+
+
+class VirtualClock:
+    """Deterministic time for the runtime: ``sleep`` advances ``now``."""
+
+    def __init__(self):
+        self.t = 0.0
+        self.slept = []
+
+    def now(self):
+        return self.t
+
+    def sleep(self, s):
+        self.slept.append(s)
+        self.t += s
+
+
+def make_runtime(svc, **kw):
+    vc = VirtualClock()
+    rt = ServingRuntime(svc, clock=vc.now, sleep=vc.sleep, seed=7, **kw)
+    return rt, vc
+
+
+SPEC = dict(seed=5, n_orders=8, n_parts=5, zipf=0.0,
+            shape="flat_agg", sel="qty_ge", selc=2)
+
+
+def prog_for(spec):
+    return N.Program([N.Assignment("Q", TD.build_query(spec))])
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One compiled family on one local service (module-scoped so the
+    fast tests share a single XLA compile)."""
+    svc = QueryService(TD.TYPES, catalog=TD.CATALOG)
+    env = svc.shred_inputs(TD.gen_inputs(SPEC))
+    return svc, env
+
+
+# ---------------------------------------------------------------------------
+# typed errors
+# ---------------------------------------------------------------------------
+
+def test_error_hierarchy_and_transience():
+    for cls in (StorageError, FooterError, ChunkCorruptionError,
+                MissingChunkError, CompileError, ExchangeError,
+                CapacityOverflowError, AdmissionError, ShedError,
+                CircuitOpenError, DeadlineExceeded):
+        assert issubclass(cls, ReproError)
+    assert CompileError.transient and ExchangeError.transient \
+        and CapacityOverflowError.transient
+    assert not StorageError.transient and not ShedError.transient
+    assert issubclass(ShedError, AdmissionError)
+    assert issubclass(ChunkCorruptionError, StorageError)
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+def test_registry_windows_match_and_determinism():
+    reg = FaultRegistry(seed=3)
+    reg.arm("s", "boom", first=2, count=2, part="A")
+    fired = [bool(reg.hit("s", part=p))
+             for p in ("A", "A", "A", "B", "A", "A")]
+    # the window is call indices 2..3 of the SITE (call order is the
+    # clock); ``match`` filters within it, it does not extend it
+    assert fired == [False, False, True, False, False, False]
+    assert reg.stats == {"s:boom": 1}
+    # a probabilistic schedule replays identically under one seed
+    seqs = []
+    for _ in range(2):
+        reg = FaultRegistry(seed=11)
+        reg.arm("s", "maybe", first=0, count=-1, p=0.4)
+        seqs.append([bool(reg.hit("s")) for _ in range(30)])
+    assert seqs[0] == seqs[1] and 0 < sum(seqs[0]) < 30
+    # disarmed registry is inert and cheap
+    reg.disarm()
+    assert not reg.enabled
+
+
+def test_chaos_schedule_arms_every_class():
+    arm_chaos_schedule(seed=1)
+    assert {(r.site, r.kind) for r in FAULTS.rules} == set(CHAOS_CLASSES)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_quota_sheds_and_refills(served):
+    svc, env = served
+    rt, vc = make_runtime(svc, tenant_rate=1.0, tenant_burst=2.0)
+    reqs = [QueryRequest(prog_for(SPEC), env) for _ in range(3)]
+    rs = [rt.submit(r) for r in reqs]
+    assert [r.ok for r in rs] == [True, True, False]
+    assert rs[2].shed and isinstance(rs[2].error, ShedError)
+    assert rt.stats["shed_quota"] == 1
+    vc.t += 1.0                          # one token refills
+    assert rt.submit(QueryRequest(prog_for(SPEC), env)).ok
+    # tenants are isolated: another tenant has its own bucket
+    assert rt.submit(QueryRequest(prog_for(SPEC), env, tenant="b")).ok
+
+
+def test_queue_depth_sheds_batch_tail(served):
+    svc, env = served
+    rt, _ = make_runtime(svc, max_queue=2)
+    rs = rt.submit_many(
+        [QueryRequest(prog_for(SPEC), env) for _ in range(4)])
+    assert [r.ok for r in rs] == [True, True, False, False]
+    assert all(r.shed for r in rs[2:])
+    assert rt.stats["shed_queue"] == 2
+
+
+def test_cold_compile_budget_sheds_new_families(served):
+    svc, env = served                      # SPEC family already warm
+    rt, _ = make_runtime(svc, compile_budget=0)
+    assert rt.submit(QueryRequest(prog_for(SPEC), env)).ok   # warm: fine
+    cold = dict(SPEC, shape="nested_map")
+    r = rt.submit(QueryRequest(prog_for(cold), env))
+    assert not r.ok and r.shed and isinstance(r.error, ShedError)
+    assert rt.stats["shed_compile"] == 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines, retries, breaker
+# ---------------------------------------------------------------------------
+
+def test_retry_clears_transient_compile_fault(served):
+    svc, env = served
+    svc.evict()                           # force a cold compile
+    rt, vc = make_runtime(svc)
+    FAULTS.arm("codegen.compile", "fail", first=0, count=1)
+    r = rt.submit(QueryRequest(prog_for(SPEC), env))
+    assert r.ok and r.retries == 1
+    assert FAULTS.stats == {"codegen.compile:fail": 1}
+    assert len(vc.slept) == 1             # one backoff sleep happened
+
+
+def test_backoff_grows_exponentially_with_jitter(served):
+    svc, env = served
+    svc.evict()
+    rt, vc = make_runtime(svc, max_retries=3, backoff_base=0.01,
+                          backoff_cap=10.0)
+    FAULTS.arm("codegen.compile", "fail", first=0, count=3)
+    r = rt.submit(QueryRequest(prog_for(SPEC), env))
+    assert r.ok and r.retries == 3
+    s = vc.slept
+    assert len(s) == 3
+    # jittered into [0.5, 1.0] x base*2^(k-1): strictly growing windows
+    for k, d in enumerate(s, start=1):
+        lo, hi = 0.005 * 2 ** (k - 1), 0.01 * 2 ** (k - 1)
+        assert lo <= d <= hi, (k, d)
+
+
+def test_deadline_bounds_retries(served):
+    svc, env = served
+    svc.evict()
+    rt, vc = make_runtime(svc, max_retries=50, backoff_base=0.1,
+                          backoff_cap=0.1)
+    FAULTS.arm("codegen.compile", "fail", first=0, count=-1)
+    r = rt.submit(QueryRequest(prog_for(SPEC), env, deadline=0.25))
+    assert not r.ok and isinstance(r.error, DeadlineExceeded)
+    assert rt.stats["deadline_exceeded"] == 1
+    assert vc.t <= 0.25 + 1e-9            # sleeps were deadline-clamped
+
+
+def test_circuit_breaker_opens_and_probes(tmp_path, served):
+    svc, env = served
+    rt, vc = make_runtime(svc, max_retries=0, breaker_threshold=2,
+                          breaker_cooldown=5.0)
+    svc.evict()
+    FAULTS.arm("codegen.compile", "fail", first=0, count=-1)
+    for _ in range(2):                    # trip the breaker
+        assert not rt.submit(QueryRequest(prog_for(SPEC), env)).ok
+    r = rt.submit(QueryRequest(prog_for(SPEC), env))
+    assert r.shed and isinstance(r.error, CircuitOpenError)
+    assert rt.stats["circuit_open"] == 1
+    # cooldown elapses; the fault is gone; the half-open probe closes it
+    FAULTS.reset()
+    vc.t += 5.0
+    assert rt.submit(QueryRequest(prog_for(SPEC), env)).ok
+    assert rt.submit(QueryRequest(prog_for(SPEC), env)).ok
+
+
+# ---------------------------------------------------------------------------
+# degradation: eviction mid-flight, stored re-scan
+# ---------------------------------------------------------------------------
+
+def test_injected_eviction_recompiles_transparently(served):
+    svc, env = served
+    rt, _ = make_runtime(svc)
+    assert rt.submit(QueryRequest(prog_for(SPEC), env)).ok   # warm it
+    miss0 = svc.stats["misses"]
+    FAULTS.arm("serve.cache_evict", "evict", first=0, count=1)
+    r = rt.submit(QueryRequest(prog_for(SPEC), env))
+    assert r.ok and r.retries == 0
+    assert rt.stats["injected_evictions"] == 1
+    assert svc.stats["misses"] == miss0 + 1   # transparent recompile
+
+
+def test_stored_chunk_fault_rescans_without_skipping(tmp_path):
+    svc = QueryService(TD.TYPES, catalog=TD.CATALOG)
+    cat = StorageCatalog(str(tmp_path))
+    inputs = TD.gen_inputs(SPEC)
+    cat.writer("d", TD.TYPES, chunk_rows=8).append(inputs)
+    ds = cat.open("d")
+    rt, _ = make_runtime(svc, verify_reads=True)
+    ref = rt.submit(QueryRequest(prog_for(SPEC), ds))
+    assert ref.ok
+    FAULTS.arm("storage.chunk", "torn", first=0, count=1, arg=0.5)
+    r = rt.submit(QueryRequest(prog_for(SPEC), ds))
+    assert r.ok and "no_skip_rescan" in r.degraded
+    assert rt.stats["degraded_no_skip"] == 1
+    rows = svc.unshred_stored(prog_for(SPEC), ds, r.outputs, "Q")
+    rows_ref = svc.unshred_stored(prog_for(SPEC), ds, ref.outputs, "Q")
+    assert TD.equal(rows, rows_ref)
+    # a PERSISTENT chunk fault fails the query, never the server
+    FAULTS.reset()
+    FAULTS.arm("storage.chunk", "missing", first=0, count=-1)
+    r2 = rt.submit(QueryRequest(prog_for(SPEC), ds))
+    assert not r2.ok and isinstance(r2.error, MissingChunkError)
+
+
+# ---------------------------------------------------------------------------
+# crash-recoverable plan cache
+# ---------------------------------------------------------------------------
+
+def test_manifest_warm_replay_zero_retrace(tmp_path, served):
+    svc, env = served
+    man = str(tmp_path / "plans" / "manifest.json")
+    rt, _ = make_runtime(svc, manifest_path=man)
+    svc.evict()
+    assert rt.submit(QueryRequest(prog_for(SPEC), env)).ok
+    assert len(rt.manifest.entries) == 1
+    # "restart": fresh service + runtime reading the same manifest
+    svc2 = QueryService(TD.TYPES, catalog=TD.CATALOG)
+    rt2, _ = make_runtime(svc2, manifest_path=man)
+    assert rt2.warm_replay() == 1
+    CG.reset_trace_stats()
+    r = rt2.submit(QueryRequest(prog_for(SPEC), env))
+    assert r.ok and CG.TRACE_STATS.get("traces", 0) == 0
+    # replay is also parameter-generic: a different constant binding of
+    # the same family stays zero-retrace
+    r2 = rt2.submit(QueryRequest(prog_for(dict(SPEC, selc=3)), env))
+    assert r2.ok and CG.TRACE_STATS.get("traces", 0) == 0
+    rows = svc2.unshred(prog_for(SPEC), env, r.outputs, "Q")
+    direct = I.eval_expr(TD.build_query(SPEC), TD.gen_inputs(SPEC))
+    assert TD.equal(rows, direct)
+
+
+def test_manifest_corruption_only_costs_cold_compiles(tmp_path, served):
+    svc, env = served
+    man = str(tmp_path / "manifest.json")
+    with open(man, "w") as f:
+        f.write("{torn")
+    rt, _ = make_runtime(svc, manifest_path=man)
+    assert rt.manifest.entries == {}
+    assert rt.warm_replay() == 0
+    assert rt.submit(QueryRequest(prog_for(SPEC), env)).ok
+
+
+# ---------------------------------------------------------------------------
+# batching
+# ---------------------------------------------------------------------------
+
+def test_submit_many_coalesces_one_family(served):
+    svc, env = served
+    rt, _ = make_runtime(svc)
+    specs = [dict(SPEC, selc=c) for c in (1, 2, 3)]
+    rs = rt.submit_many([QueryRequest(prog_for(s), env) for s in specs])
+    assert all(r.ok for r in rs)
+    assert rt.stats["batches"] == 1 and rt.stats["coalesced"] == 3
+    for s, r in zip(specs, rs):
+        rows = svc.unshred(prog_for(s), env, r.outputs, "Q")
+        direct = I.eval_expr(TD.build_query(s), TD.gen_inputs(SPEC))
+        assert TD.equal(rows, direct), s
+
+
+def test_submit_never_raises(served):
+    svc, env = served
+    rt, _ = make_runtime(svc)
+    bad = N.Program([N.Assignment("Q", N.Var("NoSuchInput",
+                                             TD.ORD_T))])
+    r = rt.submit(QueryRequest(bad, env))
+    assert not r.ok and r.error is not None
+
+
+# ---------------------------------------------------------------------------
+# slow tier: hypothesis parity through every recovery path
+# ---------------------------------------------------------------------------
+
+def _runtime_stored(spec, tmpdir, **rt_kw):
+    svc = QueryService(TD.TYPES, catalog=TD.CATALOG)
+    cat = StorageCatalog(tmpdir)
+    cat.writer("d", TD.TYPES, chunk_rows=8).append(TD.gen_inputs(spec))
+    ds = cat.open("d")
+    rt, _ = make_runtime(svc, **rt_kw)
+    return rt, svc, ds
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(TD.spec_st())
+def test_recovery_paths_bit_for_bit(spec):
+    """Extends the PR 5 differential harness: the oracle answer, the
+    answer after retry-on-transient-compile-fault, and the answer
+    through the skip-disabled re-scan are all bit-for-bit equal."""
+    FAULTS.reset()
+    prog = N.Program([N.Assignment("Q", TD.build_query(spec))])
+    inputs = TD.gen_inputs(spec)
+    direct = I.eval_expr(TD.build_query(spec), inputs)
+    with tempfile.TemporaryDirectory() as td:
+        rt, svc, ds = _runtime_stored(spec, td, verify_reads=True)
+        # path 1: retry after a transient compile fault (cold family)
+        FAULTS.reset(0)
+        FAULTS.arm("codegen.compile", "fail", first=0, count=1)
+        r1 = rt.submit(QueryRequest(prog, ds))
+        assert r1.ok and r1.retries == 1, (spec, r1.error)
+        assert TD.equal(direct,
+                        svc.unshred_stored(prog, ds, r1.outputs, "Q"))
+        # path 2: torn chunk -> skip-disabled re-scan (warm family)
+        FAULTS.reset(0)
+        FAULTS.arm("storage.chunk", "torn", first=0, count=1, arg=0.5)
+        r2 = rt.submit(QueryRequest(prog, ds))
+        assert r2.ok and "no_skip_rescan" in r2.degraded, spec
+        assert TD.equal(direct,
+                        svc.unshred_stored(prog, ds, r2.outputs, "Q"))
+        # path 3: mid-flight eviction -> transparent recompile
+        FAULTS.reset(0)
+        FAULTS.arm("serve.cache_evict", "evict", first=0, count=1)
+        r3 = rt.submit(QueryRequest(prog, ds))
+        assert r3.ok, spec
+        assert TD.equal(direct,
+                        svc.unshred_stored(prog, ds, r3.outputs, "Q"))
+    FAULTS.reset()
+
+
+@pytest.mark.slow
+def test_dist_fallback_bit_for_bit():
+    """Exchange failures on the distributed path degrade to the
+    single-device twin with a bit-for-bit identical answer."""
+    from repro.exec.dist import device_mesh_1d
+    rng = np.random.RandomState(20260807)
+    mesh = device_mesh_1d(1)
+    for _ in range(2):
+        spec = TD.random_spec(rng)
+        prog = N.Program([N.Assignment("Q", TD.build_query(spec))])
+        inputs = TD.gen_inputs(spec)
+        direct = I.eval_expr(TD.build_query(spec), inputs)
+        dsvc = QueryService(TD.TYPES, catalog=TD.CATALOG, mesh=mesh,
+                            dist_kwargs=dict(adaptive=True))
+        lsvc = QueryService(TD.TYPES, catalog=TD.CATALOG)
+        env = dsvc.shred_inputs(inputs)
+        vc = VirtualClock()
+        rt = ServingRuntime(dsvc, local_fallback=lsvc, clock=vc.now,
+                            sleep=vc.sleep, seed=1)
+        FAULTS.reset(0)
+        FAULTS.arm("dist.exchange", "fail", first=0, count=-1)
+        r = rt.submit(QueryRequest(prog, env))
+        FAULTS.reset()
+        assert r.ok and "dist_to_local" in r.degraded, (spec, r.error)
+        assert rt.stats["degraded_dist_local"] == 1
+        assert TD.equal(direct,
+                        lsvc.unshred(prog, env, r.outputs, "Q")), spec

@@ -224,8 +224,10 @@ def test_service_shrinking_rebind_fails_loudly(case):
     # superset rebind: only moves rows to the broadcast path
     svc.execute(prog, env, skew_hints={OPARTS: {"pid": [7, 11]}})
     # shrinking rebind: the hot key floods the light bucket sized
-    # without it -> loud failure, not silent truncation
-    with pytest.raises(RuntimeError, match="re-warm"):
+    # without it -> loud typed failure (the serving runtime's cue to
+    # evict + re-warm), not silent truncation
+    from repro.errors import CapacityOverflowError
+    with pytest.raises(CapacityOverflowError, match="re-warm"):
         svc.execute(prog, env, skew_hints={OPARTS: {"pid": [424242]}})
 
 

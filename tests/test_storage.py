@@ -586,3 +586,159 @@ def test_props_persist_through_write_parts(data, tmp_path):
     pruned = part.load(columns=["pname"])
     assert pruned.props.sorted_by is None
     assert pruned.props.partitioning is None
+
+
+# ---------------------------------------------------------------------------
+# fault model: checksums, typed errors, torn-append recovery (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_chunk_crc_detects_silent_corruption(data, tmp_path):
+    """A bit flip that keeps the row count is invisible to the plain
+    load but caught by ``verify=True`` via the footer CRC32."""
+    import os
+    from repro.errors import ChunkCorruptionError
+    cat = StorageCatalog(str(tmp_path))
+    ds = cat.write("crc", data, INPUT_TYPES, chunk_rows=16)
+    part = ds.parts["Part__F"]
+    assert all("pid" in c.crcs for c in part.meta.chunks)
+    path = os.path.join(ds.dir, "Part__F", "pid", "c00000.npy")
+    with open(path, "r+b") as f:        # flip one payload byte
+        f.seek(-1, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+    part.load()                         # row counts still agree
+    with pytest.raises(ChunkCorruptionError):
+        part.load(verify=True)
+
+
+def test_footer_without_crcs_still_loads(data, tmp_path):
+    """Backward compatibility: footers written before checksums exist
+    load and even pass ``verify=True`` (nothing to check against)."""
+    import json
+    import os
+    cat = StorageCatalog(str(tmp_path))
+    ds = cat.write("old", data, INPUT_TYPES, chunk_rows=16)
+    fpath = os.path.join(ds.dir, "footer.json")
+    with open(fpath) as f:
+        doc = json.load(f)
+    for pm in doc["parts"].values():
+        for c in pm["chunks"]:
+            c.pop("crcs", None)
+    with open(fpath, "w") as f:
+        json.dump(doc, f)
+    ds2 = cat.open("old", refresh=True)
+    assert not ds2.parts["Part__F"].meta.chunks[0].crcs
+    ds2.parts["Part__F"].load(verify=True)      # no CRCs -> no check
+
+
+def test_footer_errors_are_typed(tmp_path):
+    from repro.errors import FooterError
+    from repro.storage import StoredDataset
+    with pytest.raises(FooterError):
+        StoredDataset(str(tmp_path / "no_such_dataset"))
+    d = tmp_path / "broken"
+    d.mkdir()
+    (d / "footer.json").write_text("{not json")
+    with pytest.raises(FooterError):
+        StoredDataset(str(d))
+
+
+def test_injected_chunk_faults_raise_typed_errors(data, tmp_path):
+    from repro.errors import ChunkCorruptionError, MissingChunkError
+    from repro.faults import FAULTS
+    cat = StorageCatalog(str(tmp_path))
+    ds = cat.write("fi", data, INPUT_TYPES, chunk_rows=16)
+    part = ds.parts["Part__F"]
+    try:
+        FAULTS.reset(0)
+        FAULTS.arm("storage.chunk", "missing", first=0, count=1)
+        with pytest.raises(MissingChunkError):
+            part.load()
+        FAULTS.reset(0)
+        FAULTS.arm("storage.chunk", "torn", first=0, count=1, arg=0.5)
+        with pytest.raises(ChunkCorruptionError):
+            part.load()                 # row-count check, no verify
+        FAULTS.reset(0)
+        FAULTS.arm("storage.chunk", "corrupt", first=0, count=1)
+        part.load()                     # silent without verify
+        FAULTS.reset(0)
+        FAULTS.arm("storage.chunk", "corrupt", first=0, count=1)
+        with pytest.raises(ChunkCorruptionError):
+            part.load(verify=True)
+    finally:
+        FAULTS.reset()
+
+
+def test_resume_quarantines_stale_sketch(data, tmp_path):
+    """Regression (PR 6): a torn append can persist sketch counters
+    counting rows whose chunks never made the footer. ``resume`` must
+    quarantine any sketch whose stream total exceeds the part's footer
+    rows — skew decisions must not read statistics the data does not
+    back."""
+    import json
+    import os
+    cat = StorageCatalog(str(tmp_path))
+    orders = data["Ord"]
+    w = cat.writer("stale", INPUT_TYPES, chunk_rows=16)
+    w.append({"Ord": orders[:20], "Part": data["Part"]})
+    rows0 = w.meta.parts["Ord__D_oparts"].rows
+    # simulate the torn state: footer sketch total ahead of footer rows
+    fpath = os.path.join(w.dir, "footer.json")
+    with open(fpath) as f:
+        doc = json.load(f)
+    sk = doc["parts"]["Ord__D_oparts"]["sketches"]["pid"]
+    sk["total"] = int(sk["total"]) + 50
+    with open(fpath, "w") as f:
+        json.dump(doc, f)
+    w2 = cat.writer("stale", INPUT_TYPES, chunk_rows=16, resume=True)
+    assert "pid" in w2.quarantined_sketches["Ord__D_oparts"]
+    # untainted sketches survive the quarantine
+    assert "note" not in w2.quarantined_sketches.get("Ord__D_oparts", {})
+    w2.append({"Ord": orders[20:]})
+    ds = cat.open("stale", refresh=True)
+    pm = ds.parts["Ord__D_oparts"].meta
+    from repro.core.skew import HeavyKeySketch
+    # the rebuilt sketch counts ONLY rows appended after the quarantine
+    assert HeavyKeySketch.from_json(pm.sketches["pid"]).total \
+        == pm.rows - rows0
+    assert HeavyKeySketch.from_json(pm.sketches["note"]).total == pm.rows
+
+
+def test_append_rolls_back_in_memory_state_on_failure(data, tmp_path,
+                                                      monkeypatch):
+    """A failed append must not leave the writer's in-memory sketches /
+    chunk lists ahead of the footer: a later successful flush would
+    otherwise persist exactly the torn state ``resume`` quarantines."""
+    from repro.core.skew import HeavyKeySketch
+    cat = StorageCatalog(str(tmp_path))
+    orders = data["Ord"]
+    w = cat.writer("txn", INPUT_TYPES, chunk_rows=16)
+    w.append({"Ord": orders[:20], "Part": data["Part"]})
+    import repro.storage.writer as W
+    real_save = np.save
+    calls = {"n": 0}
+
+    def flaky_save(path, arr):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise OSError("disk full (injected)")
+        return real_save(path, arr)
+
+    monkeypatch.setattr(W.np, "save", flaky_save)
+    with pytest.raises(OSError):
+        w.append({"Ord": orders[20:35]})
+    monkeypatch.setattr(W.np, "save", real_save)
+    w.append({"Ord": orders[20:]})
+    ds = cat.open("txn", refresh=True)
+    pm = ds.parts["Ord__D_oparts"].meta
+    # sketch totals match footer rows exactly: no double count from the
+    # aborted batch
+    assert HeavyKeySketch.from_json(pm.sketches["pid"]).total == pm.rows
+    env_mem = CG.columnar_shred_inputs(data, INPUT_TYPES)
+    env_disk = ds.load_env()
+    for name, bag in env_mem.items():
+        for c in bag.data:
+            assert np.array_equal(np.asarray(bag.data[c]),
+                                  np.asarray(env_disk[name].data[c])), \
+                (name, c)
