@@ -4,7 +4,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-slow bench-quick bench serve-smoke storage-smoke \
-	skew-smoke chaos-smoke ci
+	skew-smoke chaos-smoke compress-smoke ci
 
 # fast tier: everything except the @slow tests (multi-device
 # subprocesses, hypothesis sweeps) — those run in the second tier
@@ -39,8 +39,13 @@ test-slow:
 # bit-for-bit identical to the fault-free run for all non-shed
 # requests, and a simulated restart warm-replaying the persisted plan
 # manifest with zero retraces (codegen.TRACE_STATS).
+# compress-smoke gates the compressed-chunk tier (DESIGN.md "Compressed
+# chunks and morsel streaming"): >=2x compression on label columns,
+# bit-for-bit decode parity with raw storage, zone-map chunk skipping
+# that never pays a decode, and a >=4-morsel out-of-core streamed query
+# matching the one-shot result with zero warm retraces.
 ci: test test-slow bench-quick serve-smoke storage-smoke skew-smoke \
-	chaos-smoke
+	chaos-smoke compress-smoke
 
 serve-smoke:
 	$(PY) -m benchmarks.serving --smoke
@@ -53,6 +58,9 @@ storage-smoke:
 
 skew-smoke:
 	$(PY) -m benchmarks.skew --smoke
+
+compress-smoke:
+	$(PY) -m benchmarks.storage --compress-smoke
 
 # CPU-friendly perf smoke: runs every benchmark section except the
 # 8-virtual-device skew subprocess, fails on any Python exception, and

@@ -33,14 +33,21 @@ def emit(name: str, us_per_call: float, derived: str = "",
          compile_ms: Optional[float] = None,
          warm_ms: Optional[float] = None,
          bytes_on_disk: Optional[int] = None,
-         chunks_skipped: Optional[int] = None, **extra):
+         chunks_skipped: Optional[int] = None,
+         bytes_read: Optional[int] = None,
+         bytes_decoded: Optional[int] = None,
+         decode_ms: Optional[float] = None,
+         compression_ratio: Optional[float] = None, **extra):
     """Emit one benchmark record. ``compile_ms`` / ``warm_ms`` split
     one-time compilation (shredding + plan passes + tracing + XLA) from
     the warm per-call time, so plan-cache wins are visible as separate
     fields in the BENCH_<timestamp>.json perf trajectory.
     ``bytes_on_disk`` / ``chunks_skipped`` are the storage-engine twins
     (benchmarks/storage.py): persisted footprint and zone-map skip
-    counts ride in the same trajectory file."""
+    counts ride in the same trajectory file. ``bytes_read`` (disk I/O)
+    vs ``bytes_decoded`` (decompressed logical bytes) expose the
+    lightweight-encoding win; ``decode_ms`` is the codec/kernel time
+    inside that read and ``compression_ratio`` = decoded / on-disk."""
     line = f"{name},{us_per_call:.1f},{derived}"
     rec = {"section": CURRENT_SECTION, "name": name,
            "us_per_call": round(float(us_per_call), 1),
@@ -57,6 +64,18 @@ def emit(name: str, us_per_call: float, derived: str = "",
     if chunks_skipped is not None:
         rec["chunks_skipped"] = int(chunks_skipped)
         line += f",chunks_skipped={rec['chunks_skipped']}"
+    if bytes_read is not None:
+        rec["bytes_read"] = int(bytes_read)
+        line += f",bytes_read={rec['bytes_read']}"
+    if bytes_decoded is not None:
+        rec["bytes_decoded"] = int(bytes_decoded)
+        line += f",bytes_decoded={rec['bytes_decoded']}"
+    if decode_ms is not None:
+        rec["decode_ms"] = round(float(decode_ms), 3)
+        line += f",decode_ms={rec['decode_ms']}"
+    if compression_ratio is not None:
+        rec["compression_ratio"] = round(float(compression_ratio), 2)
+        line += f",compression_ratio={rec['compression_ratio']}"
     rec.update(extra)
     ROWS.append(line)
     RECORDS.append(rec)

@@ -41,11 +41,23 @@ def main() -> None:
                      lambda: fused_pipeline.run(
                          n=5000 if args.quick else 20000,
                          dist_n=2000 if args.quick else 4000)))
+    def storage_section():
+        storage.run(n_orders=300 if args.quick else 2000,
+                    n_parts=128 if args.quick else 512,
+                    chunk_rows=32 if args.quick else 64)
+        # compression ratio / decode GB/s / morsel-stream records ride
+        # in the same trajectory file
+        if args.quick:
+            storage.run_compression(n_orders=1200, fanout=40,
+                                    chunk_rows=8192, iters=3,
+                                    smoke=True)
+            storage.run_streamed(n_orders=400, n_parts=128,
+                                 chunk_rows=32)
+        else:
+            storage.run_compression()
+            storage.run_streamed()
     sections.append(("storage (persisted shredded datasets)",
-                     lambda: storage.run(
-                         n_orders=300 if args.quick else 2000,
-                         n_parts=128 if args.quick else 512,
-                         chunk_rows=32 if args.quick else 64)))
+                     storage_section))
     sections.append(("biomedical E2E (Fig.9)",
                      lambda: biomedical.run(n_samples=6 if args.quick else 10)))
     sections.append(("succinct (App.D)", succinct.run))

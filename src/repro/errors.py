@@ -66,6 +66,15 @@ class ExecError(ReproError):
     """Fault while executing a compiled program."""
 
 
+class StreamingUnsupportedError(ExecError):
+    """The program/dataset pair cannot stream morsels soundly: an
+    aggregate sits below another operator over streamed rows (partial
+    results would not re-fold), or a streamed part's label columns are
+    not monotone parent rids (morsel windows could split a parent from
+    its children). Deterministic — the caller should fall back to the
+    one-shot ``execute_stored`` path."""
+
+
 class ExchangeError(ExecError):
     """A distributed exchange / collective failed. Transient at the
     single-attempt level; the serving runtime additionally degrades to

@@ -1,0 +1,227 @@
+"""Pallas TPU kernels for the compressed-chunk scan path (DESIGN.md
+"Compressed chunks and morsel streaming").
+
+Each lightweight codec in ``storage.encodings`` gets a blocked decode
+kernel so decompression runs post-transfer at memory-bandwidth speed —
+the encoded members are what crosses the wire; the expansion to row
+vectors happens on-device:
+
+* ``rle_expand_pallas``   — run-length expand. Runs tile ``[0, n)`` as
+  half-open intervals ``[starts[j], ends[j])``; each output block
+  accumulates a masked integer one-hot sum over run blocks (exactly one
+  run covers each row, so the sum IS the gather — same dense-compare
+  accumulation as ``shuffle_pack.pack_rows_pallas``, exact for int64
+  bit-views).
+* ``delta_unpack_pallas`` — zigzag decode + inclusive prefix sum from
+  ``first``. Arithmetic is modular uint64 (two's complement bits), so
+  the round trip is exact even across int64 extremes. The running total
+  is carried across the sequential TPU grid in a scratch cell — the
+  ``rwkv6_scan`` state-carry idiom, one value instead of a K x V tile.
+* ``bitunpack_pallas``    — frame-of-reference unpack: ``vpw = 32 // k``
+  values per uint32 word (values never straddle words), so each word
+  block expands to an aligned output block with one shift+mask.
+* ``dict_gather_pallas``  — dictionary gather: blocked masked one-hot
+  integer sum of the (tiny) sorted dictionary against per-row codes.
+
+All four are bit-for-bit equal to their jnp oracles in ``kernels.ref``
+(comparisons, integer sums, shifts and modular adds have no rounding);
+``tests/test_kernels.py`` holds the hypothesis parity sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEF_BLOCK_N = 256     # output rows per grid step
+DEF_BLOCK_R = 256     # runs / dictionary entries per grid step
+
+
+# ---------------------------------------------------------------------------
+# rle_expand
+# ---------------------------------------------------------------------------
+
+def _rle_kernel(values_ref, starts_ref, ends_ref, out_ref, *, block_n):
+    nb = pl.program_id(0)
+    rb = pl.program_id(1)
+
+    @pl.when(rb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    i = (nb * block_n
+         + jax.lax.broadcasted_iota(jnp.int64, (block_n, 1), 0))
+    s = starts_ref[...][None, :]
+    e = ends_ref[...][None, :]
+    hit = (s <= i) & (i < e)          # exactly one run covers each row
+    out_ref[...] += jnp.sum(
+        jnp.where(hit, values_ref[...][None, :], 0), axis=1)
+
+
+def rle_expand_pallas(values: jnp.ndarray, starts: jnp.ndarray,
+                      ends: jnp.ndarray, n: int,
+                      block_n: int = DEF_BLOCK_N,
+                      block_r: int = DEF_BLOCK_R,
+                      interpret: bool = True) -> jnp.ndarray:
+    """out[i] = values[j] for the run j with starts[j] <= i < ends[j].
+    values/starts/ends (r,) int64, runs sorted and tiling [0, n)."""
+    r = values.shape[0]
+    block_n = max(1, min(block_n, n))
+    block_r = max(1, min(block_r, max(r, 1)))
+    n_pad = (-n) % block_n if n else block_n
+    r_pad = (-r) % block_r if r else block_r
+    if r_pad:
+        # empty interval [0, 0): padding runs never cover a row
+        values = jnp.pad(values, (0, r_pad))
+        starts = jnp.pad(starts, (0, r_pad))
+        ends = jnp.pad(ends, (0, r_pad))
+    grid = ((n + n_pad) // block_n, (r + r_pad) // block_r)
+    out = pl.pallas_call(
+        functools.partial(_rle_kernel, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r,), lambda nb, rb: (rb,)),
+            pl.BlockSpec((block_r,), lambda nb, rb: (rb,)),
+            pl.BlockSpec((block_r,), lambda nb, rb: (rb,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda nb, rb: (nb,)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad,), jnp.int64),
+        interpret=interpret,
+    )(values.astype(jnp.int64), starts.astype(jnp.int64),
+      ends.astype(jnp.int64))
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# delta_unpack
+# ---------------------------------------------------------------------------
+
+def _delta_kernel(first_ref, z_ref, out_ref, carry_ref):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        carry_ref[0] = first_ref[0]
+
+    z = z_ref[...]
+    d = (z >> jnp.uint64(1)) ^ (jnp.uint64(0) - (z & jnp.uint64(1)))
+    tot = carry_ref[0] + jnp.cumsum(d, dtype=jnp.uint64)
+    out_ref[...] = jax.lax.bitcast_convert_type(tot, jnp.int64)
+    carry_ref[0] = tot[-1]
+
+
+def delta_unpack_pallas(z: jnp.ndarray, first: jnp.ndarray,
+                        block_n: int = DEF_BLOCK_N,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Inclusive zigzag-delta prefix sum: out[i] = first + sum of the
+    decoded deltas z[0..i] in modular uint64 (delta[0] == 0 by the
+    encoder's convention, so out[0] == first). z (n,) uint64, first
+    (1,) uint64; returns int64 bit patterns."""
+    n = z.shape[0]
+    block_n = max(1, min(block_n, max(n, 1)))
+    n_pad = (-n) % block_n if n else block_n
+    if n_pad:
+        z = jnp.pad(z, (0, n_pad))        # zero delta: repeats last value
+    grid = ((n + n_pad) // block_n,)
+    out = pl.pallas_call(
+        _delta_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((block_n,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad,), jnp.int64),
+        scratch_shapes=[pltpu.VMEM((1,), jnp.uint64)],
+        interpret=interpret,
+    )(first.astype(jnp.uint64), z.astype(jnp.uint64))
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# bitunpack
+# ---------------------------------------------------------------------------
+
+def _bitunpack_kernel(words_ref, out_ref, *, k, vpw, lo):
+    w = words_ref[...]
+    rep = jnp.repeat(w, vpw)
+    m = rep.shape[0]
+    pos = (jax.lax.broadcasted_iota(jnp.uint32, (m,), 0)
+           % jnp.uint32(vpw))
+    vals = (rep >> (pos * jnp.uint32(k))) & jnp.uint32((1 << k) - 1)
+    out_ref[...] = vals.astype(jnp.int64) + jnp.int64(lo)
+
+
+def bitunpack_pallas(words: jnp.ndarray, k: int, vpw: int, n: int,
+                     lo: int, block_w: int = DEF_BLOCK_N,
+                     interpret: bool = True) -> jnp.ndarray:
+    """Frame-of-reference unpack: word i holds values [i*vpw, i*vpw+vpw)
+    at k bits each; out = unpacked + lo as int64, trimmed to n rows."""
+    nw = words.shape[0]
+    block_w = max(1, min(block_w, max(nw, 1)))
+    w_pad = (-nw) % block_w if nw else block_w
+    if w_pad:
+        words = jnp.pad(words, (0, w_pad))
+    grid = ((nw + w_pad) // block_w,)
+    out = pl.pallas_call(
+        functools.partial(_bitunpack_kernel, k=k, vpw=vpw, lo=lo),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_w,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((block_w * vpw,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct(((nw + w_pad) * vpw,), jnp.int64),
+        interpret=interpret,
+    )(words.astype(jnp.uint32))
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# dict_gather
+# ---------------------------------------------------------------------------
+
+def _dict_kernel(codes_ref, values_ref, out_ref, *, block_v):
+    vb = pl.program_id(1)
+
+    @pl.when(vb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    local = codes_ref[...].astype(jnp.int32) - vb * block_v
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (local.shape[0], block_v), 1))
+    out_ref[...] += jnp.sum(
+        jnp.where(onehot, values_ref[...][None, :], 0), axis=1)
+
+
+def dict_gather_pallas(values: jnp.ndarray, codes: jnp.ndarray,
+                       block_n: int = DEF_BLOCK_N,
+                       block_v: int = DEF_BLOCK_R,
+                       interpret: bool = True) -> jnp.ndarray:
+    """out[i] = values[codes[i]] — the dictionary decode as a blocked
+    masked one-hot integer sum (out-of-range codes gather 0)."""
+    r = values.shape[0]
+    n = codes.shape[0]
+    block_n = max(1, min(block_n, max(n, 1)))
+    block_v = max(1, min(block_v, max(r, 1)))
+    n_pad = (-n) % block_n if n else block_n
+    r_pad = (-r) % block_v if r else block_v
+    if n_pad:
+        codes = jnp.pad(codes, (0, n_pad), constant_values=-1)
+    if r_pad:
+        values = jnp.pad(values, (0, r_pad))
+    grid = ((n + n_pad) // block_n, (r + r_pad) // block_v)
+    out = pl.pallas_call(
+        functools.partial(_dict_kernel, block_v=block_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda nb, vb: (nb,)),
+            pl.BlockSpec((block_v,), lambda nb, vb: (vb,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda nb, vb: (nb,)),
+        out_shape=jax.ShapeDtypeStruct((n + n_pad,), jnp.int64),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), values.astype(jnp.int64))
+    return out[:n]

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .decode import (bitunpack_pallas, delta_unpack_pallas,
+                     dict_gather_pallas, rle_expand_pallas)
 from .flash_attention import flash_attention_pallas
 from .gather_join import gather_rows_pallas, merge_positions_pallas
 from .rwkv6_scan import rwkv6_pallas
@@ -100,6 +102,40 @@ def member_mask(keys: jnp.ndarray, heavy: jnp.ndarray) -> jnp.ndarray:
     if USE_REF:
         return ref.member_mask_ref(keys, heavy)
     return member_mask_pallas(keys, heavy, interpret=INTERPRET)
+
+
+def rle_expand(values: jnp.ndarray, starts: jnp.ndarray,
+               ends: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Run-length expand: out[i] = values[j] for the run j covering row
+    i ([starts[j], ends[j]) tile [0, n)). int64 bit-views."""
+    if USE_REF:
+        return ref.rle_expand_ref(values, starts, ends, n)
+    return rle_expand_pallas(values, starts, ends, n, interpret=INTERPRET)
+
+
+def delta_unpack(z: jnp.ndarray, first: jnp.ndarray) -> jnp.ndarray:
+    """Zigzag-delta decode: first + inclusive modular-uint64 prefix sum
+    of the decoded deltas. z (n,) uint64, first (1,) uint64 -> int64."""
+    if USE_REF:
+        return ref.delta_unpack_ref(z, first)
+    return delta_unpack_pallas(z, first, interpret=INTERPRET)
+
+
+def bitunpack(words: jnp.ndarray, k: int, vpw: int, n: int,
+              lo: int) -> jnp.ndarray:
+    """Frame-of-reference unpack: k-bit values, vpw per uint32 word,
+    + lo -> int64, trimmed to n rows."""
+    if USE_REF:
+        return ref.bitunpack_ref(words, k, vpw, n, lo)
+    return bitunpack_pallas(words, k, vpw, n, lo, interpret=INTERPRET)
+
+
+def dict_gather(values: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Dictionary decode: out[i] = values[codes[i]] (int64 bit-views;
+    out-of-range codes gather 0)."""
+    if USE_REF:
+        return ref.dict_gather_ref(values, codes)
+    return dict_gather_pallas(values, codes, interpret=INTERPRET)
 
 
 def flash_attention(q, k, v, causal: bool = True,

@@ -107,6 +107,46 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                       vr.astype(jnp.float32)).astype(q.dtype)
 
 
+def rle_expand_ref(values: jnp.ndarray, starts: jnp.ndarray,
+                   ends: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Oracle for kernels.decode.rle_expand: out[i] = the value of the
+    run covering row i (runs tile [0, n) as [starts[j], ends[j]))."""
+    idx = jnp.searchsorted(starts.astype(jnp.int64),
+                           jnp.arange(n, dtype=jnp.int64),
+                           side="right") - 1
+    r = values.shape[0]
+    return values[jnp.clip(idx, 0, max(r - 1, 0))]
+
+
+def delta_unpack_ref(z: jnp.ndarray, first: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.decode.delta_unpack: zigzag-decode the deltas
+    and inclusive-cumsum from ``first`` in modular uint64 (wraparound
+    keeps int64 extremes exact). ``z`` uint64, ``first`` (1,) uint64."""
+    u = z.astype(jnp.uint64)
+    d = (u >> jnp.uint64(1)) ^ (jnp.uint64(0) - (u & jnp.uint64(1)))
+    out = first[0] + jnp.cumsum(d, dtype=jnp.uint64)
+    return jax.lax.bitcast_convert_type(out, jnp.int64)
+
+
+def bitunpack_ref(words: jnp.ndarray, k: int, vpw: int, n: int,
+                  lo: int) -> jnp.ndarray:
+    """Oracle for kernels.decode.bitunpack: frame-of-reference unpack of
+    ``k``-bit values, ``vpw`` per uint32 word (never straddling)."""
+    rep = jnp.repeat(words.astype(jnp.uint32), vpw)[:n]
+    pos = (jnp.arange(n, dtype=jnp.uint32) % jnp.uint32(vpw))
+    vals = (rep >> (pos * jnp.uint32(k))) & jnp.uint32((1 << k) - 1)
+    return vals.astype(jnp.int64) + jnp.int64(lo)
+
+
+def dict_gather_ref(values: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.decode.dict_gather: out[i] = values[codes[i]]
+    (out-of-range codes gather 0, mirroring gather_rows_ref)."""
+    r = values.shape[0]
+    ok = (codes >= 0) & (codes < r)
+    g = values[jnp.clip(codes, 0, max(r - 1, 0))]
+    return jnp.where(ok, g, 0)
+
+
 def rwkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
               w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.rwkv6_scan: the sequential RWKV-6 recurrence.

@@ -96,6 +96,9 @@ class CacheEntry:
     # storage-backed entries: per-part column/skip-predicate
     # requirements derived from the compiled plans (storage.catalog)
     storage_req: Optional[dict] = None
+    # morsel-streaming entries: (storage.morsel.MorselPlan,
+    # {output: fold spec} from plans.morsel_fold)
+    morsel: Optional[tuple] = None
 
     def manifest(self, source: str) -> M.Manifest:
         return self.sp.manifests[source]
@@ -479,6 +482,103 @@ class QueryService:
             program, dataset, skew_hints, no_skip=no_skip, verify=verify)
         return entry.exe(env, params)
 
+    # -- morsel-streamed storage-backed execution --------------------------
+    def _lookup_streaming(self, program: N.Program, dataset, root: str,
+                          morsel_rows: int,
+                          skew_hints: Optional[dict] = None):
+        from repro.core.plans import morsel_fold
+        from repro.storage import storage_requirements
+        from repro.storage.morsel import plan_morsels
+        assert self.mesh is None, (
+            "storage-backed serving is a local-path feature")
+        base, lifted, values = self.fingerprint_stored(program, dataset,
+                                                       skew_hints)
+        key = base + (("morsel", root, int(morsel_rows)),)
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._touch(key, entry)
+        else:
+            sp = M.shred_program(lifted, self.input_types,
+                                 domain_elimination=self.domain_elim)
+            cp = CG.compile_program(
+                sp, self.catalog,
+                skew_stats=self._stored_skew_stats(dataset, skew_hints),
+                skew_mode=self.skew_mode,
+                skew_partitions=self.skew_partitions,
+                skew_threshold=self.skew_threshold)
+            req = storage_requirements(cp, set(dataset.parts))
+            mp = plan_morsels(dataset, root, morsel_rows)
+            folds = morsel_fold(cp.plans, cp.outputs, set(mp.parts))
+            # streamed parts pin to the worst morsel window's class;
+            # resident parts to the full part's class — either way the
+            # caps never change across morsels or calls, so ONE jit
+            # serves the whole stream (zero warm retraces)
+            class_caps = {
+                part: (mp.caps[part] if part in mp.caps
+                       else _class_capacity(
+                           max(dataset.parts[part].rows, 1)))
+                for part in req}
+            entry = self._remember(key, self._local_entry(
+                key, sp, cp, class_caps, len(values), storage_req=req))
+            entry.morsel = (mp, folds)
+        params = {f"__p{i}": v for i, v in enumerate(values)}
+        params.update(self._skew_binds(entry.cp, skew_hints))
+        return entry, params
+
+    def execute_stored_streaming(self, program: N.Program, dataset,
+                                 morsel_rows: int,
+                                 root: Optional[str] = None,
+                                 skew_hints: Optional[dict] = None,
+                                 no_skip: bool = False,
+                                 verify: bool = False
+                                 ) -> Dict[str, FlatBag]:
+        """Run one invocation morsel-at-a-time over a persisted dataset
+        whose streamed root may exceed device memory. The root input's
+        parts load as chunk-aligned windows (``storage.morsel``); every
+        other part stays resident; the SAME cached executable runs once
+        per morsel (fixed capacity classes, validity-masked window
+        tails — zero retraces across morsels and across warm calls);
+        per-morsel partial outputs re-fold by the compile-time fold
+        spec (``plans.morsel_fold``): concat for row-local outputs,
+        re-aggregation for root Gamma+/dedup outputs, first for
+        resident-only outputs.
+
+        Raises ``StreamingUnsupportedError`` when the program holds an
+        aggregate over streamed rows below an output root, or the
+        dataset's label columns are not monotone parent rids — fall
+        back to ``execute_stored``."""
+        from repro.storage.morsel import load_morsel_window
+        if root is None:
+            # default: stream the largest input root (by top-part rows)
+            tops = {iname: dataset.parts[M.mat_input_name(iname, ())].rows
+                    for iname in dataset.input_types}
+            root = max(sorted(tops), key=lambda n: tops[n])
+        entry, params = self._lookup_streaming(
+            program, dataset, root, morsel_rows, skew_hints)
+        mp, folds = entry.morsel
+        req = entry.storage_req
+        streamed = set(mp.parts) & set(req)
+        resident = {p: r.columns for p, r in req.items()
+                    if p not in streamed}
+        env_resident = dataset.load_env(
+            columns=resident,
+            preds=None if no_skip else
+            {p: req[p].pred for p in resident},
+            params=params,
+            capacities={p: entry.class_caps[p] for p in resident},
+            verify=verify) if resident else {}
+        outs = []
+        for k in range(mp.n_morsels):
+            env = dict(env_resident)
+            for part in sorted(streamed):
+                env[part] = load_morsel_window(
+                    dataset.parts[part], mp.morsels[k][part],
+                    req[part].columns, entry.class_caps[part],
+                    pred=None if no_skip else req[part].pred,
+                    params=params, verify=verify)
+            outs.append(entry.exe(env, params))
+        return _fold_streamed(folds, outs, self.settings)
+
     def unshred_stored(self, program: N.Program, dataset,
                        outputs: Dict[str, FlatBag], source: str) -> list:
         """Host-side nested rows of a stored-path result (the storage
@@ -521,6 +621,33 @@ class QueryService:
             return self.unshred_stored(program, env, outputs, source)
         key, lifted, _, _ = self.fingerprint(program, env)
         return self._rows_for(key, lifted, outputs, source)
+
+
+def _fold_streamed(folds: Dict[str, tuple],
+                   outs: List[Dict[str, FlatBag]],
+                   settings: ExecSettings) -> Dict[str, FlatBag]:
+    """Re-fold per-morsel partial outputs into the one-shot result
+    (fold specs from ``plans.morsel_fold``)."""
+    from repro.columnar.table import concat_bags
+    from repro.exec import ops as X
+    final: Dict[str, FlatBag] = {}
+    for name, spec in folds.items():
+        bags = [o[name] for o in outs]
+        if spec[0] == "first":
+            final[name] = bags[0]
+            continue
+        acc = bags[0]
+        for b in bags[1:]:
+            acc = concat_bags(acc, b)
+        if spec[0] == "sum":
+            final[name] = X.sum_by(acc, list(spec[1]), list(spec[2]),
+                                   use_kernel=settings.use_kernel)
+        elif spec[0] == "dedup":
+            final[name] = X.dedup(
+                acc, list(spec[1]) if spec[1] is not None else None)
+        else:
+            final[name] = acc
+    return final
 
 
 def _slice_outputs(batched: Dict[str, FlatBag], i: int

@@ -279,17 +279,19 @@ class StorageCatalog:
 
     def writer(self, name: str, input_types: Dict[str, N.BagT],
                chunk_rows: int = 1024, encoders=None,
-               resume: bool = False) -> DatasetWriter:
+               resume: bool = False,
+               encoding: str = "auto") -> DatasetWriter:
         self._open.pop(name, None)      # invalidate any cached handle
         return DatasetWriter(self.root, name, input_types,
                              chunk_rows=chunk_rows, encoders=encoders,
-                             resume=resume)
+                             resume=resume, encoding=encoding)
 
     def write(self, name: str, inputs: Dict[str, list],
               input_types: Dict[str, N.BagT],
-              chunk_rows: int = 1024, encoders=None) -> StoredDataset:
-        self.writer(name, input_types, chunk_rows,
-                    encoders=encoders).write(inputs)
+              chunk_rows: int = 1024, encoders=None,
+              encoding: str = "auto") -> StoredDataset:
+        self.writer(name, input_types, chunk_rows, encoders=encoders,
+                    encoding=encoding).write(inputs)
         return self.open(name)
 
     def open(self, name: str, refresh: bool = False) -> StoredDataset:

@@ -126,13 +126,17 @@ def zone_stats(col: np.ndarray) -> dict:
     over the chunk's rows — kept as exact Python ints for integer
     dtypes (a float bound above 2**53 would round and make skipping
     unsound); ``distinct`` is the exact distinct count (the chunks are
-    small enough that a sketch buys nothing)."""
+    small enough that a sketch buys nothing); ``runs`` is the
+    equal-value run count (bit-pattern equality) the append-time codec
+    heuristic reads (``encodings.choose_encoding``)."""
+    from .encodings import run_count
     if col.size == 0:
-        return {"lo": None, "hi": None, "distinct": 0}
+        return {"lo": None, "hi": None, "distinct": 0, "runs": 0}
+    runs = run_count(col)
     if col.dtype == np.bool_:
         col = col.astype(np.int8)
     return {"lo": np.min(col).item(), "hi": np.max(col).item(),
-            "distinct": int(np.unique(col).size)}
+            "distinct": int(np.unique(col).size), "runs": runs}
 
 
 def chunk_crc(col: np.ndarray) -> int:
@@ -146,10 +150,18 @@ def chunk_crc(col: np.ndarray) -> int:
 class ChunkMeta:
     rows: int
     zones: Dict[str, dict]           # column -> zone_stats
-    # column -> CRC32 of the chunk file's array bytes. Optional for
+    # column -> CRC32 of the chunk's DECODED array bytes. Optional for
     # backward compatibility: footers written before the field verify
     # nothing (empty dict), they do not fail to load.
     crcs: Dict[str, int] = dc_field(default_factory=dict)
+    # column -> encoding descriptor (encodings.encode_chunk): codec
+    # name, member layout of the uint8 blob, decoded dtype, codec
+    # parameters. Columns absent from the dict are raw ``.npy`` chunks
+    # — footers written before this field (and all-raw footers) carry
+    # no key at all, so old datasets load unchanged. Zone maps stay
+    # decoded-domain statistics regardless of codec, so predicate
+    # skipping never pays a decode.
+    encodings: Dict[str, dict] = dc_field(default_factory=dict)
 
 
 @dataclass
@@ -174,8 +186,10 @@ class PartMeta:
     def to_json(self) -> dict:
         return {"name": self.name, "schema": self.schema,
                 "dtypes": self.dtypes,
-                "chunks": [{"rows": c.rows, "zones": c.zones,
-                            "crcs": c.crcs}
+                "chunks": [dict({"rows": c.rows, "zones": c.zones,
+                                 "crcs": c.crcs},
+                                **({"encodings": c.encodings}
+                                   if c.encodings else {}))
                            for c in self.chunks],
                 "sorted_by": list(self.sorted_by) if self.sorted_by
                 else None,
@@ -190,7 +204,8 @@ class PartMeta:
             dtypes=dict(d["dtypes"]),
             chunks=[ChunkMeta(c["rows"], c["zones"],
                               {n: int(v) for n, v in
-                               c.get("crcs", {}).items()})
+                               c.get("crcs", {}).items()},
+                              dict(c.get("encodings", {})))
                     for c in d["chunks"]],
             sorted_by=tuple(d["sorted_by"]) if d.get("sorted_by") else None,
             partitioning=tuple(d["partitioning"])

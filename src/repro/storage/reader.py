@@ -14,9 +14,11 @@ columns read/pruned, bytes read); the storage tests and
 from __future__ import annotations
 
 import os
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -26,13 +28,26 @@ from repro.core import nrc as N
 from repro.errors import ChunkCorruptionError, MissingChunkError
 from repro.faults import FAULTS
 
+from . import encodings as E
 from .format import (DatasetMeta, PartMeta, chunk_crc, chunk_may_match,
                      chunk_path, dir_bytes, read_footer)
 
 STORAGE_STATS: Dict[str, int] = {}
 """Host-side scan counters: ``chunks_read`` / ``chunks_skipped`` (zone
 maps), ``columns_read`` / ``columns_pruned`` (projection pushdown),
-``bytes_read``, ``parts_loaded``."""
+``parts_loaded``, and the byte ledger — ``bytes_read`` is bytes that
+actually came off disk (encoded chunks count their compressed blob,
+NOT the decoded rows), ``bytes_decoded`` / ``chunks_decoded`` /
+``decode_us`` meter the decode stage of encoded chunks."""
+
+DEVICE_DECODE = False
+"""When True, encoded chunks decode through the Pallas kernels
+(``kernels.ops.rle_expand`` / ``delta_unpack`` / ``bitunpack`` /
+``dict_gather``) so decompression runs post-transfer on the
+accelerator; the default NumPy path (``encodings.decode_chunk``) is
+bit-for-bit identical — on this CPU container the kernels run in
+interpret mode, so NumPy is the faster engine and the kernel path is
+exercised by the parity tests."""
 
 
 def reset_storage_stats() -> None:
@@ -41,6 +56,51 @@ def reset_storage_stats() -> None:
 
 def _count(name: str, n: int = 1) -> None:
     STORAGE_STATS[name] = STORAGE_STATS.get(name, 0) + n
+
+
+def _decode_device(enc: dict, blob: np.ndarray) -> np.ndarray:
+    """Decode one encoded chunk blob through the Pallas kernels. All
+    kernels work on int64 bit-views (floats cross as raw bits), so the
+    result is bit-for-bit ``encodings.decode_chunk``."""
+    from repro.kernels import ops as K
+    dtype = np.dtype(enc["dtype"])
+    m = E.unpack_members(enc, blob)
+
+    def to_i64(v: np.ndarray) -> np.ndarray:
+        return v.view(np.int64) if v.dtype.kind == "f" \
+            else v.astype(np.int64)
+
+    def from_i64(out) -> np.ndarray:
+        out = np.asarray(out)
+        if dtype.kind == "f":
+            return out.view(dtype)
+        if dtype == np.bool_:
+            return out != 0
+        return out.astype(dtype, copy=False)
+
+    c = enc["codec"]
+    if c == "rle":
+        lengths = m["lengths"].astype(np.int64)
+        ends = np.cumsum(lengths)
+        starts = ends - lengths
+        n = int(ends[-1]) if ends.size else 0
+        return from_i64(K.rle_expand(
+            jnp.asarray(to_i64(m["values"])), jnp.asarray(starts),
+            jnp.asarray(ends), n))
+    if c == "delta":
+        z = m["deltas"].astype(np.uint64)
+        first = np.array([enc["first"]], np.uint64)
+        return from_i64(K.delta_unpack(jnp.asarray(z),
+                                       jnp.asarray(first)))
+    if c == "bitpack":
+        return from_i64(K.bitunpack(
+            jnp.asarray(m["words"].astype(np.uint32)), int(enc["k"]),
+            int(enc["vpw"]), int(enc["n"]), int(enc["lo"])))
+    if c == "dict":
+        return from_i64(K.dict_gather(
+            jnp.asarray(to_i64(m["values"])),
+            jnp.asarray(m["codes"].astype(np.int32))))
+    raise ValueError(f"unknown codec {c!r}")
 
 
 def restore_encoders(meta: DatasetMeta, strict: bool = True
@@ -107,20 +167,29 @@ class StoredPart:
                 if chunk_may_match(pred, c.zones, self.meta.schema, params)]
 
     # -- loading -----------------------------------------------------------
-    def _load_chunk(self, col: str, i: int, verify: bool) -> np.ndarray:
-        """np-load one chunk with the ``storage.chunk`` fault site and
-        integrity checks. A *torn* chunk (fewer rows on disk than the
+    def _load_chunk(self, col: str, i: int, verify: bool,
+                    count: bool = True) -> np.ndarray:
+        """np-load one chunk with the ``storage.chunk`` fault site,
+        the codec decode stage, and integrity checks. A *torn* chunk
+        (fewer rows — or a truncated encoded blob — on disk than the
         footer promises) is caught unconditionally by the row-count
-        check; silent *bit corruption* keeps the row count and is only
-        caught by the CRC under ``verify=True``."""
+        check (decoded rows derive from the payload, never the footer);
+        silent *bit corruption* keeps the row count and is only caught
+        by the CRC under ``verify=True`` — the CRC covers DECODED rows,
+        so one checksum guards raw and encoded chunks alike.
+        ``count=False`` keeps planner-internal peeks (morsel boundary
+        reads) out of ``STORAGE_STATS``."""
         meta = self.meta
         path = chunk_path(self.dirpath, meta.name, col, i)
+        enc = meta.chunks[i].encodings.get(col)
         rule = FAULTS.hit("storage.chunk", part=meta.name, col=col, chunk=i)
         if rule is not None and rule.kind == "missing":
             raise MissingChunkError(
                 f"injected missing chunk: {meta.name}.{col} chunk {i}")
         try:
             a = np.load(path, mmap_mode="r")
+            if count:
+                _count("bytes_read", os.path.getsize(path))
         except FileNotFoundError as e:
             raise MissingChunkError(
                 f"{meta.name}.{col} chunk {i}: {path} does not exist"
@@ -130,9 +199,31 @@ class StoredPart:
                 f"{meta.name}.{col} chunk {i}: unreadable npy "
                 f"({e})") from e
         if rule is not None and rule.kind == "torn":
+            # a torn WRITE: the on-disk payload (raw rows or encoded
+            # blob) is shorter than the footer promises
             frac = float(rule.arg) if rule.arg is not None else 0.5
             a = np.asarray(a)[:int(a.shape[0] * frac)]
-        elif rule is not None and rule.kind == "corrupt" and a.size:
+        if enc is not None:
+            t0 = time.perf_counter()
+            try:
+                a = _decode_device(enc, np.asarray(a)) if DEVICE_DECODE \
+                    else E.decode_chunk(enc, np.asarray(a))
+            except ChunkCorruptionError:
+                raise
+            except Exception as e:
+                raise ChunkCorruptionError(
+                    f"{meta.name}.{col} chunk {i}: {enc.get('codec')} "
+                    f"decode failed ({e!r})") from e
+            if count:
+                _count("decode_us",
+                       int((time.perf_counter() - t0) * 1e6))
+                _count("bytes_decoded", int(a.nbytes))
+                _count("chunks_decoded")
+        if rule is not None and rule.kind == "corrupt" and a.size:
+            # silent bit rot observed by the consumer: flips a byte of
+            # the DECODED rows, so the row count survives and only the
+            # CRC (verify=True) can catch it — for raw and encoded
+            # chunks alike
             a = np.array(a)         # writable copy of the mmap
             a.view(np.uint8).flat[0] ^= 0xFF
         if a.shape[0] != meta.chunks[i].rows:
@@ -178,15 +269,20 @@ class StoredPart:
         data = {}
         for col in cols:
             dtype = np.dtype(meta.dtypes[col])
-            buf = np.zeros(cap, dtype=dtype)
+            # empty + explicit tail-zero: loaded rows are overwritten
+            # anyway, so a full-capacity memset would only add a
+            # memory-bandwidth pass to every cold scan
+            buf = np.empty(cap, dtype=dtype)
             off = 0
             for i in sel:
                 a = self._load_chunk(col, i, verify)
                 buf[off:off + a.shape[0]] = a
-                _count("bytes_read", a.shape[0] * dtype.itemsize)
                 off += a.shape[0]
-            data[col] = jnp.asarray(buf)
-        valid = jnp.arange(cap) < nrows
+            buf[off:] = dtype.type(0) if dtype.kind != "b" else False
+            # device_put skips jnp.asarray's trace/convert layer — on
+            # the scan path this is a pure host->device copy
+            data[col] = jax.device_put(buf)
+        valid = jax.device_put(np.arange(cap) < nrows)
         props = self._props(cols)
         return FlatBag(data, valid, props)
 

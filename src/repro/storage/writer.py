@@ -30,6 +30,7 @@ from repro.core import nrc as N
 from repro.core.materialization import mat_input_name
 from repro.core.skew import HeavyKeySketch
 
+from .encodings import choose_encoding, encode_chunk
 from .format import (ChunkMeta, DatasetMeta, PartMeta, chunk_crc,
                      chunk_path, dir_bytes, flat_part_schema,
                      label_domains, read_footer, write_footer,
@@ -57,8 +58,14 @@ class DatasetWriter:
     def __init__(self, root: str, name: str,
                  input_types: Dict[str, N.BagT], chunk_rows: int = 1024,
                  encoders: Optional[Dict[str, StringEncoder]] = None,
-                 resume: bool = False):
+                 resume: bool = False, encoding: str = "auto"):
         assert chunk_rows > 0
+        assert encoding in ("auto", "raw"), encoding
+        # "auto": per-(part, column, chunk) codec chosen from the zone
+        # stats at append time (encodings.choose_encoding); "raw":
+        # every chunk stays a plain .npy (the pre-encoding format —
+        # footers carry no encoding descriptors at all)
+        self.encoding = encoding
         self.dir = os.path.join(root, name)
         self.encoders: Dict[str, StringEncoder] = \
             encoders if encoders is not None else {}
@@ -234,15 +241,27 @@ class DatasetWriter:
             idx = len(pm.chunks)
             zones = {}
             crcs = {}
+            encs = {}
             for col, a in host.items():
                 piece = a[start:stop]
                 path = chunk_path(self.dir, part, col, idx)
                 os.makedirs(os.path.dirname(path), exist_ok=True)
-                np.save(path, piece)
+                # zone maps + CRC always describe the DECODED rows: the
+                # reader skips chunks and verifies integrity without
+                # ever touching a codec
                 zones[col] = zone_stats(piece)
                 crcs[col] = chunk_crc(piece)
+                codec = choose_encoding(piece, zones[col]) \
+                    if self.encoding == "auto" else None
+                if codec is not None:
+                    enc, blob = encode_chunk(piece, codec)
+                    np.save(path, blob)
+                    encs[col] = enc
+                else:
+                    np.save(path, piece)
             pm.chunks.append(
-                ChunkMeta(rows=stop - start, zones=zones, crcs=crcs))
+                ChunkMeta(rows=stop - start, zones=zones, crcs=crcs,
+                          encodings=encs))
 
     def _flush(self) -> None:
         self.meta.encoders = {c: list(e.rev)

@@ -7,7 +7,12 @@ uniform key draws) asserting parity across the four evaluation paths —
   3. distributed shard_map execution
      (``CG.compile_program_distributed``, 8 virtual devices), and
   4. storage-backed serving (``QueryService.execute_stored`` over a
-     freshly persisted dataset, automatic skew decisions enabled).
+     freshly persisted dataset, automatic skew decisions enabled),
+  5. compressed storage (the same dataset written ``encoding="raw"``
+     vs ``encoding="auto"`` — the codec layer must be invisible), and
+  6. morsel-streamed out-of-core execution
+     (``QueryService.execute_stored_streaming`` with tiny chunks and a
+     tiny morsel budget).
 
 Values are integer-valued floats, so float64 sums are exact in any
 association order and the comparison is bit-for-bit (``bags_equal`` at
@@ -159,18 +164,42 @@ def run_jit(q, inputs):
     return CG.parts_to_rows(parts, q.ty)
 
 
-def run_stored(q, inputs, tmpdir):
+def run_stored(q, inputs, tmpdir, encoding="auto"):
     from repro.serve import QueryService
     from repro.storage import StorageCatalog
     cat = StorageCatalog(tmpdir)
-    w = cat.writer("d", TYPES, chunk_rows=16)
+    w = cat.writer("d_" + encoding, TYPES, chunk_rows=16,
+                   encoding=encoding)
     w.append(inputs)
-    ds = cat.open("d")
+    ds = cat.open("d_" + encoding)
     # skew_partitions=8: automatic SkewJoinP decisions exercise the
     # whole compile path even though local evaluation is placement-free
     svc = QueryService(TYPES, catalog=CATALOG, skew_partitions=8)
     prog = N.Program([N.Assignment("Q", q)])
     out = svc.execute_stored(prog, ds)
+    return svc.unshred_stored(prog, ds, out, "Q")
+
+
+def run_stored_streamed(q, inputs, tmpdir):
+    """Morsel-streamed lane: tiny chunks + a tiny morsel budget force a
+    multi-morsel stream whenever the dataset allows it. Returns None
+    when the program/dataset pair deterministically refuses to stream
+    (StreamingUnsupportedError) — the caller then only checks the
+    documented fallback contract."""
+    from repro.errors import StreamingUnsupportedError
+    from repro.serve import QueryService
+    from repro.storage import StorageCatalog
+    cat = StorageCatalog(tmpdir)
+    w = cat.writer("dm", TYPES, chunk_rows=4)
+    w.append(inputs)
+    ds = cat.open("dm")
+    svc = QueryService(TYPES, catalog=CATALOG)
+    prog = N.Program([N.Assignment("Q", q)])
+    try:
+        out = svc.execute_stored_streaming(prog, ds, morsel_rows=4,
+                                           root="Ord")
+    except StreamingUnsupportedError:
+        return None
     return svc.unshred_stored(prog, ds, out, "Q")
 
 
@@ -200,6 +229,44 @@ def test_differential_stored(spec):
     direct = I.eval_expr(q, inputs)
     with tempfile.TemporaryDirectory() as td:
         assert equal(direct, run_stored(q, inputs, td)), spec
+
+
+# ---------------------------------------------------------------------------
+# second tier: compressed storage and morsel streaming
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(spec_st())
+def test_differential_compressed_storage(spec):
+    """raw-written and auto-encoded datasets must serve identical
+    results: compression is a storage-layer concern that query
+    execution can never observe."""
+    q = build_query(spec)
+    inputs = gen_inputs(spec)
+    direct = I.eval_expr(q, inputs)
+    with tempfile.TemporaryDirectory() as td:
+        raw = run_stored(q, inputs, td, encoding="raw")
+        enc = run_stored(q, inputs, td, encoding="auto")
+        assert equal(direct, raw), ("raw", spec)
+        assert equal(direct, enc), ("auto", spec)
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(spec_st())
+def test_differential_morsel_streamed(spec):
+    q = build_query(spec)
+    inputs = gen_inputs(spec)
+    direct = I.eval_expr(q, inputs)
+    with tempfile.TemporaryDirectory() as td:
+        streamed = run_stored_streamed(q, inputs, td)
+    if streamed is None:
+        # the plan refused to stream; the one-shot path must still work
+        with tempfile.TemporaryDirectory() as td:
+            assert equal(direct, run_stored(q, inputs, td)), spec
+    else:
+        assert equal(direct, streamed), spec
 
 
 # ---------------------------------------------------------------------------

@@ -276,6 +276,37 @@ def test_stored_chunk_fault_rescans_without_skipping(tmp_path):
     assert not r2.ok and isinstance(r2.error, MissingChunkError)
 
 
+def test_corrupt_encoded_blob_fails_typed_not_server(tmp_path):
+    """On-disk corruption inside a compressed blob — real bytes, not an
+    injected fault — must surface through the PR 6 CRC path: the
+    no-skip rescan rung re-reads the same corrupt blob, the query fails
+    with the typed error instead of serving silently wrong data, and
+    the server keeps serving clean datasets."""
+    import os
+    from repro.storage.format import chunk_path
+    svc = QueryService(TD.TYPES, catalog=TD.CATALOG)
+    cat = StorageCatalog(str(tmp_path))
+    spec = dict(SPEC, n_orders=40, sel=None)    # no pred: no skipping
+    inputs = TD.gen_inputs(spec)
+    cat.writer("d", TD.TYPES, chunk_rows=16).append(inputs)
+    ds = cat.open("d")
+    part = ds.parts["Ord__D_oparts"]
+    i, col = next((i, col) for i, c in enumerate(part.meta.chunks)
+                  for col in c.encodings)
+    path = chunk_path(ds.dir, "Ord__D_oparts", col, i)
+    with open(path, "r+b") as f:        # flip the blob's last byte
+        f.seek(-1, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+    rt, _ = make_runtime(svc, verify_reads=True)
+    r = rt.submit(QueryRequest(prog_for(spec), ds))
+    assert not r.ok and isinstance(r.error, ChunkCorruptionError)
+    cat.writer("clean", TD.TYPES, chunk_rows=16).append(inputs)
+    r2 = rt.submit(QueryRequest(prog_for(spec), cat.open("clean")))
+    assert r2.ok
+
+
 # ---------------------------------------------------------------------------
 # crash-recoverable plan cache
 # ---------------------------------------------------------------------------

@@ -277,3 +277,125 @@ def test_jnp_chunked_matches_pallas():
     o1 = rwkv6_pallas(r, k, v, w, u, chunk=8)
     o2 = rwkv6_chunked(r, k, v, w, u, chunk=8)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-4)
+
+
+# -- compressed-chunk decode kernels ------------------------------------------
+
+from repro.kernels.decode import (  # noqa: E402
+    bitunpack_pallas, delta_unpack_pallas, dict_gather_pallas,
+    rle_expand_pallas)
+from repro.storage import encodings as E  # noqa: E402
+
+I64_MIN = np.iinfo(np.int64).min
+I64_MAX = np.iinfo(np.int64).max
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 9), st.integers(0, 4))
+def test_rle_expand_hypothesis(n, max_run, seed):
+    rng = np.random.RandomState(seed)
+    lengths = []
+    while sum(lengths) < n:
+        lengths.append(rng.randint(1, max_run + 1))
+    lengths[-1] -= sum(lengths) - n
+    lengths = np.array([l for l in lengths if l], np.int64)
+    values = rng.randint(I64_MIN, I64_MAX, lengths.size,
+                         dtype=np.int64)
+    ends = np.cumsum(lengths)
+    starts = ends - lengths
+    got = rle_expand_pallas(jnp.asarray(values), jnp.asarray(starts),
+                            jnp.asarray(ends), n, block_n=64,
+                            block_r=32)
+    want = R.rle_expand_ref(jnp.asarray(values), jnp.asarray(starts),
+                            jnp.asarray(ends), n)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert (np.asarray(got) == np.repeat(values, lengths)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 4), st.booleans())
+def test_delta_unpack_hypothesis(n, seed, extreme):
+    rng = np.random.RandomState(seed)
+    if extreme:
+        a = rng.randint(I64_MIN, I64_MAX, n, dtype=np.int64)
+    else:
+        a = np.cumsum(rng.randint(-100, 100, n)).astype(np.int64)
+    enc, blob = E.encode_chunk(a, "delta")
+    z = E.unpack_members(enc, blob)["deltas"].astype(np.uint64)
+    first = np.array([enc["first"]], np.uint64)
+    got = delta_unpack_pallas(jnp.asarray(z), jnp.asarray(first),
+                              block_n=64)
+    want = R.delta_unpack_ref(jnp.asarray(z), jnp.asarray(first))
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert (np.asarray(got) == a).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 16), st.integers(0, 4))
+def test_bitunpack_hypothesis(n, span_bits, seed):
+    rng = np.random.RandomState(seed)
+    a = (-37 + rng.randint(0, (1 << span_bits), n)).astype(np.int64)
+    enc, blob = E.encode_chunk(a, "bitpack")
+    words = E.unpack_members(enc, blob)["words"].astype(np.uint32)
+    got = bitunpack_pallas(jnp.asarray(words), enc["k"], enc["vpw"],
+                           enc["n"], enc["lo"], block_w=32)
+    want = R.bitunpack_ref(jnp.asarray(words), enc["k"], enc["vpw"],
+                           enc["n"], enc["lo"])
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert (np.asarray(got) == a).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 300), st.integers(1, 40), st.integers(0, 4))
+def test_dict_gather_hypothesis(n, card, seed):
+    rng = np.random.RandomState(seed)
+    values = np.unique(rng.randint(I64_MIN, I64_MAX, card,
+                                   dtype=np.int64))
+    codes = rng.randint(0, values.size, n).astype(np.int32)
+    got = dict_gather_pallas(jnp.asarray(values), jnp.asarray(codes),
+                             block_n=64, block_v=16)
+    want = R.dict_gather_ref(jnp.asarray(values), jnp.asarray(codes))
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert (np.asarray(got) == values[codes]).all()
+
+
+def test_decode_kernels_match_numpy_codecs():
+    """kernels.ops wrappers (kernel dispatch layer) == the NumPy codec
+    decode, over every codec on one adversarial array each."""
+    from repro.kernels import ops as K
+    rng = np.random.RandomState(3)
+    rle_a = np.repeat(
+        np.array([I64_MIN, -1, 0, I64_MAX, 7], np.int64), [3, 1, 4, 2, 5])
+    enc, blob = E.encode_chunk(rle_a, "rle")
+    m = E.unpack_members(enc, blob)
+    lengths = m["lengths"].astype(np.int64)
+    ends = np.cumsum(lengths)
+    got = K.rle_expand(jnp.asarray(m["values"]),
+                       jnp.asarray(ends - lengths), jnp.asarray(ends),
+                       int(ends[-1]))
+    assert (np.asarray(got) == rle_a).all()
+
+    da = np.cumsum(rng.randint(-9, 9, 100)).astype(np.int64)
+    enc, blob = E.encode_chunk(da, "delta")
+    got = K.delta_unpack(
+        jnp.asarray(E.unpack_members(enc, blob)["deltas"]
+                    .astype(np.uint64)),
+        jnp.asarray(np.array([enc["first"]], np.uint64)))
+    assert (np.asarray(got) == da).all()
+
+    ba = rng.randint(0, 1000, 77).astype(np.int64)
+    enc, blob = E.encode_chunk(ba, "bitpack")
+    got = K.bitunpack(
+        jnp.asarray(E.unpack_members(enc, blob)["words"]
+                    .astype(np.uint32)),
+        enc["k"], enc["vpw"], enc["n"], enc["lo"])
+    assert (np.asarray(got) == ba).all()
+
+    fa = np.array([0.0, -0.0, np.nan, 2.5], np.float64)[
+        rng.randint(0, 4, 50)]
+    enc, blob = E.encode_chunk(fa, "dict")
+    m = E.unpack_members(enc, blob)
+    got = K.dict_gather(jnp.asarray(m["values"].view(np.int64)),
+                        jnp.asarray(m["codes"].astype(np.int32)))
+    assert (np.asarray(got).view(np.float64).view(np.uint8)
+            == fa.view(np.uint8)).all()

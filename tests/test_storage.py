@@ -742,3 +742,140 @@ def test_append_rolls_back_in_memory_state_on_failure(data, tmp_path,
             assert np.array_equal(np.asarray(bag.data[c]),
                                   np.asarray(env_disk[name].data[c])), \
                 (name, c)
+
+
+# ---------------------------------------------------------------------------
+# compressed chunks (PR 7): format compatibility, fault detection,
+# stats split, morsel planning
+# ---------------------------------------------------------------------------
+
+def test_raw_footer_backward_compat(data, tmp_path):
+    """``encoding="raw"`` writes the pre-compression format exactly —
+    no ``encodings`` descriptors anywhere in the footer — and the
+    current reader loads it bit-identically to an auto-encoded dataset
+    of the same inputs, which must come out strictly smaller on disk."""
+    import json
+    import os
+    from repro.storage.format import dir_bytes
+    cat = StorageCatalog(str(tmp_path))
+    raw = cat.write("raw", data, INPUT_TYPES, chunk_rows=16,
+                    encoding="raw")
+    enc = cat.write("enc", data, INPUT_TYPES, chunk_rows=16)
+    with open(os.path.join(raw.dir, "footer.json")) as f:
+        doc = json.load(f)
+    for pm in doc["parts"].values():
+        for c in pm["chunks"]:
+            assert "encodings" not in c
+    assert any(c.encodings for p in enc.parts.values()
+               for c in p.meta.chunks)
+    env_raw, env_enc = raw.load_env(), enc.load_env()
+    assert set(env_raw) == set(env_enc)
+    for name in env_raw:
+        a, b = env_raw[name], env_enc[name]
+        assert a.capacity == b.capacity
+        for c in a.data:
+            assert np.array_equal(np.asarray(a.data[c]),
+                                  np.asarray(b.data[c])), (name, c)
+        assert np.array_equal(np.asarray(a.valid),
+                              np.asarray(b.valid)), name
+    # the footprint win needs realistic chunks — at 16-row chunks the
+    # npy headers and footer descriptors drown the codec savings
+    raw2 = cat.write("raw2", data, INPUT_TYPES, encoding="raw")
+    enc2 = cat.write("enc2", data, INPUT_TYPES)
+    assert dir_bytes(enc2.dir) < dir_bytes(raw2.dir)
+
+
+def test_corrupt_encoded_blob_detected(data, tmp_path):
+    """A bit flip inside an encoded blob's values member keeps the
+    decoded row count intact, so the plain load stays silent; the
+    footer CRC — computed over the DECODED domain — catches it under
+    ``verify=True``."""
+    import os
+    from repro.errors import ChunkCorruptionError
+    from repro.storage.format import chunk_path
+    cat = StorageCatalog(str(tmp_path))
+    ds = cat.write("cenc", data, INPUT_TYPES, chunk_rows=16)
+    part = ds.parts["Ord__D_oparts"]
+    desc = part.meta.chunks[0].encodings["note"]
+    assert desc["codec"] == "rle"       # constant column
+    blob_size = max(off + count * np.dtype(dts).itemsize
+                    for _, dts, count, off in desc["members"])
+    val_off = next(off for name, _, _, off in desc["members"]
+                   if name == "values")
+    path = chunk_path(ds.dir, "Ord__D_oparts", "note", 0)
+    payload_off = os.path.getsize(path) - blob_size + val_off
+    with open(path, "r+b") as f:        # flip values[0]'s low byte
+        f.seek(payload_off)
+        b = f.read(1)
+        f.seek(payload_off)
+        f.write(bytes([b[0] ^ 0xFF]))
+    part.load()                         # rows agree -> silent
+    with pytest.raises(ChunkCorruptionError):
+        part.load(verify=True)
+
+
+def test_compressed_scan_reads_fewer_bytes_than_it_decodes(data,
+                                                           tmp_path):
+    """The stats split: ``bytes_read`` counts chunk files on disk,
+    ``bytes_decoded`` the logical arrays they expand to. On an
+    auto-encoded dataset the former must be strictly smaller."""
+    cat = StorageCatalog(str(tmp_path))
+    ds = cat.write("sts", data, INPUT_TYPES)    # one chunk per column
+    reset_storage_stats()
+    part = ds.parts["Ord__D_oparts"]
+    part.load()
+    logical = sum(np.dtype(part.meta.dtypes[c]).itemsize
+                  for c in part.meta.dtypes) * part.meta.rows
+    assert STORAGE_STATS["bytes_decoded"] == logical
+    assert STORAGE_STATS["bytes_read"] < STORAGE_STATS["bytes_decoded"]
+    assert STORAGE_STATS["chunks_decoded"] > 0
+
+
+def test_plan_morsels_windows_partition_rows(data, tmp_path):
+    from repro.storage import plan_morsels
+    cat = StorageCatalog(str(tmp_path))
+    ds = cat.write("mp", data, INPUT_TYPES, chunk_rows=8)
+    mp = plan_morsels(ds, "Ord", 16)
+    assert mp.n_morsels >= 3
+    for name in mp.parts:
+        wins = [m[name] for m in mp.morsels]
+        rows = ds.parts[name].meta.rows
+        # contiguous cover of [0, rows)
+        assert wins[0].lo == 0 and wins[-1].hi == rows
+        for a, b in zip(wins, wins[1:]):
+            assert a.hi == b.lo
+        # the pinned capacity class holds every window's chunk rows
+        sizes = [c.rows for c in ds.parts[name].meta.chunks]
+        assert mp.caps[name] >= max(
+            (sum(sizes[i] for i in w.chunks) for w in wins), default=0)
+
+
+def test_plan_morsels_rejects_unstreamable_labels(data, tmp_path):
+    """``write_parts`` persists label values verbatim. Input-shaped
+    bundles (labels = parent rids) stream; combine64-style or shuffled
+    labels must be refused with the typed error rather than streamed
+    into a wrong (partial) answer."""
+    from repro.errors import StreamingUnsupportedError
+    from repro.storage import plan_morsels
+    cat = StorageCatalog(str(tmp_path))
+
+    def write(name, mangle):
+        env = CG.columnar_shred_inputs(data, INPUT_TYPES)
+        child = env["Ord__D_oparts"]
+        child.data["label"] = mangle(
+            np.asarray(child.data["label"]).copy())
+        w = cat.writer(name, INPUT_TYPES, chunk_rows=16)
+        w.write_parts(env)
+        return cat.open(name, refresh=True)
+
+    # labels = parent rids: the bundle is input-shaped and streams
+    ok = write("wp_ok", lambda lab: lab)
+    assert plan_morsels(ok, "Ord", 16).n_morsels >= 3
+    # combine64-style values never cover the parent rid range
+    with pytest.raises(StreamingUnsupportedError):
+        plan_morsels(write("wp_c64", lambda lab: lab << np.int64(32)),
+                     "Ord", 16)
+    # shuffled labels: chunk zone maps overlap / in-chunk order breaks
+    with pytest.raises(StreamingUnsupportedError):
+        plan_morsels(write("wp_shuf", lambda lab: lab[::-1].copy()),
+                     "Ord", 16)
