@@ -4,7 +4,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-slow bench-quick bench serve-smoke storage-smoke \
-	skew-smoke chaos-smoke compress-smoke ci
+	skew-smoke chaos-smoke compress-smoke hypercube-smoke ci
 
 # fast tier: everything except the @slow tests (multi-device
 # subprocesses, hypothesis sweeps) — those run in the second tier
@@ -44,8 +44,13 @@ test-slow:
 # bit-for-bit decode parity with raw storage, zone-map chunk skipping
 # that never pays a decode, and a >=4-morsel out-of-core streamed query
 # matching the one-shot result with zero warm retraces.
+# hypercube-smoke gates the one-round multiway join (DESIGN.md
+# "HyperCube exchange"): a 3-relation Zipf-2.0 chain on 8 virtual
+# devices with parity vs the interpreter, STRICTLY fewer collectives
+# than the binary cascade, receive-load imbalance <= 2.0, and zero
+# retraces when the warm plan serves a new heavy-key set.
 ci: test test-slow bench-quick serve-smoke storage-smoke skew-smoke \
-	chaos-smoke compress-smoke
+	chaos-smoke compress-smoke hypercube-smoke
 
 serve-smoke:
 	$(PY) -m benchmarks.serving --smoke
@@ -61,6 +66,9 @@ skew-smoke:
 
 compress-smoke:
 	$(PY) -m benchmarks.storage --compress-smoke
+
+hypercube-smoke:
+	$(PY) -m benchmarks.hypercube --smoke
 
 # CPU-friendly perf smoke: runs every benchmark section except the
 # 8-virtual-device skew subprocess, fails on any Python exception, and

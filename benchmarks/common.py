@@ -37,7 +37,9 @@ def emit(name: str, us_per_call: float, derived: str = "",
          bytes_read: Optional[int] = None,
          bytes_decoded: Optional[int] = None,
          decode_ms: Optional[float] = None,
-         compression_ratio: Optional[float] = None, **extra):
+         compression_ratio: Optional[float] = None,
+         replication_factor: Optional[float] = None,
+         bytes_replicated: Optional[int] = None, **extra):
     """Emit one benchmark record. ``compile_ms`` / ``warm_ms`` split
     one-time compilation (shredding + plan passes + tracing + XLA) from
     the warm per-call time, so plan-cache wins are visible as separate
@@ -47,7 +49,11 @@ def emit(name: str, us_per_call: float, derived: str = "",
     counts ride in the same trajectory file. ``bytes_read`` (disk I/O)
     vs ``bytes_decoded`` (decompressed logical bytes) expose the
     lightweight-encoding win; ``decode_ms`` is the codec/kernel time
-    inside that read and ``compression_ratio`` = decoded / on-disk."""
+    inside that read and ``compression_ratio`` = decoded / on-disk.
+    ``replication_factor`` / ``bytes_replicated`` are the HyperCube
+    exchange twins (benchmarks/hypercube.py): the worst per-relation
+    fan-out of the replicating shuffle and the extra bytes it shipped
+    beyond a plain hash repartition."""
     line = f"{name},{us_per_call:.1f},{derived}"
     rec = {"section": CURRENT_SECTION, "name": name,
            "us_per_call": round(float(us_per_call), 1),
@@ -76,6 +82,12 @@ def emit(name: str, us_per_call: float, derived: str = "",
     if compression_ratio is not None:
         rec["compression_ratio"] = round(float(compression_ratio), 2)
         line += f",compression_ratio={rec['compression_ratio']}"
+    if replication_factor is not None:
+        rec["replication_factor"] = round(float(replication_factor), 2)
+        line += f",replication_factor={rec['replication_factor']}"
+    if bytes_replicated is not None:
+        rec["bytes_replicated"] = int(bytes_replicated)
+        line += f",bytes_replicated={rec['bytes_replicated']}"
     rec.update(extra)
     ROWS.append(line)
     RECORDS.append(rec)

@@ -5,8 +5,10 @@ writes a machine-readable ``BENCH_<timestamp>.json`` next to the CSV
 output so the perf trajectory is trackable across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-skew]
+    PYTHONPATH=src python -m benchmarks.run --trajectory   # summarize
 """
 import argparse
+import glob
 import json
 import os
 import sys
@@ -16,6 +18,44 @@ import traceback
 from benchmarks import common
 
 
+def trajectory(out_dir: str) -> None:
+    """Summarize the BENCH_<timestamp>.json series already on disk:
+    one line per (section, benchmark) with its us_per_call across
+    runs, oldest -> newest, so cross-PR drift is visible at a
+    glance."""
+    paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
+    if not paths:
+        print(f"# no BENCH_*.json under {out_dir}")
+        return
+    runs = []
+    for p in paths:
+        try:
+            with open(p) as f:
+                runs.append(json.load(f))
+        except (OSError, ValueError):
+            print(f"# skipping unreadable {p}")
+    stamps = [r.get("timestamp", "?") for r in runs]
+    print(f"# {len(runs)} runs: {stamps[0]} .. {stamps[-1]}")
+    series = {}        # (section, name) -> [us or None per run]
+    for i, r in enumerate(runs):
+        for sec, names in r.get("sections", {}).items():
+            for name, rec in names.items():
+                series.setdefault((sec, name),
+                                  [None] * len(runs))[i] = rec
+    print("section,name,us_per_call_series,latest_extras")
+    for (sec, name), recs in sorted(series.items()):
+        us = ["-" if rec is None else f"{rec.get('us_per_call', 0):g}"
+              for rec in recs]
+        last = next(rec for rec in reversed(recs) if rec is not None)
+        extras = ";".join(f"{k}={v}" for k, v in sorted(last.items())
+                          if k not in ("us_per_call", "derived"))
+        print(f"{sec},{name},{'->'.join(us)},{extras}")
+    failed = [(r.get("timestamp"), r.get("failed_sections"))
+              for r in runs if r.get("failed_sections")]
+    if failed:
+        print(f"# runs with failed sections: {failed}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -23,7 +63,13 @@ def main() -> None:
                     help="skip the 8-virtual-device subprocess benchmark")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<timestamp>.json")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="don't run anything: summarize the existing "
+                         "BENCH_*.json series in --out-dir")
     args = ap.parse_args()
+    if args.trajectory:
+        trajectory(args.out_dir)
+        return
     # fail fast on an unwritable destination, not after the full run
     os.makedirs(args.out_dir, exist_ok=True)
 
@@ -65,8 +111,10 @@ def main() -> None:
                      lambda: representation.run(
                          n=5000 if args.quick else 20000)))
     if not args.skip_skew:
-        from benchmarks import skew
+        from benchmarks import hypercube, skew
         sections.append(("skew (Fig.8)", skew.run))
+        sections.append(("hypercube (one-round multiway join)",
+                         lambda: hypercube.run(smoke=args.quick)))
 
     failed = []
     for name, fn in sections:

@@ -43,10 +43,10 @@ from . import interpreter as I
 from . import nrc as N
 from .materialization import Manifest, ShreddedProgram, mat_input_name
 from .plans import ExecSettings, MapP, Plan, ProgramGraph, \
-    annotate_orders, annotate_partitioning, apply_skew_program, \
-    build_program_graph, collect_params, cse_program, dce_program, \
-    eval_plan, prune_program_columns, push_aggregation, push_order, \
-    push_partitioning, required_columns
+    annotate_orders, annotate_partitioning, apply_hypercube_program, \
+    apply_skew_program, build_program_graph, collect_params, \
+    cse_program, dce_program, eval_plan, prune_program_columns, \
+    push_aggregation, push_order, push_partitioning, required_columns
 from .unnesting import Catalog, NestSpec, StandardPlan, compile_flat_query
 
 
@@ -155,7 +155,8 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
                     skew_stats: Optional[dict] = None,
                     skew_mode: str = "auto",
                     skew_partitions: int = 8,
-                    skew_threshold: float = 0.025) -> CompiledProgram:
+                    skew_threshold: float = 0.025,
+                    hypercube_mode: str = "auto") -> CompiledProgram:
     """Compile the assignment sequence into a ProgramGraph.
 
     Per-assignment passes (aggregation/order/partitioning pushdown) run
@@ -171,8 +172,15 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
     statistics predict imbalance over ``skew_partitions`` become
     ``SkewJoinP`` nodes with the heavy-key set lifted as a runtime
     parameter. ``skew_mode="off"`` disables the pass regardless of
-    statistics (the forced-off baseline)."""
+    statistics (the forced-off baseline).
+
+    ``hypercube_mode="auto"`` additionally lets the HyperCube pass
+    rewrite multiway equi-join chains to one-round ``MultiJoinP``
+    exchanges when the statistics predict the replicated single round
+    ships fewer rows than the binary cascade (DESIGN.md "HyperCube
+    exchange"); ``"off"`` keeps the cascade (the comparison baseline)."""
     assert skew_mode in ("auto", "off"), skew_mode
+    assert hypercube_mode in ("auto", "off"), hypercube_mode
     catalog = catalog or Catalog()
     named: List[Tuple[str, Plan]] = []
     roles: Dict[str, str] = {}
@@ -196,6 +204,12 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
             skew_info = apply_skew_program(graph, skew_stats,
                                            n_partitions=skew_partitions,
                                            threshold=skew_threshold)
+        if skew_stats is not None and hypercube_mode == "auto":
+            # after the skew pass: chains absorb SkewJoinP heavy-key
+            # params into per-dimension hypercube spreading, keeping
+            # the same parameter names (warm rebinds stay retrace-free)
+            apply_hypercube_program(graph, skew_stats,
+                                    n_partitions=skew_partitions)
         # annotate last: the pruning pass rebuilds every node, which
         # would discard the EXPLAIN attributes
         for nd in graph.nodes:

@@ -143,6 +143,50 @@ class SkewJoinP(Plan):
 
 
 @dataclass
+class MultiJoinStage:
+    """One build relation of a MultiJoinP: its plan plus the equi-join
+    it contributes (left_on names columns of the accumulated spine)."""
+    plan: Plan
+    left_on: tuple
+    right_on: tuple
+    unique_right: bool = True
+    expansion: float = 1.0
+
+
+@dataclass
+class MultiJoinP(Plan):
+    """One-round multiway equi-join via HyperCube shuffle (Beame/
+    Koutris/Suciu; D-FDB's exchange strategy). ``apply_hypercube_
+    program`` rewrites an inner left-deep chain of JoinP/SkewJoinP into
+    this node when TableStats predict the replicating single-round
+    exchange is cheaper than the binary cascade.
+
+    The device mesh is factored into per-join-attribute hash dimensions
+    (``shares``, product <= P). Every participating relation —
+    ``child`` (the probe spine) plus one per stage — is hashed on the
+    dimensions whose key columns it carries and REPLICATED across the
+    rest, so all stages probe locally after ONE packed collective.
+    ``rel_routes[r]`` lists the routing of relation r (child first) as
+    ``(dim, key_cols, role)`` with role "probe" (spine side of the
+    equality) or "build" (the stage's right side).
+
+    Heavy keys ride along per dimension: ``heavy_params[d]`` names the
+    same runtime parameter the absorbed SkewJoinP carried (or None), so
+    warm rebinds with new heavy-key sets stay zero-retrace. Heavy probe
+    rows spread across their dimension by row index; the matching build
+    rows replicate along it — the SkewJoinP broadcast residual,
+    expressed in hypercube coordinates. Locally (no DistContext) the
+    node degrades to the binary cascade: placement only, bit-for-bit
+    parity."""
+    child: Plan
+    stages: tuple               # MultiJoinStage per join, chain order
+    shares: tuple               # static per-dimension mesh share
+    rel_routes: tuple           # per relation: ((dim, cols, role), ...)
+    heavy_params: tuple         # per dimension: param name or None
+    heavy_defaults: tuple       # per dimension: padded key tuple
+
+
+@dataclass
 class RefP(Plan):
     """Reference to a previously evaluated program node (a named
     assignment or a CSE-extracted shared subplan). Evaluates to the
@@ -215,6 +259,15 @@ def plan_pretty(p: Plan, indent: int = 0) -> str:
                 if k != jnp.iinfo(jnp.int64).max)
         return (f"{pad}SkewJoin[param={p.heavy_param} heavy={n}]\n"
                 f"{plan_pretty(p.join, indent+1)}")
+    if isinstance(p, MultiJoinP):
+        hd = [d for d, h in enumerate(p.heavy_params) if h is not None]
+        mod = f",heavy_dims={hd}" if hd else ""
+        lines = [f"{pad}MultiJoin{{shares={p.shares}{mod}}}",
+                 plan_pretty(p.child, indent + 1)]
+        for st in p.stages:
+            lines.append(f"{pad}  [{st.left_on} = {st.right_on}]")
+            lines.append(plan_pretty(st.plan, indent + 2))
+        return "\n".join(lines)
     return f"{pad}<{type(p).__name__}>"
 
 
@@ -428,6 +481,8 @@ def eval_plan(p: Plan, env: Dict[str, FlatBag],
         left = eval_plan(p.join.left, env, s)
         right = eval_plan(p.join.right, env, s)
         return _exec_skew_join(p, left, right, s)
+    if isinstance(p, MultiJoinP):
+        return _exec_multi_join(p, env, s)
     if isinstance(p, SumAggP):
         child = eval_plan(p.child, env, s)
         _ecount("sum_by")
@@ -520,6 +575,44 @@ def _exec_skew_join(p: SkewJoinP, left: FlatBag, right: FlatBag,
     return s.dist.join(left, right, j.left_on, j.right_on, how=j.how,
                        unique_right=j.unique_right,
                        expansion=j.expansion, heavy_keys=heavy)
+
+
+def _exec_multi_join(p: MultiJoinP, env: Dict[str, FlatBag],
+                     s: ExecSettings) -> FlatBag:
+    """Evaluate a hypercube multiway join. Locally the hypercube is
+    pure placement, so the node degrades to the binary cascade it
+    replaced (the differential parity guarantee). Under a DistContext
+    every relation is scattered to its hypercube slice in one packed
+    replicating collective, then the stages probe locally."""
+    spine = eval_plan(p.child, env, s)
+    rights = [eval_plan(st.plan, env, s) for st in p.stages]
+    if s.dist is None:
+        for st, right in zip(p.stages, rights):
+            _ecount("join")
+            if st.unique_right:
+                spine = X.fk_join(spine, right, st.left_on, st.right_on,
+                                  how="inner", use_kernel=s.use_kernel)
+            else:
+                out_cap = int(max(spine.capacity, right.capacity)
+                              * max(st.expansion, 1.0))
+                spine, _ = X.general_join(
+                    spine, right, st.left_on, st.right_on, out_cap,
+                    how="inner", use_kernel=s.use_kernel)
+        return spine
+    for _ in p.stages:
+        _ecount("join")
+    _ecount("multi_join")
+    heavy = []
+    for name, dflt in zip(p.heavy_params, p.heavy_defaults):
+        if name is None:
+            heavy.append(None)
+        elif s.params is not None and name in s.params:
+            heavy.append(jnp.asarray(s.params[name], jnp.int64))
+        else:
+            heavy.append(jnp.asarray(dflt, jnp.int64))
+    return s.dist.multi_join(spine, rights, p.stages, p.shares,
+                             p.rel_routes, heavy,
+                             use_kernel=s.use_kernel)
 
 
 def _exec_join(p: JoinP, left: FlatBag, right: FlatBag,
@@ -667,6 +760,23 @@ def _pushdown(p: Plan, needed: Optional[set],
     if isinstance(p, SkewJoinP):
         return SkewJoinP(_pushdown(p.join, needed, ref_needs),
                          p.heavy_param, p.heavy_default)
+    if isinstance(p, MultiJoinP):
+        # every relation sees the full needed set plus all join keys;
+        # scans filter to their own alias prefix, so the over-approx
+        # costs nothing (same contract as JoinP pushing both sides)
+        if needed is None:
+            aug = None
+        else:
+            aug = set(needed)
+            for st in p.stages:
+                aug |= set(st.left_on) | set(st.right_on)
+        return MultiJoinP(
+            _pushdown(p.child, aug, ref_needs),
+            tuple(MultiJoinStage(_pushdown(st.plan, aug, ref_needs),
+                                 st.left_on, st.right_on,
+                                 st.unique_right, st.expansion)
+                  for st in p.stages),
+            p.shares, p.rel_routes, p.heavy_params, p.heavy_defaults)
     raise TypeError(type(p).__name__)
 
 
@@ -735,6 +845,16 @@ def _plan_columns(p: Plan) -> Optional[set]:
         return set(p.keys) | set(p.vals)
     if isinstance(p, SkewJoinP):
         return _plan_columns(p.join)
+    if isinstance(p, MultiJoinP):
+        cols = _plan_columns(p.child)
+        if cols is None:
+            return None
+        for st in p.stages:
+            rc = _plan_columns(st.plan)
+            if rc is None:
+                return None
+            cols = cols | rc
+        return cols
     return None
 
 
@@ -793,9 +913,8 @@ def annotate_orders(p: Plan) -> Plan:
     to every node (the fusion tests and plan dumps read these)."""
     p.required_ord = required_order(p)
     p.delivered_ord = delivered_order(p)
-    for attr in ("child", "left", "right", "parent", "join"):
-        if hasattr(p, attr):
-            annotate_orders(getattr(p, attr))
+    for c in _plan_children(p):
+        annotate_orders(c)
     return p
 
 
@@ -856,6 +975,14 @@ def push_order(p: Plan, desired: Optional[tuple] = None) -> Plan:
     if isinstance(p, SkewJoinP):
         return SkewJoinP(push_order(p.join, None), p.heavy_param,
                          p.heavy_default)
+    if isinstance(p, MultiJoinP):
+        return MultiJoinP(
+            push_order(p.child, desired),
+            tuple(MultiJoinStage(push_order(st.plan, tuple(st.right_on)),
+                                 st.left_on, st.right_on,
+                                 st.unique_right, st.expansion)
+                  for st in p.stages),
+            p.shares, p.rel_routes, p.heavy_params, p.heavy_defaults)
     return p
 
 
@@ -926,9 +1053,8 @@ def annotate_partitioning(p: Plan) -> Plan:
     to every node (plan dumps and the shuffle tests read these)."""
     p.required_part = required_partitioning(p)
     p.delivered_part = delivered_partitioning(p)
-    for attr in ("child", "left", "right", "parent", "join"):
-        if hasattr(p, attr):
-            annotate_partitioning(getattr(p, attr))
+    for c in _plan_children(p):
+        annotate_partitioning(c)
     return p
 
 
@@ -996,6 +1122,17 @@ def push_partitioning(p: Plan, desired: Optional[tuple] = None) -> Plan:
     if isinstance(p, SkewJoinP):
         return SkewJoinP(push_partitioning(p.join, None), p.heavy_param,
                          p.heavy_default)
+    if isinstance(p, MultiJoinP):
+        # the hypercube exchange partitions on composite coordinates, so
+        # nothing upstream can pre-place rows and nothing downstream can
+        # rely on a single-key placement: push None everywhere
+        return MultiJoinP(
+            push_partitioning(p.child, None),
+            tuple(MultiJoinStage(push_partitioning(st.plan, None),
+                                 st.left_on, st.right_on,
+                                 st.unique_right, st.expansion)
+                  for st in p.stages),
+            p.shares, p.rel_routes, p.heavy_params, p.heavy_defaults)
     return p
 
 
@@ -1059,7 +1196,10 @@ _CHILD_ATTRS = ("child", "left", "right", "parent", "join")
 
 
 def _plan_children(p: Plan) -> list:
-    return [getattr(p, a) for a in _CHILD_ATTRS if hasattr(p, a)]
+    out = [getattr(p, a) for a in _CHILD_ATTRS if hasattr(p, a)]
+    if isinstance(p, MultiJoinP):
+        out.extend(st.plan for st in p.stages)
+    return out
 
 
 def _walk_plan(p: Plan):
@@ -1212,6 +1352,12 @@ def _plan_sig(p: Plan, canon: _Canon):
         # heavy_default excluded: it is a runtime-parameter binding,
         # structurally irrelevant exactly like N.Param defaults
         return ("skewjoin", _plan_sig(p.join, canon), p.heavy_param)
+    if isinstance(p, MultiJoinP):
+        c = _plan_sig(p.child, canon)
+        sts = tuple((_plan_sig(st.plan, canon), canon.cols(st.left_on),
+                     canon.cols(st.right_on), st.unique_right,
+                     st.expansion) for st in p.stages)
+        return ("multijoin", c, sts, p.shares, p.heavy_params)
     raise TypeError(f"_plan_sig: {type(p).__name__}")
 
 
@@ -1463,6 +1609,11 @@ def collect_plan_params(graph: ProgramGraph) -> Dict[str, object]:
             if isinstance(sub, SkewJoinP):
                 out[sub.heavy_param] = np.asarray(sub.heavy_default,
                                                   dtype=np.int64)
+            elif isinstance(sub, MultiJoinP):
+                for name, dflt in zip(sub.heavy_params,
+                                      sub.heavy_defaults):
+                    if name is not None:
+                        out[name] = np.asarray(dflt, dtype=np.int64)
     return out
 
 
@@ -1509,6 +1660,12 @@ def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
     from . import skew as SK
     mh = max_heavy if max_heavy is not None else SK.MAX_HEAVY
     defaults: Dict[str, object] = {}
+    # one sketch decision AND one lifted parameter per (bag, attr):
+    # shared relations (a dictionary probed by several joins, the same
+    # part under CSE) are consulted once per program compile, and every
+    # join keyed on them rebinds through the SAME __hk<i> name
+    decided: Dict[Tuple[str, str], Optional[object]] = {}
+    param_of: Dict[Tuple[str, str], str] = {}
 
     def probe_heavy(j: JoinP):
         if j.broadcast or j.skew_aware or len(j.left_on) != 1:
@@ -1519,8 +1676,12 @@ def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
         bag = _scan_aliases(j.left).get(head)
         if bag is None:
             return None
-        heavy = SK.stats_heavy_array(stats, bag, attr, n_partitions,
-                                     threshold, mh)
+        key = (bag, attr)
+        if key not in decided:
+            decided[key] = SK.stats_heavy_array(stats, bag, attr,
+                                                n_partitions, threshold,
+                                                mh)
+        heavy = decided[key]
         return None if heavy is None else (bag, attr, heavy)
 
     def lift(j: JoinP):
@@ -1528,12 +1689,15 @@ def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
         if hit is None:
             return None
         bag, attr, heavy = hit
-        name = f"{param_prefix}{len(defaults)}"
-        defaults[name] = (bag, attr, heavy)
+        name = param_of.get((bag, attr))
+        if name is None:
+            name = f"{param_prefix}{len(defaults)}"
+            param_of[(bag, attr)] = name
+            defaults[name] = (bag, attr, heavy)
         return SkewJoinP(j, name, tuple(int(x) for x in heavy))
 
     def rewrite(p: Plan) -> Plan:
-        if isinstance(p, SkewJoinP):
+        if isinstance(p, (SkewJoinP, MultiJoinP)):
             return p            # idempotent: never double-wrap
         if isinstance(p, JoinP):
             p.left = rewrite(p.left)
@@ -1555,6 +1719,163 @@ def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
     for nd in graph.nodes:
         nd.plan = rewrite(nd.plan)
     return defaults
+
+
+# ---------------------------------------------------------------------------
+# HyperCube pass: inner equi-join chains -> one-round MultiJoinP when
+# TableStats say the replicating exchange beats the binary cascade
+# (DESIGN.md "HyperCube exchange")
+# ---------------------------------------------------------------------------
+
+def _peel_join_chain(p: Plan, min_joins: int):
+    """Maximal left-deep chain of directly nested inner JoinP /
+    SkewJoinP under ``p``: returns (base, [(JoinP, heavy_param,
+    heavy_default), ...] innermost-first) or None. Outer joins,
+    broadcast and legacy skew_aware joins break the chain — only the
+    inner hash-exchange cascade is replaceable by one round."""
+    stages = []
+    cur = p
+    while True:
+        hp, hd = None, ()
+        j = cur
+        if isinstance(j, SkewJoinP):
+            hp, hd = j.heavy_param, j.heavy_default
+            j = j.join
+        if not isinstance(j, JoinP) or j.how != "inner" or j.broadcast \
+                or j.skew_aware:
+            break
+        stages.append((j, hp, hd))
+        cur = j.left
+    if len(stages) < min_joins:
+        return None
+    stages.reverse()
+    return cur, stages
+
+
+def _hypercube_rewrite_chain(p: Plan, stats: Dict[str, object],
+                             n_partitions: int, min_joins: int
+                             ) -> Optional["MultiJoinP"]:
+    """Try to rewrite the chain rooted at ``p`` into a MultiJoinP.
+    Conservative: any relation without TableStats, any join key not
+    traceable to a single source relation, or a share assignment whose
+    replicated wire volume exceeds the cascade's leaves the plan
+    untouched."""
+    from . import skew as SK
+    peeled = _peel_join_chain(p, min_joins)
+    if peeled is None:
+        return None
+    base, stages = peeled
+    rels = [base] + [j.right for (j, _, _) in stages]
+    amap: Dict[str, int] = {}
+    rel_bags = []
+    for ri, rp in enumerate(rels):
+        al = _scan_aliases(rp)
+        for alias in al:
+            if alias in amap:
+                return None     # alias reused across relations: bail
+            amap[alias] = ri
+        rel_bags.append(set(al.values()))
+
+    def owner_of(cols) -> Optional[int]:
+        owners = set()
+        for c in cols:
+            head, sep, _ = c.partition(".")
+            if not sep or head not in amap:
+                return None     # derived column: not routable
+            owners.add(amap[head])
+        return owners.pop() if len(owners) == 1 else None
+
+    dim_of: Dict[tuple, int] = {}
+    dim_heavy: List[list] = []
+    stage_dim: List[int] = []
+    for i, (j, hp, hd) in enumerate(stages):
+        o = owner_of(j.left_on)
+        if o is None or o > i:
+            return None         # key must live on the accumulated spine
+        k = (o, tuple(j.left_on))
+        if k not in dim_of:
+            dim_of[k] = len(dim_of)
+            dim_heavy.append([None, ()])
+        d = dim_of[k]
+        stage_dim.append(d)
+        if hp is not None:
+            if dim_heavy[d][0] is None:
+                dim_heavy[d] = [hp, tuple(hd)]
+            elif dim_heavy[d][0] != hp:
+                dim_heavy[d] = [None, ()]   # conflicting params: drop
+
+    routes: List[list] = [[] for _ in rels]
+    for (o, cols), d in dim_of.items():
+        routes[o].append((d, tuple(cols), "probe"))
+    for i, (j, _, _) in enumerate(stages):
+        routes[i + 1].append((stage_dim[i], tuple(j.right_on), "build"))
+
+    rows = []
+    for bags in rel_bags:
+        if not bags:
+            return None
+        rs = []
+        for b in bags:
+            ts = stats.get(b)
+            if ts is None or not hasattr(ts, "rows"):
+                return None
+            rs.append(int(ts.rows))
+        rows.append(max(rs))
+    rel_dim_sets = [tuple(sorted({d for d, _, _ in r})) for r in routes]
+    shares, _load = SK.plan_hypercube_shares(rel_dim_sets, rows,
+                                             n_partitions)
+    if SK.hypercube_send_rows(rel_dim_sets, rows, shares) \
+            > SK.cascade_send_rows(rows):
+        return None             # replication would out-cost the cascade
+    sts = tuple(MultiJoinStage(j.right, tuple(j.left_on),
+                               tuple(j.right_on), j.unique_right,
+                               j.expansion) for (j, _, _) in stages)
+    return MultiJoinP(base, sts, tuple(int(s) for s in shares),
+                      tuple(tuple(r) for r in routes),
+                      tuple(h[0] for h in dim_heavy),
+                      tuple(tuple(h[1]) for h in dim_heavy))
+
+
+def apply_hypercube_program(graph: ProgramGraph, stats: Dict[str, object],
+                            n_partitions: int, min_joins: int = 2) -> int:
+    """Rewrite multiway inner equi-join chains to one-round hypercube
+    ``MultiJoinP`` nodes, program-wide (in place, after the skew pass —
+    SkewJoinP wrappers are absorbed and their heavy-key parameters keep
+    their names, so serving-layer rebinds are untouched). Returns the
+    number of chains rewritten."""
+    count = 0
+
+    def rewrite(p: Plan) -> Plan:
+        nonlocal count
+        if isinstance(p, MultiJoinP):
+            return p
+        mj = _hypercube_rewrite_chain(p, stats, n_partitions, min_joins)
+        if mj is not None:
+            count += 1
+            mj.child = rewrite(mj.child)
+            for st in mj.stages:
+                st.plan = rewrite(st.plan)
+            return mj
+        if isinstance(p, FusedJoinAggP):
+            mj = _hypercube_rewrite_chain(p.join, stats, n_partitions,
+                                          min_joins)
+            if mj is not None:
+                count += 1
+                mj.child = rewrite(mj.child)
+                for st in mj.stages:
+                    st.plan = rewrite(st.plan)
+                # un-fuse: Gamma+ above the one-round join (placement
+                # beats fusion, same trade the skew pass makes)
+                return SumAggP(mj, p.keys, p.vals, p.local_preagg,
+                               p.exchange_on)
+        for attr in _CHILD_ATTRS:
+            if hasattr(p, attr):
+                setattr(p, attr, rewrite(getattr(p, attr)))
+        return p
+
+    for nd in graph.nodes:
+        nd.plan = rewrite(nd.plan)
+    return count
 
 
 # ---------------------------------------------------------------------------

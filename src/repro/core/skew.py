@@ -250,3 +250,96 @@ def stats_heavy_array(stats: Dict[str, TableStats], bag: str, col: str,
     if not ks:
         return None
     return pad_heavy(ks, max_heavy)
+
+
+# ---------------------------------------------------------------------------
+# HyperCube share planning (Beame/Koutris/Suciu one-round multiway joins)
+# ---------------------------------------------------------------------------
+
+def _share_assignments(n_dims: int, P: int):
+    """All per-dimension share vectors (s_0..s_{n-1}) with every s_d >= 1
+    and prod(s_d) <= P. Small for the meshes we target (P <= 64,
+    n_dims <= 4): the enumeration is bounded by the divisor lattice."""
+    out: List[Tuple[int, ...]] = []
+
+    def rec(prefix: List[int], budget: int) -> None:
+        if len(prefix) == n_dims:
+            out.append(tuple(prefix))
+            return
+        s = 1
+        while s <= budget:
+            rec(prefix + [s], budget // s)
+            s += 1
+        # (loop covers every s with prod <= P; non-divisors allowed —
+        # unused coordinates simply idle, which the load term prices in)
+
+    rec([], max(P, 1))
+    return out
+
+
+def plan_hypercube_shares(rel_dims: Sequence[Sequence[int]],
+                          rel_rows: Sequence[int], P: int,
+                          n_dims: Optional[int] = None
+                          ) -> Tuple[Tuple[int, ...], float]:
+    """Pick the hypercube mesh factorization for a multiway equi-join.
+
+    ``rel_dims[r]`` lists the hash dimensions relation ``r`` keys on;
+    ``rel_rows[r]`` its (estimated) row count. The P servers are
+    factored into per-dimension shares (p_0, p_1, ...) with
+    prod <= P; relation r is hashed on its own dimensions and
+    REPLICATED across the missing ones, so its per-server receive load
+    is rows_r / prod_{d in dims_r} p_d. Returns the share vector
+    minimizing the max per-server load (the fair-share bound), with
+    total replicated rows as the tiebreak — degenerate meshes fall out
+    naturally: P == 1 gives all-ones shares, a prime P puts the whole
+    mesh on one dimension, and a tiny relation gets share 1 on its
+    dimensions (it broadcasts, which is exactly the cheap plan)."""
+    if n_dims is None:
+        n_dims = max((max(ds) + 1 for ds in rel_dims if ds), default=0)
+    if n_dims == 0:
+        return (), 0.0
+    best = None
+    for shares in _share_assignments(n_dims, max(int(P), 1)):
+        load = 0.0
+        repl_rows = 0
+        for dims, rows in zip(rel_dims, rel_rows):
+            own = 1
+            for d in dims:
+                own *= shares[d]
+            miss = 1
+            for d in range(n_dims):
+                if d not in dims:
+                    miss *= shares[d]
+            load += rows / own
+            repl_rows += rows * (miss - 1)
+        key = (load, repl_rows, [-s for s in shares])
+        if best is None or key < best[0]:
+            best = (key, shares, load)
+    assert best is not None
+    return best[1], best[2]
+
+
+def hypercube_send_rows(rel_dims: Sequence[Sequence[int]],
+                        rel_rows: Sequence[int],
+                        shares: Sequence[int]) -> int:
+    """Total rows crossing the wire under ``shares`` (each tuple is sent
+    once per replica): sum_r rows_r * prod_{d not in dims_r} p_d."""
+    total = 0
+    for dims, rows in zip(rel_dims, rel_rows):
+        miss = 1
+        for d in range(len(shares)):
+            if d not in dims:
+                miss *= shares[d]
+        total += rows * miss
+    return total
+
+
+def cascade_send_rows(rel_rows: Sequence[int]) -> int:
+    """Wire cost of the binary left-deep cascade the optimizer would
+    otherwise emit: every relation crosses once, and each intermediate
+    (probe-cardinality ~ the spine, rel 0) is re-partitioned for the
+    next join key — (k-1) extra crossings of the spine for k joins."""
+    if len(rel_rows) < 2:
+        return sum(rel_rows)
+    spine = rel_rows[0]
+    return sum(rel_rows) + (len(rel_rows) - 2) * spine

@@ -60,6 +60,13 @@ from . import ops as X
 from .hashing import mix64
 
 
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # shuffle accounting (trace-time host counters, the SORT_STATS analogue)
 # ---------------------------------------------------------------------------
@@ -458,6 +465,176 @@ class DistContext:
         self._add("union_padding_rows", jnp.maximum(target - need, 0))
         return out
 
+    # -- hypercube multiway join (one replicating round, plans.MultiJoinP)
+    def multi_join(self, spine: FlatBag, rights: Sequence[FlatBag],
+                   stages, shares: Sequence[int], rel_routes,
+                   dim_heavy: Sequence[Optional[jnp.ndarray]],
+                   use_kernel: bool = False) -> FlatBag:
+        """One-round multiway equi-join (HyperCube shuffle, DESIGN.md
+        "HyperCube exchange"). The mesh is factored into per-dimension
+        ``shares``; every relation (``spine`` + ``rights``) is hashed on
+        the dimensions it keys (``rel_routes``) and replicated across
+        the rest, all relations ship in ONE packed collective, then the
+        stages probe locally.
+
+        Replication runs over VIRTUAL rows: source row ``i`` fans out to
+        ``repl`` copies, copy ``q`` taking its missing-dimension
+        coordinates from the mixed-radix digits of ``q``. Heavy keys
+        (``dim_heavy[d]``, the runtime SkewJoinP parameter) spread probe
+        rows across their dimension by row index and replicate the
+        matching build rows along it — extra copies of light build rows
+        are masked invalid, so the wire cost stays proportional to the
+        heavy set."""
+        rule = FAULTS.hit("dist.exchange", keys=("__hypercube__",))
+        if rule is not None and rule.kind == "fail":
+            raise ExchangeError("injected hypercube exchange failure")
+        Pn = self.P
+        n_dims = len(shares)
+        shares = [int(s) for s in shares]
+        # the plan's shares were chosen for ``skew_partitions`` servers;
+        # if the runtime axis is smaller, shrink the largest shares
+        # until the coordinate space fits. Exactly-once correctness
+        # needs every hypercube coordinate on its OWN server: folding
+        # distinct coordinates together would co-locate replicated
+        # build copies with one probe row and duplicate join results.
+        while _prod(shares) > Pn:
+            d = max(range(n_dims), key=lambda i: shares[i])
+            shares[d] = max(1, shares[d] - 1)
+        strides = [1] * n_dims
+        for d in range(n_dims - 2, -1, -1):
+            strides[d] = strides[d + 1] * shares[d + 1]
+        hsorted = [None if h is None else jnp.sort(h.astype(jnp.int64))
+                   for h in dim_heavy]
+        bags = [spine] + list(rights)
+        use_k = use_kernel or self.use_kernel
+
+        sends, buckets, lane_n = [], [], []
+        for r, bag in enumerate(bags):
+            route = {int(d): (tuple(cols), role)
+                     for d, cols, role in rel_routes[r]}
+            miss = [d for d in range(n_dims) if d not in route]
+            hrep = [d for d in route
+                    if route[d][1] == "build" and hsorted[d] is not None]
+            rep_dims = miss + hrep
+            repl = 1
+            for d in rep_dims:
+                repl *= shares[d]
+            cap = bag.capacity
+            V = cap * repl
+            vi = jnp.arange(V, dtype=jnp.int32)
+            src = vi // repl
+            # mixed-radix replica coordinates for the replicated dims
+            qc: Dict[int, jnp.ndarray] = {}
+            rem = vi % repl
+            for d in reversed(rep_dims):
+                qc[d] = rem % shares[d]
+                rem = rem // shares[d]
+            ok = bag.valid[src]
+            dest = jnp.zeros(V, jnp.int32)
+            for d in range(n_dims):
+                sd = shares[d]
+                if d in route:
+                    cols, role = route[d]
+                    key = X.pack_keys(bag, cols)
+                    ch = (mix64(key) % sd).astype(jnp.int32)
+                    hv = hsorted[d]
+                    if role == "probe":
+                        if hv is not None:
+                            hm = SK.is_member(key, hv, use_kernel=use_k)
+                            spread = jnp.arange(cap, dtype=jnp.int32) % sd
+                            ch = jnp.where(hm, spread, ch)
+                        coord = ch[src]
+                    else:           # build side of dimension d
+                        if hv is not None:
+                            hm = SK.is_member(key, hv, use_kernel=use_k)
+                            coord = qc[d]   # one copy per coordinate...
+                            # ...heavy rows keep all of them, light rows
+                            # only the hashed one
+                            ok = ok & (hm[src] | (qc[d] == ch[src]))
+                        else:
+                            coord = ch[src]
+                else:
+                    coord = qc[d]
+                dest = dest + coord * strides[d]
+
+            destk = jnp.where(ok, dest, Pn)      # invalid sort last
+            order = jnp.argsort(destk)
+            counts = jax.ops.segment_sum(
+                jnp.ones(V, jnp.int32), destk, num_segments=Pn + 1)[:Pn]
+            offsets = jnp.cumsum(counts) - counts
+            site, bucket = self._size_site(
+                max(int(V * self.cap_factor) // Pn, 1))
+            self._add_max(f"size_need_{site}", jnp.max(counts))
+            recv_c = jax.lax.psum(counts, self.axis)
+            self._add_max(f"part_max_{site}", jnp.max(recv_c))
+            self._add(f"part_rows_{site}", jnp.sum(counts))
+            sent = jnp.sum(jnp.minimum(counts, bucket))
+            self._add("overflow_rows",
+                      jnp.sum(jnp.maximum(counts - bucket, 0)))
+            self._add("shuffle_rows", sent)
+            self._add("shuffle_bytes", sent * bag.row_bytes())
+            # replication observability: actual extra copies crossing
+            # the wire for this relation (static factor in SHUFFLE_STATS,
+            # measured rows/bytes in the device metrics)
+            SHUFFLE_STATS[f"replication_x100_{site}"] = repl * 100
+            n_src = jnp.sum(bag.valid.astype(jnp.int64))
+            n_virt = jnp.sum(ok.astype(jnp.int64))
+            self._add("replicated_rows", n_virt - n_src)
+            self._add("bytes_replicated",
+                      (n_virt - n_src) * bag.row_bytes())
+
+            names = bag.columns
+            mat = jnp.stack(
+                [X._to_i64_bits(bag.data[nm]) for nm in names]
+                + [jnp.ones(cap, jnp.int64)], axis=1)   # validity lane
+            slot = jnp.arange(Pn * bucket)
+            pdest = slot // bucket
+            within = slot % bucket
+            slot_ok = within < counts[pdest]
+            take = order[jnp.clip(offsets[pdest] + within, 0, V - 1)]
+            if use_k:
+                from repro.kernels import ops as kops
+                send = kops.replicate_scatter(mat, take.astype(jnp.int32),
+                                              slot_ok, repl)
+            else:
+                send = jnp.where(slot_ok[:, None], mat[take // repl], 0)
+            sends.append(send)
+            buckets.append(bucket)
+            lane_n.append(len(names) + 1)
+
+        # -- ALL relations in ONE collective ---------------------------
+        l_max = max(lane_n)
+        parts = []
+        for r, send in enumerate(sends):
+            s3 = send.reshape(Pn, buckets[r], lane_n[r])
+            if lane_n[r] < l_max:
+                s3 = jnp.pad(s3, ((0, 0), (0, 0), (0, l_max - lane_n[r])))
+            parts.append(s3)
+        _scount("collectives")
+        _scount("hypercube_exchanges")
+        recv = jax.lax.all_to_all(
+            jnp.concatenate(parts, axis=1), self.axis,
+            split_axis=0, concat_axis=0, tiled=False)
+
+        out_bags = []
+        off = 0
+        for r, bag in enumerate(bags):
+            blk = recv[:, off:off + buckets[r], :].reshape(
+                Pn * buckets[r], l_max)
+            off += buckets[r]
+            names = bag.columns
+            data = {nm: X._from_i64_bits(blk[:, i], bag.data[nm].dtype)
+                    for i, nm in enumerate(names)}
+            out_bags.append(FlatBag(data, blk[:, len(names)] != 0))
+
+        # -- local multiway probe (no further exchanges) ----------------
+        acc = out_bags[0]
+        for st, rb in zip(stages, out_bags[1:]):
+            acc = self._local_join(acc, rb, tuple(st.left_on),
+                                   tuple(st.right_on), "inner",
+                                   st.unique_right, st.expansion)
+        return acc
+
     # -- heavy-key detection (sampled, then gathered) ---------------------
     def heavy_keys(self, bag: FlatBag, key_cols,
                    key: Optional[jnp.ndarray] = None) -> jnp.ndarray:
@@ -536,6 +713,10 @@ def _merge_host_stats(metrics: Dict[str, int],
     metrics["shuffle_collectives"] = stats.get("collectives", 0)
     metrics["exchanges"] = stats.get("exchanges", 0)
     metrics["exchanges_elided"] = stats.get("exchange_elided", 0)
+    metrics["hypercube_exchanges"] = stats.get("hypercube_exchanges", 0)
+    repl = [v for k, v in stats.items() if k.startswith("replication_x100_")]
+    if repl:
+        metrics["replication_factor_x100"] = max(repl)
     return metrics
 
 

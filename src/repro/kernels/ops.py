@@ -22,7 +22,7 @@ from .rwkv6_scan import rwkv6_pallas
 from .segment_fused import segment_sum_first_pallas
 from .segment_reduce import segment_reduce_pallas
 from .shuffle_pack import (member_mask_pallas, pack_rows_pallas,
-                           unpack_cols_pallas)
+                           replicate_scatter_pallas, unpack_cols_pallas)
 
 INTERPRET = True    # CPU container: interpret mode; launcher flips on TPU
 USE_REF = False
@@ -87,6 +87,17 @@ def pack_rows(values: jnp.ndarray, idx: jnp.ndarray,
     if USE_REF:
         return ref.pack_rows_ref(values, idx, ok)
     return pack_rows_pallas(values, idx, ok, interpret=INTERPRET)
+
+
+def replicate_scatter(values: jnp.ndarray, vidx: jnp.ndarray,
+                      ok: jnp.ndarray, repl: int) -> jnp.ndarray:
+    """Hypercube replicating dest-scatter: out[j] = values[vidx[j] //
+    repl] where ok[j] (else 0) — the virtual-row generalization of
+    pack_rows for the one-round multiway-join exchange."""
+    if USE_REF:
+        return ref.replicate_scatter_ref(values, vidx, ok, repl)
+    return replicate_scatter_pallas(values, vidx, ok, repl,
+                                    interpret=INTERPRET)
 
 
 def unpack_cols(buf: jnp.ndarray) -> jnp.ndarray:

@@ -64,6 +64,20 @@ def pack_rows_ref(values: jnp.ndarray, idx: jnp.ndarray,
     return jnp.where(good[:, None], g, 0)
 
 
+def replicate_scatter_ref(values: jnp.ndarray, vidx: jnp.ndarray,
+                          ok: jnp.ndarray, repl: int) -> jnp.ndarray:
+    """Oracle for kernels.shuffle_pack.replicate_scatter: pack_rows over
+    VIRTUAL row ids — slot j receives source row ``vidx[j] // repl``
+    (each source row has ``repl`` virtual replicas, routed to distinct
+    hypercube coordinates). Slots with ``ok`` False or an out-of-range
+    virtual id come back 0."""
+    r = values.shape[0]
+    src = vidx // repl
+    good = ok.astype(bool) & (vidx >= 0) & (src < r)
+    g = values[jnp.clip(src, 0, r - 1)]
+    return jnp.where(good[:, None], g, 0)
+
+
 def unpack_cols_ref(buf: jnp.ndarray) -> jnp.ndarray:
     """Oracle for kernels.shuffle_pack.unpack_cols: (rows, lanes) wire
     buffer to (lanes, rows) contiguous columns."""

@@ -98,6 +98,67 @@ def pack_rows_pallas(values: jnp.ndarray, idx: jnp.ndarray,
     return out[:m]
 
 
+def _repscatter_kernel(idx_ref, ok_ref, val_ref, out_ref, *, block_m,
+                       block_src, repl):
+    rb = pl.program_id(1)           # source-block index (accumulates)
+
+    @pl.when(rb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vidx = idx_ref[...]             # (block_m,) i32 VIRTUAL row per slot
+    ok = ok_ref[...]                # (block_m,) i32 slot is real
+    vals = val_ref[...]             # (block_src, d) int64 lanes
+    # virtual -> source row: the replication divide happens IN the
+    # kernel, so the routing ships one int per slot, not repl of them
+    src = jax.lax.div(vidx, jnp.int32(repl))
+    local = src - rb * block_src
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, block_src), 1)) \
+        & (ok[:, None] != 0) & (vidx[:, None] >= 0)
+    # masked integer sum: exactly one (or zero) contribution per slot
+    out_ref[...] += jnp.sum(
+        jnp.where(onehot[:, :, None], vals[None, :, :], 0), axis=1)
+
+
+def replicate_scatter_pallas(values: jnp.ndarray, vidx: jnp.ndarray,
+                             ok: jnp.ndarray, repl: int,
+                             block_m: int = DEF_BLOCK_M,
+                             block_src: int = DEF_BLOCK_SRC,
+                             interpret: bool = True) -> jnp.ndarray:
+    """out[j, :] = values[vidx[j] // repl, :] where ``ok[j]`` and the
+    source row is in range, else 0 — pack_rows generalized to the
+    hypercube's replicating exchange, where each source row fans out to
+    ``repl`` virtual replicas routed to distinct mesh coordinates."""
+    r, d = values.shape
+    m = vidx.shape[0]
+    block_m = min(block_m, m)
+    block_src = min(block_src, r)
+    m_pad = (-m) % block_m
+    r_pad = (-r) % block_src
+    if m_pad:
+        vidx = jnp.pad(vidx, (0, m_pad), constant_values=-1)
+        ok = jnp.pad(ok, (0, m_pad))
+    if r_pad:
+        values = jnp.pad(values, ((0, r_pad), (0, 0)))
+
+    grid = ((m + m_pad) // block_m, (r + r_pad) // block_src)
+    out = pl.pallas_call(
+        functools.partial(_repscatter_kernel, block_m=block_m,
+                          block_src=block_src, repl=int(repl)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m,), lambda mb, rb: (mb,)),
+            pl.BlockSpec((block_m,), lambda mb, rb: (mb,)),
+            pl.BlockSpec((block_src, d), lambda mb, rb: (rb, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda mb, rb: (mb, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + m_pad, d), values.dtype),
+        interpret=interpret,
+    )(vidx.astype(jnp.int32), ok.astype(jnp.int32), values)
+    return out[:m]
+
+
 def _member_kernel(keys_ref, heavy_ref, out_ref):
     keys = keys_ref[...]            # (block_n,) int64 packed keys
     heavy = heavy_ref[...]          # (m,) int64 sorted heavy set

@@ -121,8 +121,10 @@ class QueryService:
                  max_entries: int = 64,
                  skew_mode: str = "auto",
                  skew_threshold: float = 0.025,
-                 skew_partitions: Optional[int] = None):
+                 skew_partitions: Optional[int] = None,
+                 hypercube_mode: str = "auto"):
         assert skew_mode in ("auto", "off"), skew_mode
+        assert hypercube_mode in ("auto", "off"), hypercube_mode
         self.input_types = dict(input_types)
         self.catalog = catalog or Catalog()
         self.settings = settings or ExecSettings()
@@ -131,6 +133,7 @@ class QueryService:
         self.dist_kwargs = dict(dist_kwargs or {})
         self.max_entries = max_entries
         self.skew_mode = skew_mode
+        self.hypercube_mode = hypercube_mode
         self.skew_threshold = skew_threshold
         # imbalance is judged against the partition count queries will
         # actually run over: the mesh size, unless pinned explicitly
@@ -190,18 +193,26 @@ class QueryService:
         """Caller-supplied heavy-key hints as planner statistics: every
         hinted key counts as definitely-heavy (count == rows), so the
         automatic pass inserts a SkewJoinP at exactly the hinted
-        joins."""
-        if not skew_hints or self.skew_mode == "off" \
-                or self.skew_partitions <= 1:
+        joins. On the distributed path, every environment bag also
+        contributes a row estimate (its capacity — already part of the
+        cache key), so the HyperCube share planner can cost multiway
+        chains over in-memory inputs that have no persisted sketches."""
+        if self.skew_mode == "off" or self.skew_partitions <= 1:
+            return None
+        want_hc = self.mesh is not None and self.hypercube_mode == "auto"
+        if not skew_hints and not want_hc:
             return None
         from repro.core.skew import TableStats
         stats = {}
-        for bag, cols in skew_hints.items():
+        if want_hc:
+            for bag, b in env_c.items():
+                stats[bag] = TableStats(rows=b.capacity)
+        for bag, cols in (skew_hints or {}).items():
             rows = env_c[bag].capacity if bag in env_c else 1
-            stats[bag] = TableStats(
-                rows=rows,
-                heavy={col: [(int(k), rows) for k in list(ks)]
-                       for col, ks in cols.items()})
+            ts = stats.get(bag) or TableStats(rows=rows)
+            ts.heavy = {col: [(int(k), rows) for k in list(ks)]
+                        for col, ks in cols.items()}
+            stats[bag] = ts
         return stats
 
     def _skew_binds(self, cp: CG.CompiledProgram,
@@ -282,7 +293,8 @@ class QueryService:
                                 skew_stats=skew_stats,
                                 skew_mode=self.skew_mode,
                                 skew_partitions=self.skew_partitions,
-                                skew_threshold=self.skew_threshold)
+                                skew_threshold=self.skew_threshold,
+                                hypercube_mode=self.hypercube_mode)
         if self.mesh is not None:
             runner, _, _ = CG.compile_program_distributed(
                 cp, env_c, self.mesh,
@@ -439,7 +451,8 @@ class QueryService:
                 skew_stats=self._stored_skew_stats(dataset, skew_hints),
                 skew_mode=self.skew_mode,
                 skew_partitions=self.skew_partitions,
-                skew_threshold=self.skew_threshold)
+                skew_threshold=self.skew_threshold,
+                hypercube_mode=self.hypercube_mode)
             req = storage_requirements(cp, set(dataset.parts))
             # capacities pin to the FULL part's class regardless of the
             # per-call chunk selection, so traced shapes never change
@@ -505,7 +518,8 @@ class QueryService:
                 skew_stats=self._stored_skew_stats(dataset, skew_hints),
                 skew_mode=self.skew_mode,
                 skew_partitions=self.skew_partitions,
-                skew_threshold=self.skew_threshold)
+                skew_threshold=self.skew_threshold,
+                hypercube_mode=self.hypercube_mode)
             req = storage_requirements(cp, set(dataset.parts))
             mp = plan_morsels(dataset, root, morsel_rows)
             folds = morsel_fold(cp.plans, cp.outputs, set(mp.parts))

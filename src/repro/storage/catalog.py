@@ -25,10 +25,10 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core import nrc as N
-from repro.core.plans import (FusedJoinAggP, JoinP, MapP, OuterUnnestP,
-                              Plan, ScanP, SelectP, SkewJoinP, UnionP,
-                              _PrunedScan, col_expr_deps,
-                              scan_keep_attrs)
+from repro.core.plans import (FusedJoinAggP, JoinP, MapP, MultiJoinP,
+                              OuterUnnestP, Plan, ScanP, SelectP,
+                              SkewJoinP, UnionP, _PrunedScan,
+                              col_expr_deps, scan_keep_attrs)
 
 from .reader import StoredDataset
 from .writer import DatasetWriter
@@ -78,6 +78,13 @@ def _collect_sites(p: Plan, preds: List[N.Expr], out: List[_ScanSite]
         # row-set-wise identical to its embedded join (skew only moves
         # rows between partitions), so predicates flow the same way
         _collect_sites(p.join, preds, out)
+        return
+    if isinstance(p, MultiJoinP):
+        # every relation of a hypercube multiway join is inner-joined,
+        # so predicates from above flow to all of them
+        _collect_sites(p.child, preds, out)
+        for st in p.stages:
+            _collect_sites(st.plan, preds, out)
         return
     if isinstance(p, JoinP):
         _collect_sites(p.left, preds, out)

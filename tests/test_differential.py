@@ -55,6 +55,19 @@ CATALOG = Catalog(unique_keys={"Part__F": ("pid",)})
 SHAPES = ("nested_agg", "flat_agg", "nested_map", "nested_join_plain")
 SELS = (None, "qty_ge", "pid_le")
 
+# -- the 3-relation lane (hypercube multiway joins) -------------------------
+SUPP_T = N.bag(N.tuple_t(sid=N.INT, sname=N.INT, fee=N.REAL))
+ORD3_T = N.bag(N.tuple_t(
+    odate=N.INT,
+    oparts=N.bag(N.tuple_t(pid=N.INT, sid=N.INT, qty=N.REAL))))
+TYPES3 = {"Ord": ORD3_T, "Part": PART_T, "Supp": SUPP_T}
+CATALOG3 = Catalog(unique_keys={"Part__F": ("pid",),
+                                "Supp__F": ("sid",)})
+# the duplicate-supplier variant: Supp keys repeat, so the build side
+# goes through general_join (every copy must match exactly once)
+CATALOG3_DUP = Catalog(unique_keys={"Part__F": ("pid",)})
+SHAPES3 = ("flat3_agg", "nested3_agg", "flat3_plain")
+
 
 # ---------------------------------------------------------------------------
 # case construction (plain data in, so the distributed subprocess can
@@ -146,17 +159,108 @@ def spec_st():
             selc=draw(st.integers(1, 4))))()
 
 
+def gen_inputs3(spec):
+    """Plain-data inputs for the 3-relation chain. ``n_supp`` may be 1
+    (one tiny relation); ``dup_supp`` doubles every supplier key with a
+    different fee so the Supp build side is non-unique."""
+    rng = np.random.RandomState(spec["seed"])
+    n_parts, n_supp = spec["n_parts"], spec["n_supp"]
+    orders = []
+    for i in range(spec["n_orders"]):
+        items = []
+        for _ in range(rng.randint(0, 6)):
+            if spec["zipf"] > 0 and rng.rand() < spec["zipf"]:
+                pid = 1 + (spec["seed"] % n_parts)   # one hot key
+            else:
+                pid = int(rng.randint(1, n_parts + 1))
+            items.append({"pid": pid,
+                          "sid": int(rng.randint(1, n_supp + 1)),
+                          "qty": float(rng.randint(1, 5))})
+        orders.append({"odate": 20200100 + i, "oparts": items})
+    parts = [{"pid": i, "pname": 100 + i, "price": float(i % 7 + 1)}
+             for i in range(1, n_parts + 1)]
+    supps = [{"sid": i, "sname": 200 + i, "fee": float(i % 5 + 1)}
+             for i in range(1, n_supp + 1)]
+    if spec["dup_supp"]:
+        supps += [{"sid": i, "sname": 300 + i, "fee": float(i % 3 + 1)}
+                  for i in range(1, n_supp + 1)]
+    return {"Ord": orders, "Part": parts, "Supp": supps}
+
+
+def build_query3(spec) -> N.Expr:
+    """Ord.oparts joins Part on pid AND Supp on sid — a 3-relation
+    equi-join chain sharing the oparts spine (the hypercube shape)."""
+    Ord = N.Var("Ord", ORD3_T)
+    Part = N.Var("Part", PART_T)
+    Supp = N.Var("Supp", SUPP_T)
+
+    def chain(op, body):
+        return N.for_in("p", Part, lambda p:
+            N.IfThen(op.pid.eq(p.pid),
+                N.for_in("s", Supp, lambda s:
+                    N.IfThen(op.sid.eq(s.sid), body(p, s)))))
+
+    shape = spec["shape"]
+    if shape == "flat3_agg":
+        inner = N.for_in("x", Ord, lambda x:
+            N.for_in("op", x.oparts, lambda op:
+                chain(op, lambda p, s: N.Singleton(N.record(
+                    odate=x.odate, total=op.qty * p.price + s.fee)))))
+        return N.SumBy(inner, keys=("odate",), values=("total",))
+    if shape == "nested3_agg":
+        def tops(x):
+            inner = N.for_in("op", x.oparts, lambda op:
+                chain(op, lambda p, s: N.Singleton(N.record(
+                    pname=p.pname, total=op.qty * p.price + s.fee))))
+            return N.SumBy(inner, keys=("pname",), values=("total",))
+        return N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+            odate=x.odate, tops=tops(x))))
+    assert shape == "flat3_plain", shape
+    return N.for_in("x", Ord, lambda x: N.Singleton(N.record(
+        odate=x.odate,
+        items=N.for_in("op", x.oparts, lambda op:
+            chain(op, lambda p, s: N.Singleton(N.record(
+                pname=p.pname, sname=s.sname,
+                v=op.qty * p.price + s.fee)))))))
+
+
+def catalog3(spec) -> Catalog:
+    return CATALOG3_DUP if spec["dup_supp"] else CATALOG3
+
+
+def random_spec3(rng) -> dict:
+    return dict(seed=int(rng.randint(0, 10000)),
+                n_orders=int(rng.randint(3, 12)),
+                n_parts=int(rng.randint(4, 10)),
+                n_supp=int([1, 3, 8][int(rng.randint(0, 3))]),
+                zipf=float([0.0, 0.5, 0.9][int(rng.randint(0, 3))]),
+                shape=SHAPES3[int(rng.randint(0, len(SHAPES3)))],
+                dup_supp=bool(rng.randint(0, 2)))
+
+
+def spec3_st():
+    return st.composite(
+        lambda draw: dict(
+            seed=draw(st.integers(0, 10000)),
+            n_orders=draw(st.integers(3, 12)),
+            n_parts=draw(st.integers(4, 10)),
+            n_supp=draw(st.sampled_from([1, 3, 8])),
+            zipf=draw(st.sampled_from([0.0, 0.5, 0.9])),
+            shape=draw(st.sampled_from(SHAPES3)),
+            dup_supp=draw(st.sampled_from([False, True]))))()
+
+
 def equal(a, b) -> bool:
     return I.bags_equal(a, b, float_digits=12)
 
 
 # -- evaluation paths -------------------------------------------------------
 
-def run_jit(q, inputs):
+def run_jit(q, inputs, types=TYPES, catalog=CATALOG):
     prog = N.Program([N.Assignment("Q", q)])
-    sp = M.shred_program(prog, TYPES, domain_elimination=True)
-    cp = CG.compile_program(sp, CATALOG)
-    env = CG.columnar_shred_inputs(inputs, TYPES)
+    sp = M.shred_program(prog, types, domain_elimination=True)
+    cp = CG.compile_program(sp, catalog)
+    env = CG.columnar_shred_inputs(inputs, types)
     out = CG.jit_program(cp)(env)
     man = sp.manifests["Q"]
     parts = {(): out[man.top], **{p: out[n]
@@ -164,17 +268,18 @@ def run_jit(q, inputs):
     return CG.parts_to_rows(parts, q.ty)
 
 
-def run_stored(q, inputs, tmpdir, encoding="auto"):
+def run_stored(q, inputs, tmpdir, encoding="auto", types=TYPES,
+               catalog=CATALOG):
     from repro.serve import QueryService
     from repro.storage import StorageCatalog
     cat = StorageCatalog(tmpdir)
-    w = cat.writer("d_" + encoding, TYPES, chunk_rows=16,
+    w = cat.writer("d_" + encoding, types, chunk_rows=16,
                    encoding=encoding)
     w.append(inputs)
     ds = cat.open("d_" + encoding)
     # skew_partitions=8: automatic SkewJoinP decisions exercise the
     # whole compile path even though local evaluation is placement-free
-    svc = QueryService(TYPES, catalog=CATALOG, skew_partitions=8)
+    svc = QueryService(types, catalog=catalog, skew_partitions=8)
     prog = N.Program([N.Assignment("Q", q)])
     out = svc.execute_stored(prog, ds)
     return svc.unshred_stored(prog, ds, out, "Q")
@@ -216,6 +321,16 @@ def test_differential_interpreter_vs_jit(spec):
     assert equal(direct, run_jit(q, inputs)), spec
 
 
+@settings(max_examples=6, deadline=None)
+@given(spec3_st())
+def test_differential3_interpreter_vs_jit(spec):
+    q = build_query3(spec)
+    inputs = gen_inputs3(spec)
+    direct = I.eval_expr(q, inputs)
+    assert equal(direct, run_jit(q, inputs, TYPES3, catalog3(spec))), \
+        spec
+
+
 # ---------------------------------------------------------------------------
 # second tier: storage-backed serving
 # ---------------------------------------------------------------------------
@@ -229,6 +344,18 @@ def test_differential_stored(spec):
     direct = I.eval_expr(q, inputs)
     with tempfile.TemporaryDirectory() as td:
         assert equal(direct, run_stored(q, inputs, td)), spec
+
+
+@pytest.mark.slow
+@settings(max_examples=4, deadline=None)
+@given(spec3_st())
+def test_differential3_stored(spec):
+    q = build_query3(spec)
+    inputs = gen_inputs3(spec)
+    direct = I.eval_expr(q, inputs)
+    with tempfile.TemporaryDirectory() as td:
+        assert equal(direct, run_stored(q, inputs, td, types=TYPES3,
+                                        catalog=catalog3(spec))), spec
 
 
 # ---------------------------------------------------------------------------
@@ -335,6 +462,95 @@ def test_differential_distributed_four_paths():
                             "examples": 5}
     res = subprocess.run([sys.executable, "-c", script],
                          capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, \
+        f"STDOUT:{res.stdout}\nSTDERR:{res.stderr}"
+    assert "OK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# second tier: the 3-relation hypercube lane — interpreter vs jit vs
+# storage-backed vs distributed, including degenerate meshes (P=1, a
+# prime share budget P=3 executed on a 1-device mesh, and one tiny
+# relation via n_supp=1) — one subprocess loops all cases
+# ---------------------------------------------------------------------------
+
+_DIST3_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, tempfile
+sys.path.insert(0, %(src)r)
+sys.path.insert(0, %(tests)r)
+import numpy as np
+import repro
+from repro.core import codegen as CG
+from repro.core import interpreter as I
+from repro.core import materialization as M
+from repro.core import nrc as N
+from repro.core.plans import MultiJoinP, _walk_plan
+from repro.exec.dist import device_mesh_1d
+from repro.storage import StorageCatalog, table_stats
+import test_differential as TD
+
+# (share budget, mesh size): the full 8-way hypercube, a PRIME budget
+# folded onto a single device, and the fully degenerate P=1
+CONFIGS = ((8, 8), (3, 1), (1, 1))
+meshes = {p: device_mesh_1d(p) for p in {m for _, m in CONFIGS}}
+rng = np.random.RandomState(20260807)
+multijoins_at_8 = 0
+for case in range(%(examples)d):
+    spec = TD.random_spec3(rng)
+    q = TD.build_query3(spec)
+    inputs = TD.gen_inputs3(spec)
+    cat3 = TD.catalog3(spec)
+    direct = I.eval_expr(q, inputs)
+    assert TD.equal(direct, TD.run_jit(q, inputs, TD.TYPES3, cat3)), \\
+        ("jit", spec)
+    with tempfile.TemporaryDirectory() as td:
+        assert TD.equal(direct, TD.run_stored(
+            q, inputs, td, types=TD.TYPES3, catalog=cat3)), \\
+            ("stored", spec)
+        # distributed: storage-derived statistics drive both the skew
+        # pass and the hypercube share planner
+        cat = StorageCatalog(td)
+        w = cat.writer("d8", TD.TYPES3, chunk_rows=16)
+        w.append(inputs)
+        ds = cat.open("d8")
+        prog = N.Program([N.Assignment("Q", q)])
+        sp = M.shred_program(prog, TD.TYPES3, domain_elimination=True)
+        env0 = CG.columnar_shred_inputs(inputs, TD.TYPES3)
+        man = sp.manifests["Q"]
+        for budget, psize in CONFIGS:
+            cp = CG.compile_program(sp, cat3,
+                                    skew_stats=table_stats(ds),
+                                    skew_partitions=budget)
+            mj = sum(1 for _, p in cp.plans for s in _walk_plan(p)
+                     if isinstance(s, MultiJoinP))
+            if budget == 8:
+                multijoins_at_8 += mj
+            env = {k: b.resize(((b.capacity + 7) // 8) * 8)
+                   for k, b in env0.items()}
+            runner, out, metrics = CG.compile_program_distributed(
+                cp, env, meshes[psize], cap_factor=16.0)
+            parts = {(): out[man.top],
+                     **{p: out[n] for p, n in man.dicts.items()}}
+            assert TD.equal(direct, CG.parts_to_rows(parts, q.ty)), \\
+                ("dist", budget, psize, spec)
+# the sweep must actually exercise the one-round plan, not just
+# cascades that happened to pass
+assert multijoins_at_8 >= 1, "no case lowered through MultiJoinP"
+print("OK %(examples)d cases, multijoins_at_8=" + str(multijoins_at_8))
+"""
+
+
+@pytest.mark.slow
+def test_differential3_hypercube_distributed():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _DIST3_CHILD % {"src": os.path.abspath(src),
+                             "tests": os.path.dirname(
+                                 os.path.abspath(__file__)),
+                             "examples": 4}
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=1800)
     assert res.returncode == 0, \
         f"STDOUT:{res.stdout}\nSTDERR:{res.stderr}"
     assert "OK" in res.stdout

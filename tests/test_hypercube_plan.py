@@ -1,0 +1,338 @@
+"""HyperCube shuffle planning and the one-round multiway join: the
+share-assignment cost model (``skew.plan_hypercube_shares``), the chain
+recognizer / rewriter (``plans.apply_hypercube_program``), the
+``MultiJoinP`` lowering through ``exec.dist.multi_join``, and the
+degenerate cases — P=1 and prime P meshes, a tiny relation (share 1 ==
+broadcast), a replication-dominated star the cost gate must refuse,
+and heavy-key sets absorbed from the skew pass rebinding with zero
+retraces.
+
+Distributed assertions run on a single-device mesh (collective counts
+and trace counts are trace-time host counters); the 8-virtual-device
+wire behavior is covered by the differential suite's subprocess lane
+and ``benchmarks/hypercube.py``."""
+
+import numpy as np
+import pytest
+
+from repro.columnar.table import FlatBag
+from repro.core import codegen as CG
+from repro.core import plans as P
+from repro.core import skew as SK
+from repro.exec import dist as D
+from repro.exec.dist import device_mesh_1d
+
+
+# ---------------------------------------------------------------------------
+# the share planner (cost model)
+# ---------------------------------------------------------------------------
+
+def test_shares_respect_budget_and_chain_shape():
+    """A 2-dim chain with a dominant spine splits the mesh across both
+    dimensions; the product of shares never exceeds P."""
+    rel_dims = [(0, 1), (0,), (1,)]       # spine keys both dims
+    rows = [10000, 100, 100]
+    shares, load = SK.plan_hypercube_shares(rel_dims, rows, 16)
+    assert len(shares) == 2
+    assert shares[0] * shares[1] <= 16
+    assert shares[0] > 1 and shares[1] > 1     # spine splits both ways
+    assert load <= rows[0]                     # strictly better than P=1
+
+
+def test_shares_degenerate_meshes():
+    # P=1: all shares are 1, load is the full input
+    shares, load = SK.plan_hypercube_shares([(0, 1), (0,), (1,)],
+                                            [100, 10, 10], 1)
+    assert shares == (1, 1)
+    # prime P: the whole mesh lands on one dimension (the heavier one)
+    shares, _ = SK.plan_hypercube_shares([(0, 1), (0,), (1,)],
+                                         [10000, 500, 10], 7)
+    assert sorted(shares) == [1, 7]
+    assert shares[0] == 7                  # dim 0 carries the big build
+    # tiny relation: its dimension gets share 1 -> it broadcasts
+    shares, _ = SK.plan_hypercube_shares([(0, 1), (0,), (1,)],
+                                         [10000, 10000, 2], 8)
+    assert shares[1] == 1 and shares[0] == 8
+
+
+def test_send_rows_cost_model():
+    rel_dims = [(0, 1), (0,), (1,)]
+    rows = [1000, 50, 60]
+    hc = SK.hypercube_send_rows(rel_dims, rows, (4, 2))
+    # spine ships once, B replicates over dim1 (x2), C over dim0 (x4)
+    assert hc == 1000 + 50 * 2 + 60 * 4
+    # cascade: all relations once + the spine again per extra join
+    assert SK.cascade_send_rows(rows) == 1110 + 1000
+
+
+# ---------------------------------------------------------------------------
+# plan construction helpers
+# ---------------------------------------------------------------------------
+
+def chain_plan():
+    j1 = P.JoinP(P.ScanP("A", "a"), P.ScanP("B", "b"),
+                 ("a.k",), ("b.k",))
+    return P.JoinP(j1, P.ScanP("C", "c"), ("a.c",), ("c.c",))
+
+
+def chain_env(n=64, seed=0, hot=None):
+    rng = np.random.RandomState(seed)
+    ks = [hot if (hot is not None and rng.rand() < 0.5)
+          else int(rng.randint(0, 16)) for _ in range(n)]
+    A = FlatBag.from_rows(
+        [{"k": k, "v": float(rng.randint(1, 5)), "c": int(rng.randint(0, 8))}
+         for k in ks],
+        {"k": "int", "v": "real", "c": "int"}, capacity=n)
+    B = FlatBag.from_rows(
+        [{"k": i, "w": float(10 * i)} for i in range(16)],
+        {"k": "int", "w": "real"}, capacity=16)
+    C = FlatBag.from_rows(
+        [{"c": i, "z": float(100 * i)} for i in range(8)],
+        {"c": "int", "z": "real"}, capacity=8)
+    return {"A": A, "B": B, "C": C}
+
+
+def chain_stats(n=64, heavy=()):
+    return {"A": SK.TableStats(rows=n, distinct={"k": 16},
+                               heavy={"k": [(int(k), n // 2)
+                                            for k in heavy]}),
+            "B": SK.TableStats(rows=16, distinct={"k": 16}, heavy={}),
+            "C": SK.TableStats(rows=8, distinct={"c": 8}, heavy={})}
+
+
+def rows_of(bag, cols):
+    out = []
+    host = {c: np.asarray(bag.col(c)) for c in cols}
+    for i, ok in enumerate(np.asarray(bag.valid)):
+        if ok:
+            out.append(tuple(host[c][i] for c in cols))
+    return sorted(out)
+
+
+def multi_nodes(plan):
+    return [s for s in P._walk_plan(plan) if isinstance(s, P.MultiJoinP)]
+
+
+# ---------------------------------------------------------------------------
+# recognition / rewrite
+# ---------------------------------------------------------------------------
+
+def test_rewrite_chain_to_multijoin():
+    g = P.build_program_graph([("Q", chain_plan())], outputs=("Q",))
+    n = P.apply_hypercube_program(g, chain_stats(), n_partitions=8)
+    (nd,) = g.nodes
+    (mj,) = multi_nodes(nd.plan)
+    assert n == 1
+    assert len(mj.stages) == 2 and len(mj.shares) == 2
+    # spine probes both dims; each build relation owns exactly one
+    assert [r for _, _, r in mj.rel_routes[0]] == ["probe", "probe"]
+    assert [r for _, _, r in mj.rel_routes[1]] == ["build"]
+    assert "MultiJoin" in P.plan_pretty(nd.plan)
+
+
+def test_single_join_not_rewritten():
+    j = P.JoinP(P.ScanP("A", "a"), P.ScanP("B", "b"), ("a.k",), ("b.k",))
+    g = P.build_program_graph([("Q", j)], outputs=("Q",))
+    assert P.apply_hypercube_program(g, chain_stats(), 8) == 0
+    assert multi_nodes(g.nodes[0].plan) == []
+
+
+def test_outer_join_breaks_chain():
+    j1 = P.JoinP(P.ScanP("A", "a"), P.ScanP("B", "b"),
+                 ("a.k",), ("b.k",), how="left_outer")
+    j2 = P.JoinP(j1, P.ScanP("C", "c"), ("a.c",), ("c.c",))
+    g = P.build_program_graph([("Q", j2)], outputs=("Q",))
+    assert P.apply_hypercube_program(g, chain_stats(), 8) == 0
+
+
+def test_missing_stats_bail():
+    g = P.build_program_graph([("Q", chain_plan())], outputs=("Q",))
+    partial = chain_stats()
+    del partial["C"]
+    assert P.apply_hypercube_program(g, partial, 8) == 0
+
+
+def test_cost_gate_refuses_replication_dominated_star():
+    """Two big build relations on distinct dimensions: any share split
+    replicates one of them massively; the cascade ships less, so the
+    rewrite must not fire."""
+    g = P.build_program_graph([("Q", chain_plan())], outputs=("Q",))
+    stats = {"A": SK.TableStats(rows=10, distinct={}, heavy={}),
+             "B": SK.TableStats(rows=10000, distinct={}, heavy={}),
+             "C": SK.TableStats(rows=10000, distinct={}, heavy={})}
+    assert P.apply_hypercube_program(g, stats, 8) == 0
+
+
+def test_rewrite_idempotent():
+    g = P.build_program_graph([("Q", chain_plan())], outputs=("Q",))
+    assert P.apply_hypercube_program(g, chain_stats(), 8) == 1
+    assert P.apply_hypercube_program(g, chain_stats(), 8) == 0
+
+
+def test_fused_join_agg_unfuses_to_multijoin():
+    agg = P.push_order(P.SumAggP(chain_plan(), keys=("b.w",),
+                                 vals=("a.v",)))
+    assert isinstance(agg, P.FusedJoinAggP)
+    g = P.build_program_graph([("Q", agg)], outputs=("Q",))
+    assert P.apply_hypercube_program(g, chain_stats(), 8) == 1
+    (nd,) = g.nodes
+    assert isinstance(nd.plan, P.SumAggP)
+    assert isinstance(nd.plan.child, P.MultiJoinP)
+
+
+def test_skew_params_absorbed_and_signature_stable():
+    """SkewJoinP wrappers inside the chain dissolve into per-dimension
+    heavy params under the SAME names, and the plan signature is
+    deterministic (CSE-safe)."""
+    g = P.build_program_graph([("Q", chain_plan())], outputs=("Q",))
+    info = P.apply_skew_program(g, chain_stats(heavy=[7]), n_partitions=8)
+    assert list(info) == ["__hk0"]
+    assert P.apply_hypercube_program(g, chain_stats(heavy=[7]), 8) == 1
+    (mj,) = multi_nodes(g.nodes[0].plan)
+    assert "__hk0" in mj.heavy_params
+    assert P.collect_plan_params(g)["__hk0"].shape == (SK.MAX_HEAVY,)
+    g2 = P.build_program_graph([("Q", chain_plan())], outputs=("Q",))
+    P.apply_skew_program(g2, chain_stats(heavy=[7]), n_partitions=8)
+    P.apply_hypercube_program(g2, chain_stats(heavy=[7]), 8)
+    assert P._plan_sig(g.nodes[0].plan, P._Canon()) \
+        == P._plan_sig(g2.nodes[0].plan, P._Canon())
+
+
+def test_shared_relation_sketched_once():
+    """Two joins probing the same (bag, attr): one heavy-key param is
+    decided once and shared (the per-compile stats hoist)."""
+    j1 = P.JoinP(P.ScanP("A", "a"), P.ScanP("B", "b"),
+                 ("a.k",), ("b.k",))
+    j2 = P.JoinP(P.ScanP("A", "a2"), P.ScanP("C", "c"),
+                 ("a2.k",), ("c.c",))
+    g = P.build_program_graph([("Q1", j1), ("Q2", j2)],
+                              outputs=("Q1", "Q2"))
+    info = P.apply_skew_program(g, chain_stats(heavy=[7]), n_partitions=8)
+    assert len(info) == 1          # one param for the shared (A, k)
+    sjs = [s for nd in g.nodes for s in P._walk_plan(nd.plan)
+           if isinstance(s, P.SkewJoinP)]
+    assert len(sjs) == 2
+    assert sjs[0].heavy_param == sjs[1].heavy_param
+
+
+# ---------------------------------------------------------------------------
+# evaluation parity (local + single-device dist + degenerate meshes)
+# ---------------------------------------------------------------------------
+
+COLS = ("a.k", "a.v", "b.w", "c.z")
+
+
+def _rewritten(stats, n_partitions=8, skew=False):
+    g = P.build_program_graph([("Q", chain_plan())], outputs=("Q",))
+    if skew:
+        P.apply_skew_program(g, stats, n_partitions=n_partitions)
+    P.apply_hypercube_program(g, stats, n_partitions=n_partitions)
+    return g
+
+
+def test_local_eval_parity():
+    env = chain_env()
+    want = rows_of(P.eval_plan(chain_plan(), dict(env)), COLS)
+    g = _rewritten(chain_stats())
+    assert multi_nodes(g.nodes[0].plan)
+    got = rows_of(P.eval_plan(g.nodes[0].plan, dict(env)), COLS)
+    assert got == want
+
+
+@pytest.mark.parametrize("n_partitions", [1, 3, 8])
+def test_dist_eval_parity_share_plans(n_partitions):
+    """Share planning at P in {1, prime, 8} all execute correctly on a
+    one-device mesh (the wire layout is P-independent)."""
+    env = chain_env(seed=3)
+    want = rows_of(P.eval_plan(chain_plan(), dict(env)), COLS)
+    g = _rewritten(chain_stats(), n_partitions=n_partitions)
+    (nd,) = g.nodes
+
+    def fn(env_local, ctx, params_local):
+        s = P.ExecSettings(dist=ctx, params=params_local)
+        return {"Q": P.eval_plan(nd.plan, dict(env_local), s)}
+
+    runner, out, m = D.compile_distributed(fn, env, device_mesh_1d(1),
+                                           cap_factor=16.0, params={})
+    assert rows_of(out["Q"], COLS) == want
+    assert m["hypercube_exchanges"] == 1
+    assert m["shuffle_collectives"] == 1      # ONE round for 3 relations
+
+
+def test_dist_heavy_rebind_zero_retraces():
+    """Heavy sets absorbed into hypercube dimensions rebind on the warm
+    runner with zero retraces and unchanged results."""
+    env = chain_env(seed=5, hot=7)
+    want = rows_of(P.eval_plan(chain_plan(), dict(env)), COLS)
+    g = _rewritten(chain_stats(heavy=[7]), skew=True)
+    (nd,) = g.nodes
+    (mj,) = multi_nodes(nd.plan)
+    assert any(h is not None for h in mj.heavy_params)
+    defaults = P.collect_plan_params(g)
+    (name,) = list(defaults)
+
+    def fn(env_local, ctx, params_local):
+        s = P.ExecSettings(dist=ctx, params=params_local)
+        return {"Q": P.eval_plan(nd.plan, dict(env_local), s)}
+
+    CG.reset_trace_stats()
+    runner, out, m = D.compile_distributed(fn, env, device_mesh_1d(1),
+                                           cap_factor=16.0,
+                                           params=defaults)
+    assert rows_of(out["Q"], COLS) == want
+    assert m["replicated_rows"] >= 0
+    t0 = CG.TRACE_STATS.get("traces", 0)
+    for keys in ([3, 9], [], [7, 1, 2]):
+        out2, _ = runner(env, params={name: SK.pad_heavy(keys)})
+        assert rows_of(out2["Q"], COLS) == want, keys
+    assert CG.TRACE_STATS.get("traces", 0) == t0
+
+
+def test_dist_duplicate_build_keys_general_join():
+    """A non-unique build relation (general join stage) keeps exactly
+    the cascade's multiplicity through the replicated round."""
+    rng = np.random.RandomState(2)
+    env = chain_env(seed=2)
+    brows = [{"k": int(rng.randint(0, 16)), "w": float(rng.randint(1, 9))}
+             for _ in range(24)]
+    env["B"] = FlatBag.from_rows(brows, {"k": "int", "w": "real"},
+                                 capacity=24)
+    j1 = P.JoinP(P.ScanP("A", "a"), P.ScanP("B", "b"), ("a.k",),
+                 ("b.k",), unique_right=False, expansion=4.0)
+    j2 = P.JoinP(j1, P.ScanP("C", "c"), ("a.c",), ("c.c",))
+    want = rows_of(P.eval_plan(j2, dict(env)), COLS)
+    stats = chain_stats()
+    stats["B"] = SK.TableStats(rows=24, distinct={"k": 16}, heavy={})
+    g = P.build_program_graph([("Q", P.JoinP(
+        P.JoinP(P.ScanP("A", "a"), P.ScanP("B", "b"), ("a.k",),
+                ("b.k",), unique_right=False, expansion=4.0),
+        P.ScanP("C", "c"), ("a.c",), ("c.c",)))], outputs=("Q",))
+    assert P.apply_hypercube_program(g, stats, 8) == 1
+    (nd,) = g.nodes
+    assert rows_of(P.eval_plan(nd.plan, dict(env)), COLS) == want
+
+    def fn(env_local, ctx, params_local):
+        s = P.ExecSettings(dist=ctx, params=params_local)
+        return {"Q": P.eval_plan(nd.plan, dict(env_local), s)}
+
+    runner, out, _ = D.compile_distributed(fn, env, device_mesh_1d(1),
+                                           cap_factor=16.0, params={})
+    assert rows_of(out["Q"], COLS) == want
+
+
+def test_replication_metrics_surface():
+    """Satellite observability: the one-round exchange reports its
+    replication factor and replicated bytes through the merged metrics."""
+    env = chain_env(seed=1)
+    g = _rewritten(chain_stats())
+    (nd,) = g.nodes
+
+    def fn(env_local, ctx, params_local):
+        s = P.ExecSettings(dist=ctx, params=params_local)
+        return {"Q": P.eval_plan(nd.plan, dict(env_local), s)}
+
+    _, _, m = D.compile_distributed(fn, env, device_mesh_1d(1),
+                                    cap_factor=16.0, params={})
+    assert m["hypercube_exchanges"] == 1
+    assert m["replication_factor_x100"] >= 100
+    assert m["bytes_replicated"] >= 0

@@ -157,6 +157,57 @@ def test_pack_rows_all_masked():
     assert (np.asarray(got) == 0).all()
 
 
+from repro.kernels.shuffle_pack import replicate_scatter_pallas  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 80), st.integers(1, 4),
+       st.integers(1, 6), st.integers(0, 3))
+def test_replicate_scatter_hypothesis(r, m, d, repl, seed):
+    """Hypercube replicating dest-scatter == oracle, bit for bit:
+    virtual ids cover every replica of every source row plus
+    out-of-range on both ends (the -1 pad sentinel included)."""
+    rng = np.random.RandomState(seed)
+    vals = rng.randint(-2 ** 62, 2 ** 62, size=(r, d)).astype(np.int64)
+    vidx = rng.randint(-3, r * repl + 5, m).astype(np.int32)
+    ok = rng.randint(0, 2, m).astype(bool)
+    got = replicate_scatter_pallas(jnp.asarray(vals), jnp.asarray(vidx),
+                                   jnp.asarray(ok), repl,
+                                   block_m=16, block_src=16)
+    want = R.replicate_scatter_ref(jnp.asarray(vals), jnp.asarray(vidx),
+                                   jnp.asarray(ok), repl)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_replicate_scatter_repl_one_matches_pack_rows():
+    """repl=1 degenerates to pack_rows exactly (same routing
+    contract), so the hypercube exchange with no replicated dims costs
+    what the binary exchange costs."""
+    rng = np.random.RandomState(0)
+    vals = rng.randint(-2 ** 62, 2 ** 62, size=(20, 3)).astype(np.int64)
+    idx = rng.randint(-2, 22, 33).astype(np.int32)
+    ok = rng.randint(0, 2, 33).astype(bool)
+    a = replicate_scatter_pallas(jnp.asarray(vals), jnp.asarray(idx),
+                                 jnp.asarray(ok), 1, block_m=8,
+                                 block_src=8)
+    b = pack_rows_pallas(jnp.asarray(vals), jnp.asarray(idx),
+                         jnp.asarray(ok), block_m=8, block_src=8)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_replicate_scatter_each_replica_lands():
+    """Every replica q of source row i is addressable: vidx = i*repl+q
+    gathers row i for all q."""
+    repl, r = 3, 5
+    vals = (jnp.arange(r, dtype=jnp.int64) * 10)[:, None]
+    vidx = jnp.arange(r * repl, dtype=jnp.int32)
+    ok = jnp.ones((r * repl,), bool)
+    got = replicate_scatter_pallas(vals, vidx, ok, repl, block_m=4,
+                                   block_src=4)
+    want = np.repeat(np.arange(r) * 10, repl)[:, None]
+    assert (np.asarray(got) == want).all()
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 70), st.integers(1, 5), st.integers(0, 3))
 def test_unpack_cols_hypothesis(m, d, seed):
