@@ -4,7 +4,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-slow bench-quick bench serve-smoke storage-smoke \
-	skew-smoke chaos-smoke compress-smoke hypercube-smoke ci
+	skew-smoke chaos-smoke compress-smoke hypercube-smoke obs-smoke ci
 
 # fast tier: everything except the @slow tests (multi-device
 # subprocesses, hypothesis sweeps) — those run in the second tier
@@ -49,8 +49,17 @@ test-slow:
 # devices with parity vs the interpreter, STRICTLY fewer collectives
 # than the binary cascade, receive-load imbalance <= 2.0, and zero
 # retraces when the warm plan serves a new heavy-key set.
+# obs-smoke gates the telemetry stack (DESIGN.md "Telemetry and
+# EXPLAIN ANALYZE"): stored-dataset serving with the tracer ON keeps
+# zero warm retraces while the trace tree carries
+# query.execute/compile/decode spans; latency p50 <= p95 <= p99, all
+# finite; a disabled span() costs < ~2us/call; observed rows persist
+# through StatsFeedback into the dataset footer and round-trip as
+# TableStats.effective_rows; and on 8 virtual devices EXPLAIN ANALYZE
+# renders a SkewJoin with shipped rows + receive-load imbalance and
+# the trace tree contains exchange spans from the shard_map region.
 ci: test test-slow bench-quick serve-smoke storage-smoke skew-smoke \
-	chaos-smoke compress-smoke hypercube-smoke
+	chaos-smoke compress-smoke hypercube-smoke obs-smoke
 
 serve-smoke:
 	$(PY) -m benchmarks.serving --smoke
@@ -69,6 +78,9 @@ compress-smoke:
 
 hypercube-smoke:
 	$(PY) -m benchmarks.hypercube --smoke
+
+obs-smoke:
+	$(PY) -m benchmarks.obs --smoke
 
 # CPU-friendly perf smoke: runs every benchmark section except the
 # 8-virtual-device skew subprocess, fails on any Python exception, and

@@ -39,7 +39,12 @@ def emit(name: str, us_per_call: float, derived: str = "",
          decode_ms: Optional[float] = None,
          compression_ratio: Optional[float] = None,
          replication_factor: Optional[float] = None,
-         bytes_replicated: Optional[int] = None, **extra):
+         bytes_replicated: Optional[int] = None,
+         p50_ms: Optional[float] = None,
+         p95_ms: Optional[float] = None,
+         p99_ms: Optional[float] = None,
+         spans: Optional[int] = None,
+         trace_ms: Optional[float] = None, **extra):
     """Emit one benchmark record. ``compile_ms`` / ``warm_ms`` split
     one-time compilation (shredding + plan passes + tracing + XLA) from
     the warm per-call time, so plan-cache wins are visible as separate
@@ -53,7 +58,11 @@ def emit(name: str, us_per_call: float, derived: str = "",
     ``replication_factor`` / ``bytes_replicated`` are the HyperCube
     exchange twins (benchmarks/hypercube.py): the worst per-relation
     fan-out of the replicating shuffle and the extra bytes it shipped
-    beyond a plain hash repartition."""
+    beyond a plain hash repartition. ``p50_ms``/``p95_ms``/``p99_ms``
+    are request-latency percentiles off an ``obs.MetricsRegistry``
+    histogram (serving + obs benchmarks); ``spans`` / ``trace_ms`` are
+    the profiler-trace summary (span count and root wall time) of a
+    telemetry-on run."""
     line = f"{name},{us_per_call:.1f},{derived}"
     rec = {"section": CURRENT_SECTION, "name": name,
            "us_per_call": round(float(us_per_call), 1),
@@ -88,6 +97,17 @@ def emit(name: str, us_per_call: float, derived: str = "",
     if bytes_replicated is not None:
         rec["bytes_replicated"] = int(bytes_replicated)
         line += f",bytes_replicated={rec['bytes_replicated']}"
+    for pname, pval in (("p50_ms", p50_ms), ("p95_ms", p95_ms),
+                        ("p99_ms", p99_ms)):
+        if pval is not None:
+            rec[pname] = round(float(pval), 3)
+            line += f",{pname}={rec[pname]}"
+    if spans is not None:
+        rec["spans"] = int(spans)
+        line += f",spans={rec['spans']}"
+    if trace_ms is not None:
+        rec["trace_ms"] = round(float(trace_ms), 3)
+        line += f",trace_ms={rec['trace_ms']}"
     rec.update(extra)
     ROWS.append(line)
     RECORDS.append(rec)

@@ -42,14 +42,25 @@ def trajectory(out_dir: str) -> None:
             for name, rec in names.items():
                 series.setdefault((sec, name),
                                   [None] * len(runs))[i] = rec
-    print("section,name,us_per_call_series,latest_extras")
+    print("section,name,us_per_call_series,"
+          "p50_ms_series,p95_ms_series,p99_ms_series,latest_extras")
     for (sec, name), recs in sorted(series.items()):
         us = ["-" if rec is None else f"{rec.get('us_per_call', 0):g}"
               for rec in recs]
         last = next(rec for rec in reversed(recs) if rec is not None)
+
+        def pseries(key):
+            # latency-percentile drift, same oldest->newest shape as
+            # us_per_call; benchmarks that don't emit them show "-"
+            vals = ["-" if rec is None or key not in rec
+                    else f"{rec[key]:g}" for rec in recs]
+            return "->".join(vals) if any(v != "-" for v in vals) \
+                else "-"
         extras = ";".join(f"{k}={v}" for k, v in sorted(last.items())
-                          if k not in ("us_per_call", "derived"))
-        print(f"{sec},{name},{'->'.join(us)},{extras}")
+                          if k not in ("us_per_call", "derived",
+                                       "p50_ms", "p95_ms", "p99_ms"))
+        print(f"{sec},{name},{'->'.join(us)},{pseries('p50_ms')},"
+              f"{pseries('p95_ms')},{pseries('p99_ms')},{extras}")
     failed = [(r.get("timestamp"), r.get("failed_sections"))
               for r in runs if r.get("failed_sections")]
     if failed:

@@ -111,11 +111,18 @@ def run(n_orders: int = 2000, invocations: int = 50,
     traces_cold = CG.TRACE_STATS.get("traces", 0)
 
     # -- warm: cache hits, new parameter values ---------------------------
+    # per-invocation latencies feed a log-bucket histogram so the
+    # trajectory tracks tail latency (p95/p99), not just the mean
+    from repro.obs.metrics import MetricsRegistry
+    lat = MetricsRegistry()
     t0 = time.perf_counter()
     for th in thresholds[1:]:
+        ti = time.perf_counter()
         out = svc.execute(family(th), env)
         jax.block_until_ready({k: v.valid for k, v in out.items()})
+        lat.observe("warm_ms", (time.perf_counter() - ti) * 1e3)
     warm_s = (time.perf_counter() - t0) / max(len(thresholds) - 1, 1)
+    pcts = lat.percentiles("warm_ms")
     traces_after = CG.TRACE_STATS.get("traces", 0)
     retraces = traces_after - traces_cold
     qps = 1.0 / warm_s if warm_s > 0 else float("inf")
@@ -125,7 +132,8 @@ def run(n_orders: int = 2000, invocations: int = 50,
     emit("serve_warm", warm_s * 1e6,
          f"n={n_orders};hits={svc.stats['hits']};retraces={retraces};"
          f"qps={qps:.0f}",
-         compile_ms=0.0, warm_ms=warm_s * 1e3)
+         compile_ms=0.0, warm_ms=warm_s * 1e3,
+         p50_ms=pcts["p50"], p95_ms=pcts["p95"], p99_ms=pcts["p99"])
 
     # -- batched invocations (one vmapped computation) --------------------
     B = 8
@@ -177,6 +185,7 @@ def run(n_orders: int = 2000, invocations: int = 50,
         assert retraces == 0, (
             f"warm plan-cache invocations retraced {retraces}x — the "
             f"parameterized cache key is broken")
+        assert pcts["p50"] <= pcts["p95"] <= pcts["p99"], pcts
         assert joins[True] < joins[False], (
             f"CSE did not reduce join evaluations: {joins}")
         assert joins[True] == 1, (

@@ -157,6 +157,16 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
                     skew_partitions: int = 8,
                     skew_threshold: float = 0.025,
                     hypercube_mode: str = "auto") -> CompiledProgram:
+    with _span("compile", kind="plan",
+               assignments=len(sp.program.assignments)):
+        return _compile_program_impl(
+            sp, catalog, optimize, cse, outputs, skew_stats, skew_mode,
+            skew_partitions, skew_threshold, hypercube_mode)
+
+
+def _compile_program_impl(sp, catalog, optimize, cse, outputs, skew_stats,
+                          skew_mode, skew_partitions, skew_threshold,
+                          hypercube_mode) -> CompiledProgram:
     """Compile the assignment sequence into a ProgramGraph.
 
     Per-assignment passes (aggregation/order/partitioning pushdown) run
@@ -241,10 +251,15 @@ def run_flat_program(cp: CompiledProgram, env: Dict[str, FlatBag],
 # whole-program jit executable (the plan-cache unit)
 # ---------------------------------------------------------------------------
 
-TRACE_STATS: Dict[str, int] = {}
-"""Host-side trace counter: incremented INSIDE the program function, so
-it only moves when jax actually (re)traces. Warm plan-cache invocations
-must keep it flat — asserted by `make ci` via the serving smoke."""
+from repro.obs.metrics import REGISTRY as _METRICS
+from repro.obs.trace import span as _span
+
+TRACE_STATS = _METRICS.view("trace")
+"""Host-side trace counter — live view onto the unified metrics
+registry (``repro.obs``) under the ``trace.`` domain. Incremented
+INSIDE the program function, so it only moves when jax actually
+(re)traces. Warm plan-cache invocations must keep it flat — asserted
+by `make ci` via the serving smoke."""
 
 
 def reset_trace_stats() -> None:
@@ -319,14 +334,19 @@ def jit_program(cp: CompiledProgram,
     outputs = tuple(cp.outputs) or tuple(n for n, _ in cp.plans)
 
     def fn(env, params):
+        # both the counter bump and the span are host-side and sit
+        # INSIDE the traced function: they fire once per actual
+        # (re)trace and never on warm calls
         TRACE_STATS["traces"] = TRACE_STATS.get("traces", 0) + 1
-        s = ExecSettings(use_kernel=base.use_kernel,
-                         default_expansion=base.default_expansion,
-                         dist=None, params=params)
-        local = dict(env)
-        for name, plan in cp.plans:
-            local[name] = eval_plan(plan, local, s)
-        return {o: local[o] for o in outputs}
+        with _span("compile", kind="xla_trace", path="local",
+                   plans=len(cp.plans)):
+            s = ExecSettings(use_kernel=base.use_kernel,
+                             default_expansion=base.default_expansion,
+                             dist=None, params=params)
+            local = dict(env)
+            for name, plan in cp.plans:
+                local[name] = eval_plan(plan, local, s)
+            return {o: local[o] for o in outputs}
 
     cfn = jax.jit(fn, donate_argnums=(0,) if donate_env else ()) \
         if jit else fn
@@ -371,12 +391,14 @@ def compile_program_distributed(
 
     def fn(env_local, ctx, params_local):
         TRACE_STATS["traces"] = TRACE_STATS.get("traces", 0) + 1
-        s = ExecSettings(use_kernel=use_kernel, dist=ctx,
-                         params=params_local)
-        local = dict(env_local)
-        for name, plan in cp.plans:
-            local[name] = eval_plan(plan, local, s)
-        return {o: local[o] for o in outs}
+        with _span("compile", kind="xla_trace", path="dist",
+                   plans=len(cp.plans)):
+            s = ExecSettings(use_kernel=use_kernel, dist=ctx,
+                             params=params_local)
+            local = dict(env_local)
+            for name, plan in cp.plans:
+                local[name] = eval_plan(plan, local, s)
+            return {o: local[o] for o in outs}
 
     return D.compile_distributed(fn, env, mesh, use_kernel=use_kernel,
                                  params=defaults, **dist_kwargs)

@@ -340,10 +340,14 @@ def col_expr_deps(e: N.Expr) -> set:
 # evaluation
 # ---------------------------------------------------------------------------
 
-EVAL_STATS: Dict[str, int] = {}
+from repro.obs.metrics import REGISTRY as _METRICS
+
+EVAL_STATS = _METRICS.view("eval")
 """Host-side operator-evaluation counters (trace-time under jit, like
-``exec.ops.SORT_STATS``). The CSE tests assert a shared join subplan
-evaluates exactly once via ``EVAL_STATS['join']``."""
+``exec.ops.SORT_STATS``) — a live view onto the unified metrics
+registry (``repro.obs``) under the ``eval.`` domain. The CSE tests
+assert a shared join subplan evaluates exactly once via
+``EVAL_STATS['join']``."""
 
 
 def reset_eval_stats() -> None:
@@ -351,7 +355,7 @@ def reset_eval_stats() -> None:
 
 
 def _ecount(name: str) -> None:
-    EVAL_STATS[name] = EVAL_STATS.get(name, 0) + 1
+    _METRICS.inc("eval." + name)
 
 
 @dataclass
@@ -365,6 +369,10 @@ class ExecSettings:
     # (parameterized plan-cache execution; None => every Param falls
     # back to its lifted default)
     params: Optional[Dict[str, object]] = None
+    # per-operator recorder for EXPLAIN ANALYZE
+    # (repro.obs.explain.ExplainRecorder; None => no recording, and
+    # eval_plan dispatches straight to the operator body)
+    explain: Optional[object] = None
 
 
 def scan_keep_attrs(keep, alias: str) -> set:
@@ -426,6 +434,17 @@ def _scan(env: Dict[str, FlatBag], name: str, alias: str,
 def eval_plan(p: Plan, env: Dict[str, FlatBag],
               s: Optional[ExecSettings] = None) -> FlatBag:
     s = s or ExecSettings()
+    if s.explain is not None:
+        # EXPLAIN ANALYZE: the recorder wraps every operator evaluation
+        # (timing + metric deltas + row counts) and calls back into
+        # _eval_plan_node; recursive child evaluations re-enter here,
+        # so the whole subtree is recorded
+        return s.explain.record(p, env, s, _eval_plan_node)
+    return _eval_plan_node(p, env, s)
+
+
+def _eval_plan_node(p: Plan, env: Dict[str, FlatBag],
+                    s: ExecSettings) -> FlatBag:
     if isinstance(p, ScanP):
         return _scan(env, p.bag, p.alias, p.with_rowid, params=s.params)
     if isinstance(p, _PrunedScan):
@@ -1819,7 +1838,8 @@ def _hypercube_rewrite_chain(p: Plan, stats: Dict[str, object],
             ts = stats.get(b)
             if ts is None or not hasattr(ts, "rows"):
                 return None
-            rs.append(int(ts.rows))
+            # observed (fed-back) cardinality wins over the estimate
+            rs.append(int(getattr(ts, "effective_rows", ts.rows)))
         rows.append(max(rs))
     rel_dim_sets = [tuple(sorted({d for d, _, _ in r})) for r in routes]
     shares, _load = SK.plan_hypercube_shares(rel_dim_sets, rows,

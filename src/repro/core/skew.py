@@ -204,11 +204,42 @@ class TableStats:
     ``rows`` (total valid rows), ``distinct`` per column (zone-map
     derived upper bound), and per-column heavy-key candidates
     ``heavy[col] = [(key, count_lower_bound), ...]`` from the streaming
-    sketch."""
+    sketch.
+
+    ``meters`` holds *observed* runtime measurements fed back by the
+    telemetry layer (``repro.obs.feedback``): ``rows`` (measured valid
+    rows from an actual execution — capacities and sketches are
+    estimates, this is ground truth) and ``imbalance_x100`` (worst
+    measured receive-load imbalance of the family's exchanges). Plan
+    decisions consume ``effective_rows`` so a re-compile after serving
+    uses measured rather than sketched cardinalities (ROADMAP item 4)."""
     rows: int
     distinct: Dict[str, int] = dc_field(default_factory=dict)
     heavy: Dict[str, List[Tuple[int, int]]] = dc_field(
         default_factory=dict)
+    meters: Dict[str, float] = dc_field(default_factory=dict)
+
+    @property
+    def effective_rows(self) -> int:
+        """Measured rows when the feedback loop has recorded them,
+        the estimate otherwise."""
+        return int(self.meters.get("rows", self.rows))
+
+    def to_json(self) -> dict:
+        return {"rows": int(self.rows),
+                "distinct": {k: int(v) for k, v in self.distinct.items()},
+                "heavy": {c: [[int(k), int(n)] for k, n in ks]
+                          for c, ks in self.heavy.items()},
+                "meters": dict(self.meters)}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TableStats":
+        return cls(rows=int(d.get("rows", 0)),
+                   distinct={k: int(v)
+                             for k, v in d.get("distinct", {}).items()},
+                   heavy={c: [(int(k), int(n)) for k, n in ks]
+                          for c, ks in d.get("heavy", {}).items()},
+                   meters=dict(d.get("meters", {})))
 
 
 def decide_heavy_keys(stats: TableStats, col: str,
@@ -231,8 +262,9 @@ def decide_heavy_keys(stats: TableStats, col: str,
     cand = stats.heavy.get(col)
     if not cand:
         return []
-    need = max(int(threshold * stats.rows),
-               -(-stats.rows // n_partitions), 1)
+    rows = stats.effective_rows if hasattr(stats, "effective_rows") \
+        else stats.rows
+    need = max(int(threshold * rows), -(-rows // n_partitions), 1)
     picked = [k for k, c in sorted(cand, key=lambda vc: (-vc[1], vc[0]))
               if c >= need]
     return picked[:max_heavy]

@@ -71,7 +71,16 @@ def _prod(xs) -> int:
 # shuffle accounting (trace-time host counters, the SORT_STATS analogue)
 # ---------------------------------------------------------------------------
 
-SHUFFLE_STATS: Dict[str, int] = {}
+from repro.obs.metrics import REGISTRY as _METRICS
+from repro.obs.trace import span as _span
+
+SHUFFLE_STATS = _METRICS.view("shuffle")
+"""Shuffle accounting — live view onto the unified metrics registry
+(``repro.obs``) under the ``shuffle.`` domain. Per-site keys
+(``size_used_<n>``, ``replication_x100_<n>``) are written as gauges and
+wiped by every registry reset, so they can no longer leak across runs
+with different mesh sizes (the pytest autouse fixture resets between
+tests; ``compile_distributed`` still resets per attempt)."""
 
 
 def reset_shuffle_stats() -> None:
@@ -79,7 +88,7 @@ def reset_shuffle_stats() -> None:
 
 
 def _scount(name: str, n: int = 1) -> None:
-    SHUFFLE_STATS[name] = SHUFFLE_STATS.get(name, 0) + n
+    _METRICS.inc("shuffle." + name, n)
 
 
 def _roundup8(n: int) -> int:
@@ -136,13 +145,22 @@ class DistContext:
         used = int(default)
         if self.size_plan is not None and site < len(self.size_plan):
             used = int(self.size_plan[site])
-        SHUFFLE_STATS[f"size_used_{site}"] = used
+        _METRICS.set_gauge(f"shuffle.size_used_{site}", used)
         return site, used
 
     # -- exchange (hash repartition) ------------------------------------
     def exchange(self, bag: FlatBag, key_cols: Sequence[str],
                  keep: Optional[jnp.ndarray] = None,
                  key: Optional[jnp.ndarray] = None) -> FlatBag:
+        """Hash-repartition by key (span-traced wrapper; see
+        ``_exchange``). The span fires at trace time — host-side only,
+        so warm jitted calls are untouched."""
+        with _span("exchange", keys=tuple(key_cols), site=self._n_sites):
+            return self._exchange(bag, key_cols, keep, key)
+
+    def _exchange(self, bag: FlatBag, key_cols: Sequence[str],
+                  keep: Optional[jnp.ndarray] = None,
+                  key: Optional[jnp.ndarray] = None) -> FlatBag:
         """Hash-repartition rows by key over the partition axis.
         ``keep`` optionally restricts which rows participate (others are
         dropped — used by skew-aware ops to exchange only light rows);
@@ -310,6 +328,11 @@ class DistContext:
     # -- broadcast (all_gather) -----------------------------------------
     def gather_all(self, bag: FlatBag,
                    keep: Optional[jnp.ndarray] = None) -> FlatBag:
+        with _span("broadcast", cols=bag.columns):
+            return self._gather_all(bag, keep)
+
+    def _gather_all(self, bag: FlatBag,
+                    keep: Optional[jnp.ndarray] = None) -> FlatBag:
         valid = bag.valid if keep is None else (bag.valid & keep)
         self._add("broadcast_bytes",
                   jax.lax.psum(jnp.sum(valid), self.axis)
@@ -470,6 +493,16 @@ class DistContext:
                    stages, shares: Sequence[int], rel_routes,
                    dim_heavy: Sequence[Optional[jnp.ndarray]],
                    use_kernel: bool = False) -> FlatBag:
+        """Span-traced wrapper; see ``_multi_join``."""
+        with _span("exchange", kind="hypercube", shares=tuple(shares),
+                   site=self._n_sites):
+            return self._multi_join(spine, rights, stages, shares,
+                                    rel_routes, dim_heavy, use_kernel)
+
+    def _multi_join(self, spine: FlatBag, rights: Sequence[FlatBag],
+                    stages, shares: Sequence[int], rel_routes,
+                    dim_heavy: Sequence[Optional[jnp.ndarray]],
+                    use_kernel: bool = False) -> FlatBag:
         """One-round multiway equi-join (HyperCube shuffle, DESIGN.md
         "HyperCube exchange"). The mesh is factored into per-dimension
         ``shares``; every relation (``spine`` + ``rights``) is hashed on
@@ -576,7 +609,7 @@ class DistContext:
             # replication observability: actual extra copies crossing
             # the wire for this relation (static factor in SHUFFLE_STATS,
             # measured rows/bytes in the device metrics)
-            SHUFFLE_STATS[f"replication_x100_{site}"] = repl * 100
+            _METRICS.set_gauge(f"shuffle.replication_x100_{site}", repl * 100)
             n_src = jnp.sum(bag.valid.astype(jnp.int64))
             n_virt = jnp.sum(ok.astype(jnp.int64))
             self._add("replicated_rows", n_virt - n_src)

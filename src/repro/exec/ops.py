@@ -51,7 +51,12 @@ I64_MAX = jnp.iinfo(jnp.int64).max
 
 ORDER_AWARE = True   # False => recompute everything per operator (seed mode)
 
-SORT_STATS: Dict[str, int] = {}
+from repro.obs.metrics import REGISTRY as _METRICS  # noqa: E402
+
+SORT_STATS = _METRICS.view("sort")
+"""Sort/key-cache accounting — a live view onto the unified metrics
+registry (``repro.obs``) under the ``sort.`` domain. Behaves like the
+historical dict (item get/set, ``.get``, ``.clear()``)."""
 
 
 def reset_sort_stats() -> None:
@@ -59,7 +64,7 @@ def reset_sort_stats() -> None:
 
 
 def _count(name: str) -> None:
-    SORT_STATS[name] = SORT_STATS.get(name, 0) + 1
+    _METRICS.inc("sort." + name)
 
 
 @contextmanager

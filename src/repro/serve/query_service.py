@@ -60,6 +60,7 @@ from repro.core import nrc as N
 from repro.core.plans import ExecSettings
 from repro.core.unnesting import Catalog
 from repro.errors import CapacityOverflowError
+from repro.obs.trace import span as _span
 
 
 def lift_program(program: N.Program) -> Tuple[N.Program, list]:
@@ -122,7 +123,8 @@ class QueryService:
                  skew_mode: str = "auto",
                  skew_threshold: float = 0.025,
                  skew_partitions: Optional[int] = None,
-                 hypercube_mode: str = "auto"):
+                 hypercube_mode: str = "auto",
+                 feedback: Optional[object] = None):
         assert skew_mode in ("auto", "off"), skew_mode
         assert hypercube_mode in ("auto", "off"), hypercube_mode
         self.input_types = dict(input_types)
@@ -146,6 +148,11 @@ class QueryService:
         # shuffle/overflow metrics of the most recent dist execute —
         # the serving runtime reads receive-load imbalance off these
         self.last_metrics: Optional[dict] = None
+        # optional obs.StatsFeedback: cold compiles measure input rows
+        # into it, dist executes fold receive-load imbalance, and the
+        # planner stats passed to the skew/hypercube passes get the
+        # measured rows overlaid (TableStats.effective_rows)
+        self.feedback = feedback
 
     # -- ingestion helper --------------------------------------------------
     def shred_inputs(self, inputs: Dict[str, list],
@@ -287,6 +294,20 @@ class QueryService:
                  class_caps: Dict[str, int],
                  n_params: int = 0,
                  skew_stats: Optional[dict] = None) -> CacheEntry:
+        if self.feedback is not None:
+            # once per family (the cold path): ground-truth input rows
+            # into the feedback accumulator, then overlay any prior
+            # measurements onto the planner stats for this compile
+            self.feedback.record_env(env_c)
+            skew_stats = self.feedback.apply(skew_stats)
+        with _span("query.compile",
+                   path="dist" if self.mesh is not None else "local",
+                   assignments=len(lifted.assignments)):
+            return self._compile_entry(key, lifted, env_c, class_caps,
+                                       n_params, skew_stats)
+
+    def _compile_entry(self, key, lifted, env_c, class_caps,
+                       n_params, skew_stats) -> CacheEntry:
         sp = M.shred_program(lifted, self.input_types,
                              domain_elimination=self.domain_elim)
         cp = CG.compile_program(sp, self.catalog,
@@ -337,12 +358,21 @@ class QueryService:
             "QueryService.execute received a lazy StorageEnv; pass the "
             "StoredDataset itself (execute / execute_stored), or run "
             "the eager path via codegen.run_flat_program")
+        with _span("query.execute",
+                   path="dist" if self.mesh is not None else "local"):
+            return self._execute(program, env, skew_hints)
+
+    def _execute(self, program: N.Program, env,
+                 skew_hints: Optional[dict]) -> Dict[str, FlatBag]:
         entry, params, env_c = self._lookup(program, env, skew_hints)
         if entry.runner is not None:
             rp = entry.runner.params or {}
             bound = {k: v for k, v in params.items() if k in rp}
             out, metrics = entry.runner(env_c, params=bound)
             self.last_metrics = metrics
+            if self.feedback is not None:
+                self.feedback.record_metrics(
+                    str(entry.key[0]), metrics, self.skew_partitions)
             # a rebind that SHRINKS the warm heavy-key set can push a
             # hot key back through an exchange bucket the adaptive
             # warmup sized without it; the raw runner meters that as
@@ -374,6 +404,12 @@ class QueryService:
         assert self.mesh is None, (
             "execute_many is a local-path feature (vmap over params)")
         self.stats["batch_calls"] += 1
+        with _span("query.execute_many", batch=len(programs)):
+            return self._execute_many(programs, env)
+
+    def _execute_many(self, programs: Sequence[N.Program],
+                      env: Dict[str, FlatBag]
+                      ) -> List[Dict[str, FlatBag]]:
         entry, params0, env_c = self._lookup(programs[0], env)
         binds = [entry.exe.bind(params0)]
         for prog in programs[1:]:
@@ -428,6 +464,8 @@ class QueryService:
             for col, ks in cols.items():
                 ts.heavy[col] = [(int(k), max(rows, 1)) for k in list(ks)]
             stats[bag] = ts
+        if self.feedback is not None:
+            stats = self.feedback.apply(stats)
         return stats
 
     def _lookup_stored(self, program: N.Program, dataset,
@@ -444,22 +482,28 @@ class QueryService:
         if entry is not None:
             self._touch(key, entry)
         else:
-            sp = M.shred_program(lifted, self.input_types,
-                                 domain_elimination=self.domain_elim)
-            cp = CG.compile_program(
-                sp, self.catalog,
-                skew_stats=self._stored_skew_stats(dataset, skew_hints),
-                skew_mode=self.skew_mode,
-                skew_partitions=self.skew_partitions,
-                skew_threshold=self.skew_threshold,
-                hypercube_mode=self.hypercube_mode)
-            req = storage_requirements(cp, set(dataset.parts))
-            # capacities pin to the FULL part's class regardless of the
-            # per-call chunk selection, so traced shapes never change
-            class_caps = {part: _class_capacity(
-                max(dataset.parts[part].rows, 1)) for part in req}
-            entry = self._remember(key, self._local_entry(
-                key, sp, cp, class_caps, len(values), storage_req=req))
+            with _span("query.compile", path="stored",
+                       assignments=len(lifted.assignments)):
+                sp = M.shred_program(
+                    lifted, self.input_types,
+                    domain_elimination=self.domain_elim)
+                cp = CG.compile_program(
+                    sp, self.catalog,
+                    skew_stats=self._stored_skew_stats(dataset,
+                                                       skew_hints),
+                    skew_mode=self.skew_mode,
+                    skew_partitions=self.skew_partitions,
+                    skew_threshold=self.skew_threshold,
+                    hypercube_mode=self.hypercube_mode)
+                req = storage_requirements(cp, set(dataset.parts))
+                # capacities pin to the FULL part's class regardless of
+                # the per-call chunk selection, so traced shapes never
+                # change
+                class_caps = {part: _class_capacity(
+                    max(dataset.parts[part].rows, 1)) for part in req}
+                entry = self._remember(key, self._local_entry(
+                    key, sp, cp, class_caps, len(values),
+                    storage_req=req))
         params = {f"__p{i}": v for i, v in enumerate(values)}
         params.update(self._skew_binds(entry.cp, skew_hints))
         env = dataset.load_env(
@@ -491,9 +535,11 @@ class QueryService:
         (the degraded re-scan after a chunk fault: capacities stay
         pinned, so the full scan reuses the warm executable);
         ``verify=True`` CRC-checks every loaded chunk."""
-        entry, params, env = self._lookup_stored(
-            program, dataset, skew_hints, no_skip=no_skip, verify=verify)
-        return entry.exe(env, params)
+        with _span("query.execute", path="stored", no_skip=no_skip):
+            entry, params, env = self._lookup_stored(
+                program, dataset, skew_hints,
+                no_skip=no_skip, verify=verify)
+            return entry.exe(env, params)
 
     # -- morsel-streamed storage-backed execution --------------------------
     def _lookup_streaming(self, program: N.Program, dataset, root: str,
@@ -561,6 +607,15 @@ class QueryService:
         aggregate over streamed rows below an output root, or the
         dataset's label columns are not monotone parent rids — fall
         back to ``execute_stored``."""
+        with _span("query.execute", path="streaming",
+                   morsel_rows=morsel_rows):
+            return self._execute_stored_streaming(
+                program, dataset, morsel_rows, root, skew_hints,
+                no_skip, verify)
+
+    def _execute_stored_streaming(self, program, dataset, morsel_rows,
+                                  root, skew_hints, no_skip, verify
+                                  ) -> Dict[str, FlatBag]:
         from repro.storage.morsel import load_morsel_window
         if root is None:
             # default: stream the largest input root (by top-part rows)

@@ -53,6 +53,8 @@ from repro.errors import (CapacityOverflowError, CircuitOpenError,
                           DeadlineExceeded, ExchangeError, FooterError,
                           ReproError, ShedError, StorageError)
 from repro.faults import FAULTS
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import span as _span
 
 from .query_service import QueryService
 
@@ -279,14 +281,33 @@ class ServingRuntime:
         self._degraded_families: set = set()
         self.manifest = PlanCacheManifest(manifest_path) \
             if manifest_path else None
-        self.stats: Dict[str, float] = {
+        # counters live in a PER-RUNTIME registry (two runtimes in one
+        # process — e.g. the chaos harness's primary + fallback — must
+        # not share windows); ``stats`` is a dict-compatible view, so
+        # every existing ``rt.stats["ok"]`` call site reads unchanged.
+        # The same registry holds the end-to-end latency histogram
+        # (``serve.latency_ms``) behind ``latency_percentiles()``.
+        self.metrics = MetricsRegistry()
+        self.stats = self.metrics.view("serve")
+        self.stats.update({
             "submitted": 0, "ok": 0, "failed": 0, "retried": 0,
             "shed_quota": 0, "shed_queue": 0, "shed_compile": 0,
             "circuit_open": 0, "deadline_exceeded": 0,
             "degraded_no_skip": 0, "degraded_dist_local": 0,
             "degraded_imbalance": 0, "compiles": 0,
             "injected_evictions": 0, "batches": 0, "coalesced": 0,
-            "replayed": 0, "replay_failed": 0, "backoff_s": 0.0}
+            "replayed": 0, "replay_failed": 0, "backoff_s": 0.0})
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p95/p99 of end-to-end ``submit``/``submit_many`` request
+        latency (ms), from the runtime's own histogram."""
+        ps = self.metrics.percentiles("serve.latency_ms")
+        return {"p50_ms": ps["p50"], "p95_ms": ps["p95"],
+                "p99_ms": ps["p99"]}
+
+    def _observe_latency(self, resp: "QueryResponse") -> None:
+        self.metrics.observe("serve.latency_ms",
+                             float(resp.elapsed) * 1e3)
 
     # -- family identity ----------------------------------------------------
     def family_key(self, req: QueryRequest) -> tuple:
@@ -333,6 +354,12 @@ class ServingRuntime:
     # -- single submission --------------------------------------------------
     def submit(self, req: QueryRequest) -> QueryResponse:
         """Serve one request end to end; ALWAYS returns a response."""
+        with _span("serve.submit", tenant=req.tenant):
+            resp = self._submit(req)
+        self._observe_latency(resp)
+        return resp
+
+    def _submit(self, req: QueryRequest) -> QueryResponse:
         t0 = self.clock()
         self.stats["submitted"] += 1
         try:
@@ -360,6 +387,14 @@ class ServingRuntime:
         bound and the cold-compile budget, then coalesce same-family
         local requests into single ``execute_many`` vmapped dispatches
         and serve the rest individually through the retry ladder."""
+        with _span("serve.submit_many", batch=len(reqs)):
+            out = self._submit_many(reqs)
+        for resp in out:
+            self._observe_latency(resp)
+        return out
+
+    def _submit_many(self, reqs: Sequence[QueryRequest]
+                     ) -> List[QueryResponse]:
         t0 = self.clock()
         out: List[Optional[QueryResponse]] = [None] * len(reqs)
         admitted = []

@@ -178,6 +178,12 @@ class PartMeta:
     # per integer-kind column — the statistics the automatic skew pass
     # reads (optional: absent on datasets written before the field)
     sketches: Dict[str, dict] = dc_field(default_factory=dict)
+    # observed runtime meters fed back by the telemetry layer
+    # (repro.obs.feedback.record_observed_stats): measured rows /
+    # receive imbalance from actual executions, surfaced to planners
+    # through TableStats.meters (optional: absent until serving has
+    # recorded an execution)
+    meters: Dict[str, float] = dc_field(default_factory=dict)
 
     @property
     def rows(self) -> int:
@@ -195,7 +201,8 @@ class PartMeta:
                 else None,
                 "partitioning": list(self.partitioning)
                 if self.partitioning else None,
-                "sketches": self.sketches}
+                "sketches": self.sketches,
+                **({"meters": self.meters} if self.meters else {})}
 
     @staticmethod
     def from_json(d: dict) -> "PartMeta":
@@ -210,7 +217,8 @@ class PartMeta:
             sorted_by=tuple(d["sorted_by"]) if d.get("sorted_by") else None,
             partitioning=tuple(d["partitioning"])
             if d.get("partitioning") else None,
-            sketches=dict(d.get("sketches", {})))
+            sketches=dict(d.get("sketches", {})),
+            meters=dict(d.get("meters", {})))
 
 
 @dataclass

@@ -32,13 +32,18 @@ from . import encodings as E
 from .format import (DatasetMeta, PartMeta, chunk_crc, chunk_may_match,
                      chunk_path, dir_bytes, read_footer)
 
-STORAGE_STATS: Dict[str, int] = {}
-"""Host-side scan counters: ``chunks_read`` / ``chunks_skipped`` (zone
-maps), ``columns_read`` / ``columns_pruned`` (projection pushdown),
-``parts_loaded``, and the byte ledger — ``bytes_read`` is bytes that
-actually came off disk (encoded chunks count their compressed blob,
-NOT the decoded rows), ``bytes_decoded`` / ``chunks_decoded`` /
-``decode_us`` meter the decode stage of encoded chunks."""
+from repro.obs.metrics import REGISTRY as _METRICS
+from repro.obs.trace import span as _span
+
+STORAGE_STATS = _METRICS.view("storage")
+"""Host-side scan counters — live view onto the unified metrics
+registry (``repro.obs``) under the ``storage.`` domain:
+``chunks_read`` / ``chunks_skipped`` (zone maps), ``columns_read`` /
+``columns_pruned`` (projection pushdown), ``parts_loaded``, and the
+byte ledger — ``bytes_read`` is bytes that actually came off disk
+(encoded chunks count their compressed blob, NOT the decoded rows),
+``bytes_decoded`` / ``chunks_decoded`` / ``decode_us`` meter the
+decode stage of encoded chunks."""
 
 DEVICE_DECODE = False
 """When True, encoded chunks decode through the Pallas kernels
@@ -55,7 +60,7 @@ def reset_storage_stats() -> None:
 
 
 def _count(name: str, n: int = 1) -> None:
-    STORAGE_STATS[name] = STORAGE_STATS.get(name, 0) + n
+    _METRICS.inc("storage." + name, n)
 
 
 def _decode_device(enc: dict, blob: np.ndarray) -> np.ndarray:
@@ -153,7 +158,8 @@ class StoredPart:
         for col, sj in self.meta.sketches.items():
             sk = HeavyKeySketch.from_json(sj)
             heavy[col] = [(v, cnt) for v, cnt in sk.counts.items()]
-        return TableStats(rows=self.rows, distinct=distinct, heavy=heavy)
+        return TableStats(rows=self.rows, distinct=distinct, heavy=heavy,
+                          meters=dict(self.meta.meters))
 
     # -- zone-map chunk selection -----------------------------------------
     def select_chunks(self, pred: Optional[N.Expr],
@@ -169,6 +175,12 @@ class StoredPart:
     # -- loading -----------------------------------------------------------
     def _load_chunk(self, col: str, i: int, verify: bool,
                     count: bool = True) -> np.ndarray:
+        with _span("storage.chunk", part=self.meta.name, col=col,
+                   chunk=i):
+            return self._load_chunk_impl(col, i, verify, count)
+
+    def _load_chunk_impl(self, col: str, i: int, verify: bool,
+                         count: bool = True) -> np.ndarray:
         """np-load one chunk with the ``storage.chunk`` fault site,
         the codec decode stage, and integrity checks. A *torn* chunk
         (fewer rows — or a truncated encoded blob — on disk than the
@@ -204,21 +216,25 @@ class StoredPart:
             frac = float(rule.arg) if rule.arg is not None else 0.5
             a = np.asarray(a)[:int(a.shape[0] * frac)]
         if enc is not None:
-            t0 = time.perf_counter()
-            try:
-                a = _decode_device(enc, np.asarray(a)) if DEVICE_DECODE \
-                    else E.decode_chunk(enc, np.asarray(a))
-            except ChunkCorruptionError:
-                raise
-            except Exception as e:
-                raise ChunkCorruptionError(
-                    f"{meta.name}.{col} chunk {i}: {enc.get('codec')} "
-                    f"decode failed ({e!r})") from e
-            if count:
-                _count("decode_us",
-                       int((time.perf_counter() - t0) * 1e6))
-                _count("bytes_decoded", int(a.nbytes))
-                _count("chunks_decoded")
+            with _span("decode", part=meta.name, col=col, chunk=i,
+                       codec=enc.get("codec")):
+                t0 = time.perf_counter()
+                try:
+                    a = _decode_device(enc, np.asarray(a)) \
+                        if DEVICE_DECODE \
+                        else E.decode_chunk(enc, np.asarray(a))
+                except ChunkCorruptionError:
+                    raise
+                except Exception as e:
+                    raise ChunkCorruptionError(
+                        f"{meta.name}.{col} chunk {i}: "
+                        f"{enc.get('codec')} decode failed ({e!r})"
+                    ) from e
+                if count:
+                    _count("decode_us",
+                           int((time.perf_counter() - t0) * 1e6))
+                    _count("bytes_decoded", int(a.nbytes))
+                    _count("chunks_decoded")
         if rule is not None and rule.kind == "corrupt" and a.size:
             # silent bit rot observed by the consumer: flips a byte of
             # the DECODED rows, so the row count survives and only the
@@ -257,6 +273,13 @@ class StoredPart:
             cols = sorted(columns)
         sel = list(range(self.n_chunks)) if chunks is None \
             else sorted(chunks)
+        with _span("storage.load_part", part=meta.name,
+                   columns=tuple(cols), chunks=len(sel),
+                   skipped=self.n_chunks - len(sel)):
+            return self._load_selected(cols, sel, capacity, verify)
+
+    def _load_selected(self, cols, sel, capacity, verify) -> FlatBag:
+        meta = self.meta
         nrows = sum(meta.chunks[i].rows for i in sel)
         cap = capacity if capacity is not None else max(nrows, 1)
         assert cap >= nrows, (

@@ -16,3 +16,17 @@ except ImportError:
 
     sys.modules["hypothesis"] = _hypothesis_shim
     sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _reset_telemetry():
+    """Every test starts from clean metrics + an empty trace buffer —
+    counters no longer leak across tests (the historical per-site
+    SHUFFLE_STATS key leakage), and no test needs a leading
+    ``reset_*_stats()`` call (mid-test re-baselines still do)."""
+    from repro.obs import reset_telemetry
+
+    reset_telemetry()
+    yield

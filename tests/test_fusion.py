@@ -48,7 +48,6 @@ def _pipeline(left, right, use_kernel=False):
 def test_pipeline_sorts_probe_side_exactly_once(use_kernel):
     left, _ = _mk_left()
     right = _mk_right()
-    X.reset_sort_stats()
     fused = _pipeline(left, right, use_kernel=use_kernel)
     assert X.SORT_STATS.get("lexsort", 0) == 1, X.SORT_STATS
     assert X.SORT_STATS.get("sort_skipped", 0) >= 1, X.SORT_STATS
@@ -175,7 +174,6 @@ def test_fused_join_agg_plan_executes_with_one_sort():
     plan = P.push_order(P.SumAggP(join, keys=("l.g", "l.k"),
                                   vals=("l.v", "r.w")))
     assert isinstance(plan, P.FusedJoinAggP)
-    X.reset_sort_stats()
     out = P.eval_plan(plan, env)
     assert X.SORT_STATS.get("lexsort", 0) == 1
     want = {}
@@ -196,7 +194,6 @@ def test_scan_memo_shares_build_cache_across_assignments():
     env = {"L": left, "R": right}
     join = P.JoinP(_scan_plan("L", "l"), _scan_plan("R", "r"),
                    ("l.k",), ("r.k",))
-    X.reset_sort_stats()
     P.eval_plan(join, env)
     P.eval_plan(join, env)   # second assignment scanning the same dict
     assert X.SORT_STATS.get("build_argsort", 0) == 1

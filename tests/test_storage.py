@@ -231,7 +231,6 @@ def test_zone_map_selects_fewer_chunks(dataset):
 def test_pruned_scan_reads_fewer_columns_and_chunks(data, dataset):
     """Acceptance: the storage scan demonstrably reads fewer columns
     and fewer chunks than a full load (counters)."""
-    reset_storage_stats()
     dataset.load_env()
     full = dict(STORAGE_STATS)
     sp, cp = compile_family(40.0)
@@ -272,7 +271,6 @@ def test_run_flat_program_parity_storage_env(data, dataset):
     sp, cp = compile_family(32.0)
     man = sp.manifests["Q"]
     cat = StorageCatalog(dataset.dir.rsplit("/", 1)[0])
-    reset_storage_stats()
     env_lazy = cat.env("shop", cp)
     out_disk = CG.run_flat_program(cp, env_lazy)
     assert STORAGE_STATS["columns_pruned"] > 0    # mfgr / note unread
