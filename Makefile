@@ -4,7 +4,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: test test-slow bench-quick bench serve-smoke storage-smoke \
-	skew-smoke chaos-smoke compress-smoke hypercube-smoke obs-smoke ci
+	skew-smoke chaos-smoke compress-smoke hypercube-smoke obs-smoke \
+	cost-smoke ci
 
 # fast tier: everything except the @slow tests (multi-device
 # subprocesses, hypothesis sweeps) — those run in the second tier
@@ -58,8 +59,14 @@ test-slow:
 # TableStats.effective_rows; and on 8 virtual devices EXPLAIN ANALYZE
 # renders a SkewJoin with shipped rows + receive-load imbalance and
 # the trace tree contains exchange spans from the shard_map region.
+# cost-smoke gates the cost-based optimizer (DESIGN.md "Cost-based
+# planning"): a Zipf-2.0 3-relation chain on 8 virtual devices whose
+# program-written join order is the worst order — parity both modes,
+# the costed order ships STRICTLY fewer rows over the wire, warm
+# QueryService calls stay zero-retrace with estimates in the cache
+# entry, and one EXPLAIN ANALYZE feedback round lands max Q-error <= 4.
 ci: test test-slow bench-quick serve-smoke storage-smoke skew-smoke \
-	chaos-smoke compress-smoke hypercube-smoke obs-smoke
+	chaos-smoke compress-smoke hypercube-smoke obs-smoke cost-smoke
 
 serve-smoke:
 	$(PY) -m benchmarks.serving --smoke
@@ -81,6 +88,9 @@ hypercube-smoke:
 
 obs-smoke:
 	$(PY) -m benchmarks.obs --smoke
+
+cost-smoke:
+	$(PY) -m benchmarks.cost --smoke
 
 # CPU-friendly perf smoke: runs every benchmark section except the
 # 8-virtual-device skew subprocess, fails on any Python exception, and

@@ -122,10 +122,12 @@ def main() -> None:
                      lambda: representation.run(
                          n=5000 if args.quick else 20000)))
     if not args.skip_skew:
-        from benchmarks import hypercube, skew
+        from benchmarks import cost, hypercube, skew
         sections.append(("skew (Fig.8)", skew.run))
         sections.append(("hypercube (one-round multiway join)",
                          lambda: hypercube.run(smoke=args.quick)))
+        sections.append(("cost (cost-based optimizer)",
+                         lambda: cost.run(smoke=args.quick)))
 
     failed = []
     for name, fn in sections:

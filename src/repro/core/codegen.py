@@ -128,6 +128,11 @@ class CompiledProgram:
     # serving layer can rebind fresh heavy-key sets on warm calls
     skew_params: Dict[str, Tuple[str, str]] = dc_field(
         default_factory=dict)
+    # cost-based planning (cost_mode="auto"): per-node root-row
+    # estimates, keyed by node name — snapshotted into the serving
+    # plan-cache entry so warm rebinds never re-estimate (host-side
+    # only; estimates never enter a traced computation)
+    estimates: Dict[str, Optional[int]] = dc_field(default_factory=dict)
 
     def pretty(self) -> str:
         from .plans import plan_pretty
@@ -156,17 +161,22 @@ def compile_program(sp: ShreddedProgram, catalog: Optional[Catalog] = None,
                     skew_mode: str = "auto",
                     skew_partitions: int = 8,
                     skew_threshold: float = 0.025,
-                    hypercube_mode: str = "auto") -> CompiledProgram:
+                    hypercube_mode: str = "auto",
+                    cost_mode: str = "off",
+                    observed_rows: Optional[dict] = None
+                    ) -> CompiledProgram:
     with _span("compile", kind="plan",
                assignments=len(sp.program.assignments)):
         return _compile_program_impl(
             sp, catalog, optimize, cse, outputs, skew_stats, skew_mode,
-            skew_partitions, skew_threshold, hypercube_mode)
+            skew_partitions, skew_threshold, hypercube_mode, cost_mode,
+            observed_rows)
 
 
 def _compile_program_impl(sp, catalog, optimize, cse, outputs, skew_stats,
                           skew_mode, skew_partitions, skew_threshold,
-                          hypercube_mode) -> CompiledProgram:
+                          hypercube_mode, cost_mode="off",
+                          observed_rows=None) -> CompiledProgram:
     """Compile the assignment sequence into a ProgramGraph.
 
     Per-assignment passes (aggregation/order/partitioning pushdown) run
@@ -188,9 +198,24 @@ def _compile_program_impl(sp, catalog, optimize, cse, outputs, skew_stats,
     rewrite multiway equi-join chains to one-round ``MultiJoinP``
     exchanges when the statistics predict the replicated single round
     ships fewer rows than the binary cascade (DESIGN.md "HyperCube
-    exchange"); ``"off"`` keeps the cascade (the comparison baseline)."""
+    exchange"); ``"off"`` keeps the cascade (the comparison baseline).
+
+    ``cost_mode="auto"`` turns on cost-based planning (DESIGN.md
+    "Cost-based planning", ``repro.core.cost``): a cardinality
+    estimator over ``skew_stats`` (a) reorders inner fk equi-join
+    chains by estimated intermediate cardinality before the skew /
+    hypercube passes peel them, (b) prices the hypercube-vs-cascade
+    gate with estimated intermediates instead of the "intermediate ~
+    spine" assumption, (c) makes fuse-vs-unfuse under skew a costed
+    choice, and annotates every plan node with ``est_rows`` for
+    EXPLAIN ANALYZE. ``observed_rows`` ({plan-signature digest:
+    measured rows}, from ``obs.StatsFeedback.node_rows``) overrides
+    formula estimates with ground truth on recompile — the feedback
+    loop. ``cost_mode="off"`` (the default) keeps every decision
+    byte-identical to the pre-cost compiler."""
     assert skew_mode in ("auto", "off"), skew_mode
     assert hypercube_mode in ("auto", "off"), hypercube_mode
+    assert cost_mode in ("auto", "off"), cost_mode
     catalog = catalog or Catalog()
     named: List[Tuple[str, Plan]] = []
     roles: Dict[str, str] = {}
@@ -205,31 +230,49 @@ def _compile_program_impl(sp, catalog, optimize, cse, outputs, skew_stats,
     outs = tuple(outputs) if outputs is not None else program_outputs(sp)
     graph = build_program_graph(named, outs, roles)
     skew_info: Dict[str, tuple] = {}
+    estimator = None
+    estimates: Dict[str, Optional[int]] = {}
+    if cost_mode == "auto":
+        from .cost import CardinalityEstimator, order_join_chains
+        estimator = CardinalityEstimator(skew_stats or {},
+                                         n_partitions=skew_partitions,
+                                         observed=observed_rows)
     if optimize:
         graph = dce_program(graph)
         graph = prune_program_columns(graph)
         if cse:
             graph = cse_program(graph)
+        if estimator is not None:
+            # decision (a): costed join ordering, before the skew and
+            # hypercube passes so both see the chosen chain order
+            order_join_chains(graph, estimator)
         if skew_stats is not None and skew_mode == "auto":
             skew_info = apply_skew_program(graph, skew_stats,
                                            n_partitions=skew_partitions,
-                                           threshold=skew_threshold)
+                                           threshold=skew_threshold,
+                                           estimator=estimator)
         if skew_stats is not None and hypercube_mode == "auto":
             # after the skew pass: chains absorb SkewJoinP heavy-key
             # params into per-dimension hypercube spreading, keeping
             # the same parameter names (warm rebinds stay retrace-free)
             apply_hypercube_program(graph, skew_stats,
-                                    n_partitions=skew_partitions)
+                                    n_partitions=skew_partitions,
+                                    estimator=estimator)
         # annotate last: the pruning pass rebuilds every node, which
         # would discard the EXPLAIN attributes
         for nd in graph.nodes:
             annotate_orders(nd.plan)
             annotate_partitioning(nd.plan)
+    if estimator is not None:
+        # est_rows on every node, post-passes (EXPLAIN ANALYZE reads
+        # them; the serving cache snapshots the per-node roots)
+        estimates = estimator.annotate_graph(graph)
     return CompiledProgram([(nd.name, nd.plan) for nd in graph.nodes],
                            sp, graph, outs,
                            skew_params={k: (bag, attr) for
                                         k, (bag, attr, _) in
-                                        skew_info.items()})
+                                        skew_info.items()},
+                           estimates=estimates)
 
 
 def run_flat_program(cp: CompiledProgram, env: Dict[str, FlatBag],

@@ -1658,7 +1658,8 @@ def _scan_aliases(p: Plan) -> Dict[str, str]:
 def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
                        n_partitions: int, threshold: float = 0.025,
                        max_heavy: Optional[int] = None,
-                       param_prefix: str = "__hk") -> Dict[str, object]:
+                       param_prefix: str = "__hk",
+                       estimator=None) -> Dict[str, object]:
     """The automatic skew decision, applied program-wide (in place).
 
     For every hash join whose probe-side key is a single column scanned
@@ -1670,6 +1671,14 @@ def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
     ``FusedJoinAggP`` whose embedded join qualifies un-fuses into
     Gamma+ over the skew join (placement beats fusion under skew — the
     heavy rows never cross the wire at all).
+
+    With a ``cost.CardinalityEstimator`` (``estimator``), the un-fuse
+    is a COSTED choice (``cost.choose_unfuse``): the fused pipeline's
+    priced imbalance vs. the light exchange + heavy-build replication
+    + an extra aggregation pass. Mild skew keeps the fusion; without an
+    estimator the PR 5 rule (always un-fuse when heavy keys exist)
+    applies unchanged. The decision uses only ``probe_heavy`` — no
+    ``__hk`` parameter is registered for a join that stays fused.
 
     Zero predicted heavy keys => the plan is left byte-identical (the
     degenerate no-op contract asserted by the skew unit tests).
@@ -1715,6 +1724,29 @@ def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
             defaults[name] = (bag, attr, heavy)
         return SkewJoinP(j, name, tuple(int(x) for x in heavy))
 
+    def fusion_wins(p: FusedJoinAggP, hit) -> bool:
+        """Costed decision (c): does keeping the fused join+aggregate
+        beat un-fusing into Gamma+ over a SkewJoinP? Heavy-key
+        frequencies come from the sketch, scaled by the estimated
+        probe survival ratio (the probe may be filtered)."""
+        from . import cost as C
+        bag, attr, heavy = hit
+        ts = stats.get(bag)
+        if ts is None:
+            return False
+        hset = {int(x) for x in heavy}
+        freqs = [float(c) for k, c in getattr(ts, "heavy", {}).get(attr,
+                                                                   ())
+                 if int(k) in hset]
+        base_rows = max(float(getattr(ts, "effective_rows", ts.rows)),
+                        1.0)
+        probe = estimator.estimate(p.join.left)
+        probe_rows = probe.rows if probe.known else base_rows
+        ratio = min(probe_rows / base_rows, 1.0)
+        return not C.choose_unfuse(probe_rows,
+                                   [f * ratio for f in freqs],
+                                   n_partitions)
+
     def rewrite(p: Plan) -> Plan:
         if isinstance(p, (SkewJoinP, MultiJoinP)):
             return p            # idempotent: never double-wrap
@@ -1725,6 +1757,10 @@ def apply_skew_program(graph: ProgramGraph, stats: Dict[str, object],
         if isinstance(p, FusedJoinAggP):
             p.join.left = rewrite(p.join.left)
             p.join.right = rewrite(p.join.right)
+            if estimator is not None:
+                hit = probe_heavy(p.join)
+                if hit is not None and fusion_wins(p, hit):
+                    return p    # costed: keep the fusion, no param
             sj = lift(p.join)
             if sj is not None:
                 return SumAggP(sj, p.keys, p.vals, p.local_preagg,
@@ -1772,13 +1808,21 @@ def _peel_join_chain(p: Plan, min_joins: int):
 
 
 def _hypercube_rewrite_chain(p: Plan, stats: Dict[str, object],
-                             n_partitions: int, min_joins: int
-                             ) -> Optional["MultiJoinP"]:
+                             n_partitions: int, min_joins: int,
+                             estimator=None) -> Optional["MultiJoinP"]:
     """Try to rewrite the chain rooted at ``p`` into a MultiJoinP.
     Conservative: any relation without TableStats, any join key not
     traceable to a single source relation, or a share assignment whose
     replicated wire volume exceeds the cascade's leaves the plan
-    untouched."""
+    untouched.
+
+    With a ``cost.CardinalityEstimator`` (``estimator``) the cascade
+    side of the gate is priced from ESTIMATED intermediate
+    cardinalities (``skew.cascade_send_rows_est``) — a shrinking chain
+    makes the cascade cheaper than the stats-free "every intermediate
+    ~ spine" assumption, an expanding one dearer; relation row counts
+    also refine through the estimator (a filtered base relation ships
+    its selected rows, not the full scan)."""
     from . import skew as SK
     peeled = _peel_join_chain(p, min_joins)
     if peeled is None:
@@ -1830,7 +1874,12 @@ def _hypercube_rewrite_chain(p: Plan, stats: Dict[str, object],
         routes[i + 1].append((stage_dim[i], tuple(j.right_on), "build"))
 
     rows = []
-    for bags in rel_bags:
+    for rp, bags in zip(rels, rel_bags):
+        est_rows = estimator.rows_of(rp) if estimator is not None \
+            else None
+        if est_rows is not None:
+            rows.append(max(int(est_rows), 1))
+            continue
         if not bags:
             return None
         rs = []
@@ -1844,8 +1893,13 @@ def _hypercube_rewrite_chain(p: Plan, stats: Dict[str, object],
     rel_dim_sets = [tuple(sorted({d for d, _, _ in r})) for r in routes]
     shares, _load = SK.plan_hypercube_shares(rel_dim_sets, rows,
                                              n_partitions)
-    if SK.hypercube_send_rows(rel_dim_sets, rows, shares) \
-            > SK.cascade_send_rows(rows):
+    cascade = SK.cascade_send_rows(rows)
+    if estimator is not None:
+        inters = estimator.chain_intermediates(
+            base, [j for (j, _, _) in stages])
+        if inters is not None:
+            cascade = SK.cascade_send_rows_est(rows, inters)
+    if SK.hypercube_send_rows(rel_dim_sets, rows, shares) > cascade:
         return None             # replication would out-cost the cascade
     sts = tuple(MultiJoinStage(j.right, tuple(j.left_on),
                                tuple(j.right_on), j.unique_right,
@@ -1857,7 +1911,8 @@ def _hypercube_rewrite_chain(p: Plan, stats: Dict[str, object],
 
 
 def apply_hypercube_program(graph: ProgramGraph, stats: Dict[str, object],
-                            n_partitions: int, min_joins: int = 2) -> int:
+                            n_partitions: int, min_joins: int = 2,
+                            estimator=None) -> int:
     """Rewrite multiway inner equi-join chains to one-round hypercube
     ``MultiJoinP`` nodes, program-wide (in place, after the skew pass —
     SkewJoinP wrappers are absorbed and their heavy-key parameters keep
@@ -1869,7 +1924,8 @@ def apply_hypercube_program(graph: ProgramGraph, stats: Dict[str, object],
         nonlocal count
         if isinstance(p, MultiJoinP):
             return p
-        mj = _hypercube_rewrite_chain(p, stats, n_partitions, min_joins)
+        mj = _hypercube_rewrite_chain(p, stats, n_partitions, min_joins,
+                                      estimator)
         if mj is not None:
             count += 1
             mj.child = rewrite(mj.child)
@@ -1878,7 +1934,7 @@ def apply_hypercube_program(graph: ProgramGraph, stats: Dict[str, object],
             return mj
         if isinstance(p, FusedJoinAggP):
             mj = _hypercube_rewrite_chain(p.join, stats, n_partitions,
-                                          min_joins)
+                                          min_joins, estimator)
             if mj is not None:
                 count += 1
                 mj.child = rewrite(mj.child)

@@ -154,14 +154,20 @@ class HeavyKeySketch:
                 self.counts[v] += c
             else:
                 self.counts[v] = c
-        # Misra-Gries decrement: shed the smallest counters until at
-        # most k survive (batched: subtract the (len-k)-th largest)
+        # Misra-Gries decrement, batched: subtract the (k+1)-th largest
+        # count and keep the top k counters by (count, key). Keeping
+        # survivors at a floor of 1 (rather than dropping ties at the
+        # cut) preserves exactly k counters, so borderline-heavy keys
+        # accumulated earlier keep their lead over a fresh near-uniform
+        # batch. Lower bounds survive: every survivor's stored count
+        # only ever decreases by <= cut per shed, and cut accumulates
+        # into error_bound().
         if len(self.counts) > self.k:
-            by = sorted(self.counts.values(), reverse=True)
-            cut = by[self.k]
+            items = sorted(self.counts.items(),
+                           key=lambda vc: (-vc[1], vc[0]))
+            cut = items[self.k][1]
             self._decremented += cut
-            self.counts = {v: c - cut for v, c in self.counts.items()
-                           if c > cut}
+            self.counts = {v: max(c - cut, 1) for v, c in items[:self.k]}
 
     def error_bound(self) -> int:
         """Max undercount of any reported counter."""
@@ -262,8 +268,7 @@ def decide_heavy_keys(stats: TableStats, col: str,
     cand = stats.heavy.get(col)
     if not cand:
         return []
-    rows = stats.effective_rows if hasattr(stats, "effective_rows") \
-        else stats.rows
+    rows = stats.effective_rows
     need = max(int(threshold * rows), -(-rows // n_partitions), 1)
     picked = [k for k, c in sorted(cand, key=lambda vc: (-vc[1], vc[0]))
               if c >= need]
@@ -370,8 +375,26 @@ def cascade_send_rows(rel_rows: Sequence[int]) -> int:
     """Wire cost of the binary left-deep cascade the optimizer would
     otherwise emit: every relation crosses once, and each intermediate
     (probe-cardinality ~ the spine, rel 0) is re-partitioned for the
-    next join key — (k-1) extra crossings of the spine for k joins."""
+    next join key — (k-1) extra crossings of the spine for k joins.
+
+    The "intermediate ~ spine" assumption is the stats-free fallback;
+    with a cardinality estimator the gate uses
+    :func:`cascade_send_rows_est` instead (ROADMAP item 4)."""
     if len(rel_rows) < 2:
         return sum(rel_rows)
     spine = rel_rows[0]
     return sum(rel_rows) + (len(rel_rows) - 2) * spine
+
+
+def cascade_send_rows_est(rel_rows: Sequence[int],
+                          intermediates: Sequence[float]) -> int:
+    """Cascade wire cost with ESTIMATED intermediate cardinalities
+    (``repro.core.cost``): every relation crosses once, and each
+    intermediate except the last is re-partitioned for its next join
+    key. ``intermediates[i]`` estimates the spine after ``i + 1``
+    joins; the final intermediate is the output and never re-crosses.
+    With ``intermediates[i] == rel_rows[0]`` for all i this equals
+    :func:`cascade_send_rows` exactly."""
+    if len(rel_rows) < 2:
+        return sum(rel_rows)
+    return int(sum(rel_rows) + sum(intermediates[:-1]))

@@ -59,6 +59,22 @@ class ExplainNode:
     wall_ms: Optional[float] = None      # real (local) or trace (dist)
     meters: Dict[str, float] = field(default_factory=dict)
     sites: tuple = ()            # dist sizing sites claimed by this node
+    # cost-based planning (cost_mode="auto"): the optimizer's row
+    # estimate for this operator, rendered next to the measured rows
+    est_rows: Optional[int] = None
+    # structural signature digest (cost.sig_digest) — the key under
+    # which StatsFeedback.record_explain persists the MEASURED rows, so
+    # the next compile's estimator reads ground truth for this operator
+    sig: Optional[str] = None
+
+    def qerror(self) -> Optional[float]:
+        """Q-error of the estimate: max(est/actual, actual/est), both
+        floored at one row. None until both sides exist."""
+        if self.est_rows is None or self.rows_out is None:
+            return None
+        e = max(float(self.est_rows), 1.0)
+        a = max(float(self.rows_out), 1.0)
+        return max(e / a, a / e)
 
     def walk(self):
         yield self
@@ -68,6 +84,7 @@ class ExplainNode:
     def to_json(self) -> dict:
         return {"id": self.id, "op": self.op, "label": self.label,
                 "rows_in": self.rows_in, "rows_out": self.rows_out,
+                "est_rows": self.est_rows, "sig": self.sig,
                 "wall_ms": self.wall_ms, "meters": dict(self.meters),
                 "sites": list(self.sites),
                 "children": [c.to_json() for c in self.children]}
@@ -91,8 +108,11 @@ class ExplainRecorder:
 
     def record(self, p, env, s, inner):
         from repro.core import plans as P
+        from repro.core.cost import sig_digest
         node = ExplainNode(self._n, type(p).__name__,
                            P.plan_pretty(p).split("\n")[0].strip())
+        node.est_rows = getattr(p, "est_rows", None)
+        node.sig = sig_digest(p)
         self._n += 1
         if self._stack:
             self._stack[-1].children.append(node)
@@ -183,6 +203,22 @@ class ExplainResult:
     def find(self, op: str) -> List[ExplainNode]:
         return [n for n in self.nodes() if n.op == op]
 
+    def qerrors(self) -> List[float]:
+        """Per-operator Q-errors, every node with both an estimate and
+        a measured row count (cost_mode="auto" runs only)."""
+        return [q for q in (n.qerror() for n in self.nodes())
+                if q is not None]
+
+    def qerror_summary(self) -> Dict[str, Optional[float]]:
+        """p50/max of the per-operator Q-error — the benchmark gate
+        (max <= 4 after one feedback round) and the ``--trajectory``
+        emit fields."""
+        qs = sorted(self.qerrors())
+        if not qs:
+            return {"qerr_p50": None, "qerr_max": None}
+        return {"qerr_p50": round(qs[len(qs) // 2], 3),
+                "qerr_max": round(qs[-1], 3)}
+
     def to_json(self) -> dict:
         return {"distributed": self.distributed,
                 "total_ms": round(self.total_ms, 3),
@@ -202,6 +238,11 @@ class ExplainResult:
             ann = []
             if node.rows_out is not None:
                 ann.append(f"rows={node.rows_out}")
+            if node.est_rows is not None:
+                ann.append(f"est={node.est_rows}")
+                q = node.qerror()
+                if q is not None:
+                    ann.append(f"q={q:.2f}")
             if node.rows_in is not None:
                 ann.append(f"in={node.rows_in}")
             m = node.meters
@@ -243,6 +284,8 @@ def explain_analyze(program, env, input_types: Optional[dict] = None,
                     skew_mode: str = "auto",
                     skew_partitions: int = 8,
                     hypercube_mode: str = "auto",
+                    cost_mode: str = "off",
+                    observed_rows: Optional[dict] = None,
                     mesh=None, use_kernel: bool = False,
                     cap_factor: float = 2.0) -> ExplainResult:
     """Compile ``program`` and evaluate it with per-operator recording.
@@ -254,7 +297,16 @@ def explain_analyze(program, env, input_types: Optional[dict] = None,
     (their I/O metered on the scan operators). ``input_types`` is
     required unless every env value is a FlatBag and the program's Vars
     carry types (the usual case). ``mesh`` switches to the distributed
-    path (see module docstring)."""
+    path (see module docstring).
+
+    ``cost_mode="auto"`` compiles with the cost-based planner
+    (``repro.core.cost``): every operator renders its ``est_rows``
+    next to the measured rows with a per-operator Q-error, and
+    ``result.qerror_summary()`` gives the p50/max. ``observed_rows``
+    ({signature digest: measured rows}, typically
+    ``StatsFeedback.node_rows`` harvested from a previous result via
+    ``record_explain``) closes the loop: the re-compile estimates from
+    ground truth."""
     from repro.core import codegen as CG
     from repro.core import materialization as M
     from repro.core import nrc as N
@@ -276,7 +328,9 @@ def explain_analyze(program, env, input_types: Optional[dict] = None,
     cp = CG.compile_program(sp, catalog, skew_stats=skew_stats,
                             skew_mode=skew_mode,
                             skew_partitions=skew_partitions,
-                            hypercube_mode=hypercube_mode)
+                            hypercube_mode=hypercube_mode,
+                            cost_mode=cost_mode,
+                            observed_rows=observed_rows)
     compile_ms = (time.perf_counter() - t0) * 1e3
 
     # resolve the environment

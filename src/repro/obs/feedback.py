@@ -39,11 +39,20 @@ class StatsFeedback:
 
     ``rows[bag]`` — measured valid rows per input bag (latest wins);
     ``imbalance_x100[family]`` — worst observed receive-load imbalance
-    per plan family (monotone max, x100 so it stores as an int)."""
+    per plan family (monotone max, x100 so it stores as an int);
+    ``node_rows[sig]`` — measured PER-OPERATOR output rows keyed by
+    structural plan-signature digest (``cost.sig_digest``, stable
+    across processes), harvested from EXPLAIN ANALYZE results by
+    :meth:`record_explain`. ``QueryService._observed_rows`` /
+    ``compile_program(observed_rows=...)`` hand them to the cost
+    estimator, which pins matching operators' estimates to ground
+    truth on the next compile — the one-feedback-round Q-error
+    contract gated by ``make cost-smoke``."""
 
     def __init__(self):
         self.rows: Dict[str, int] = {}
         self.imbalance_x100: Dict[str, int] = {}
+        self.node_rows: Dict[str, int] = {}
 
     # -- recording --------------------------------------------------------
     def record_env(self, env) -> None:
@@ -73,6 +82,17 @@ class StatsFeedback:
         cur = self.imbalance_x100.get(family, 100)
         self.imbalance_x100[family] = max(cur, int(worst * 100))
         return worst
+
+    def record_explain(self, result) -> int:
+        """Harvest per-operator measured row counts from an
+        ``obs.ExplainResult`` into ``node_rows`` (latest wins).
+        Returns the number of operators recorded."""
+        n = 0
+        for node in result.nodes():
+            if node.sig is not None and node.rows_out is not None:
+                self.node_rows[node.sig] = int(node.rows_out)
+                n += 1
+        return n
 
     # -- consumption ------------------------------------------------------
     def observed_rows(self, bag: str) -> Optional[int]:
@@ -107,7 +127,8 @@ class StatsFeedback:
     # -- (de)serialization ------------------------------------------------
     def to_json(self) -> dict:
         return {"rows": dict(self.rows),
-                "imbalance_x100": dict(self.imbalance_x100)}
+                "imbalance_x100": dict(self.imbalance_x100),
+                "node_rows": dict(self.node_rows)}
 
     @classmethod
     def from_json(cls, d: dict) -> "StatsFeedback":
@@ -115,6 +136,8 @@ class StatsFeedback:
         fb.rows = {k: int(v) for k, v in d.get("rows", {}).items()}
         fb.imbalance_x100 = {k: int(v) for k, v in
                              d.get("imbalance_x100", {}).items()}
+        fb.node_rows = {k: int(v) for k, v in
+                        d.get("node_rows", {}).items()}
         return fb
 
     def save(self, path: str) -> None:

@@ -52,6 +52,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.columnar.table import FlatBag
 from repro.core import codegen as CG
@@ -104,6 +105,14 @@ class CacheEntry:
     def manifest(self, source: str) -> M.Manifest:
         return self.sp.manifests[source]
 
+    @property
+    def estimates(self) -> Dict[str, Optional[int]]:
+        """Cost-based per-node root-row estimates, snapshotted at
+        compile time (``cost_mode="auto"``; empty otherwise). Warm
+        rebinds read this cached copy — no re-estimation, no
+        tracing."""
+        return self.cp.estimates
+
 
 class QueryService:
     """Compile-once / serve-many front end. See module docstring.
@@ -124,9 +133,11 @@ class QueryService:
                  skew_threshold: float = 0.025,
                  skew_partitions: Optional[int] = None,
                  hypercube_mode: str = "auto",
-                 feedback: Optional[object] = None):
+                 feedback: Optional[object] = None,
+                 cost_mode: str = "off"):
         assert skew_mode in ("auto", "off"), skew_mode
         assert hypercube_mode in ("auto", "off"), hypercube_mode
+        assert cost_mode in ("auto", "off"), cost_mode
         self.input_types = dict(input_types)
         self.catalog = catalog or Catalog()
         self.settings = settings or ExecSettings()
@@ -136,6 +147,7 @@ class QueryService:
         self.max_entries = max_entries
         self.skew_mode = skew_mode
         self.hypercube_mode = hypercube_mode
+        self.cost_mode = cost_mode
         self.skew_threshold = skew_threshold
         # imbalance is judged against the partition count queries will
         # actually run over: the mesh size, unless pinned explicitly
@@ -195,27 +207,41 @@ class QueryService:
         return key, lifted, values, class_caps
 
     # -- cache management --------------------------------------------------
+    @staticmethod
+    def _valid_rows(b: FlatBag) -> int:
+        """Host-side valid-row count of an in-memory bag. Compile-time
+        only (called on the cold cache miss, never inside a trace):
+        the pow2 capacity class can overestimate live rows by ~2x,
+        which biased hypercube share planning and the skew threshold
+        when capacity stood in for cardinality. Capacity remains the
+        fallback for abstract values."""
+        try:
+            return int(np.asarray(b.valid).sum())
+        except Exception:
+            return int(b.capacity)
+
     def _hint_stats(self, skew_hints: Optional[dict],
                     env_c: Dict[str, FlatBag]) -> Optional[dict]:
         """Caller-supplied heavy-key hints as planner statistics: every
         hinted key counts as definitely-heavy (count == rows), so the
         automatic pass inserts a SkewJoinP at exactly the hinted
         joins. On the distributed path, every environment bag also
-        contributes a row estimate (its capacity — already part of the
-        cache key), so the HyperCube share planner can cost multiway
-        chains over in-memory inputs that have no persisted sketches."""
+        contributes a row estimate (its VALID rows, counted host-side
+        at compile time), so the HyperCube share planner and the cost
+        estimator can cost multiway chains over in-memory inputs that
+        have no persisted sketches."""
         if self.skew_mode == "off" or self.skew_partitions <= 1:
             return None
         want_hc = self.mesh is not None and self.hypercube_mode == "auto"
-        if not skew_hints and not want_hc:
+        if not skew_hints and not want_hc and self.cost_mode != "auto":
             return None
         from repro.core.skew import TableStats
         stats = {}
-        if want_hc:
+        if want_hc or self.cost_mode == "auto":
             for bag, b in env_c.items():
-                stats[bag] = TableStats(rows=b.capacity)
+                stats[bag] = TableStats(rows=self._valid_rows(b))
         for bag, cols in (skew_hints or {}).items():
-            rows = env_c[bag].capacity if bag in env_c else 1
+            rows = self._valid_rows(env_c[bag]) if bag in env_c else 1
             ts = stats.get(bag) or TableStats(rows=rows)
             ts.heavy = {col: [(int(k), rows) for k in list(ks)]
                         for col, ks in cols.items()}
@@ -306,6 +332,13 @@ class QueryService:
             return self._compile_entry(key, lifted, env_c, class_caps,
                                        n_params, skew_stats)
 
+    def _observed_rows(self) -> Optional[dict]:
+        """Per-operator measured row counts from the feedback
+        accumulator (``obs.StatsFeedback.node_rows``), for the cost
+        estimator's ground-truth override on recompiles."""
+        rows = getattr(self.feedback, "node_rows", None)
+        return dict(rows) if rows else None
+
     def _compile_entry(self, key, lifted, env_c, class_caps,
                        n_params, skew_stats) -> CacheEntry:
         sp = M.shred_program(lifted, self.input_types,
@@ -315,7 +348,9 @@ class QueryService:
                                 skew_mode=self.skew_mode,
                                 skew_partitions=self.skew_partitions,
                                 skew_threshold=self.skew_threshold,
-                                hypercube_mode=self.hypercube_mode)
+                                hypercube_mode=self.hypercube_mode,
+                                cost_mode=self.cost_mode,
+                                observed_rows=self._observed_rows())
         if self.mesh is not None:
             runner, _, _ = CG.compile_program_distributed(
                 cp, env_c, self.mesh,
@@ -494,7 +529,9 @@ class QueryService:
                     skew_mode=self.skew_mode,
                     skew_partitions=self.skew_partitions,
                     skew_threshold=self.skew_threshold,
-                    hypercube_mode=self.hypercube_mode)
+                    hypercube_mode=self.hypercube_mode,
+                    cost_mode=self.cost_mode,
+                    observed_rows=self._observed_rows())
                 req = storage_requirements(cp, set(dataset.parts))
                 # capacities pin to the FULL part's class regardless of
                 # the per-call chunk selection, so traced shapes never
@@ -565,7 +602,9 @@ class QueryService:
                 skew_mode=self.skew_mode,
                 skew_partitions=self.skew_partitions,
                 skew_threshold=self.skew_threshold,
-                hypercube_mode=self.hypercube_mode)
+                hypercube_mode=self.hypercube_mode,
+                cost_mode=self.cost_mode,
+                observed_rows=self._observed_rows())
             req = storage_requirements(cp, set(dataset.parts))
             mp = plan_morsels(dataset, root, morsel_rows)
             folds = morsel_fold(cp.plans, cp.outputs, set(mp.parts))

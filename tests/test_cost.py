@@ -1,0 +1,387 @@
+"""Unit tests for the cost-based planner (``repro.core.cost``) and the
+planner-stats bugfix sweep that rode along with it:
+
+* cardinality estimator formulas (scan / select / fk join / heavy-key
+  correction / aggregation) and the observed-rows override,
+* golden decision flips: a stats change (small vs large build side)
+  flips the costed join order; a skew change flips fuse-vs-unfuse,
+* ``decide_heavy_keys`` driven by measured ``meters["rows"]`` in BOTH
+  directions (the dead ``hasattr(effective_rows)`` guard is gone),
+* ``HeavyKeySketch.update`` batched shed keeps exactly ``k`` survivors
+  under adversarial tied batches (the old cut dropped every tie),
+* ``cascade_send_rows_est`` degenerates to ``cascade_send_rows`` when
+  every intermediate equals the spine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cost as C
+from repro.core import plans as P
+from repro.core import skew as SK
+
+
+class _Node:
+    def __init__(self, name, plan):
+        self.name, self.plan = name, plan
+
+
+class _Graph:
+    def __init__(self, nodes):
+        self.nodes = nodes
+
+
+def _stats(part_rows=30, part_distinct=30, heavy=None):
+    """A 3-relation chain: Lineitem (skewable pid) x Part x Orders."""
+    return {
+        "L": SK.TableStats(rows=1000,
+                           distinct={"pid": 100, "oid": 500},
+                           heavy={"pid": list(heavy or [])}),
+        "Pt": SK.TableStats(rows=part_rows,
+                            distinct={"pid": part_distinct}),
+        "O": SK.TableStats(rows=500, distinct={"oid": 500}),
+    }
+
+
+def _chain(order=("O", "Pt")):
+    """JoinP chain over L in the given build order; returns (root,
+    graph)."""
+    plan = P.ScanP("L", "l")
+    on = {"O": ("l.oid", "o.oid", "o"), "Pt": ("l.pid", "p.pid", "p")}
+    for bag in order:
+        lcol, rcol, alias = on[bag]
+        plan = P.JoinP(plan, P.ScanP(bag, alias), (lcol,), (rcol,))
+    return plan, _Graph([_Node("T", plan)])
+
+
+# ---------------------------------------------------------------------------
+# estimator formulas
+# ---------------------------------------------------------------------------
+
+def test_scan_estimate_uses_effective_rows_distinct_heavy():
+    est = C.CardinalityEstimator(_stats(heavy=[(7, 300)]), 8)
+    e = est.estimate(P.ScanP("L", "l"))
+    assert e.known and e.rows == 1000.0
+    assert e.distinct["l.pid"] == 100.0
+    assert e.heavy["l.pid"] == {7: 300.0}
+    # measured rows (feedback) win over the stored estimate, and the
+    # sketched per-key counts rescale with them
+    st = _stats(heavy=[(7, 300)])
+    st["L"].meters["rows"] = 500
+    e2 = C.CardinalityEstimator(st, 8).estimate(P.ScanP("L", "l"))
+    assert e2.rows == 500.0
+    assert e2.heavy["l.pid"] == {7: 150.0}
+
+
+def test_select_selectivity_equality_vs_inequality():
+    from repro.core import nrc as N
+    est = C.CardinalityEstimator(_stats(), 8)
+    scan = P.ScanP("L", "l")
+    var = N.Var("l.pid", N.INT)
+    eq = P.SelectP(scan, N.Cmp("==", var, N.Const(7, N.INT)))
+    lt = P.SelectP(scan, N.Cmp("<", var, N.Const(7, N.INT)))
+    assert est.estimate(eq).rows == pytest.approx(10.0)   # 1000 / d=100
+    assert est.estimate(lt).rows == pytest.approx(1000 / 3)
+
+
+def test_fk_join_passthrough_and_selective_build():
+    est = C.CardinalityEstimator(_stats(part_rows=100,
+                                        part_distinct=100), 8)
+    full = P.JoinP(P.ScanP("L", "l"), P.ScanP("Pt", "p"),
+                   ("l.pid",), ("p.pid",))
+    # build covers the whole key domain: the probe passes through
+    assert est.estimate(full).rows == pytest.approx(1000.0)
+    # build covers 30 of 100 keys: ~30% of probes survive
+    est2 = C.CardinalityEstimator(_stats(part_rows=30,
+                                         part_distinct=30), 8)
+    sel = est2.estimate(full)
+    assert 250 < sel.rows < 350
+
+
+def test_heavy_key_correction_beats_uniform_formula():
+    # 300 of 1000 rows share pid=7; a build side carrying pid=7 with
+    # one row matches all 300 — the uniform formula would say ~10
+    st = _stats(part_rows=1, part_distinct=1, heavy=[(7, 300)])
+    st["Pt"].heavy = {"pid": [(7, 1)]}
+    est = C.CardinalityEstimator(st, 8)
+    j = P.JoinP(P.ScanP("L", "l"), P.ScanP("Pt", "p"),
+                ("l.pid",), ("p.pid",), unique_right=False)
+    assert est.estimate(j).rows == pytest.approx(300.0, rel=0.1)
+
+
+def test_aggregation_groups_capped_by_distinct():
+    est = C.CardinalityEstimator(_stats(), 8)
+    agg = P.SumAggP(P.ScanP("L", "l"), keys=("l.pid",), vals=("l.oid",))
+    assert est.estimate(agg).rows == pytest.approx(100.0)
+    dd = P.DeDupP(P.ScanP("L", "l"), cols=("l.oid",))
+    assert est.estimate(dd).rows == pytest.approx(500.0)
+
+
+def test_observed_rows_override_by_signature_digest():
+    scan = P.ScanP("L", "l")
+    dig = C.sig_digest(scan)
+    est = C.CardinalityEstimator(_stats(), 8, observed={dig: 42})
+    assert est.estimate(scan).rows == 42.0
+    # digest is deterministic and structural: a fresh identical node
+    # hits the same observation
+    assert C.sig_digest(P.ScanP("L", "l")) == dig
+
+
+# ---------------------------------------------------------------------------
+# decision (a): golden join-order flips
+# ---------------------------------------------------------------------------
+
+def test_join_order_flips_with_build_selectivity():
+    # selective Part (30/100 keys): joining it FIRST shrinks the
+    # intermediate the Orders exchange re-ships -> reorder
+    root, g = _chain(("O", "Pt"))
+    est = C.CardinalityEstimator(_stats(part_rows=30, part_distinct=30),
+                                 8)
+    assert C.order_join_chains(g, est) == 1
+    out = g.nodes[0].plan
+    assert out.right.bag == "O" and out.left.right.bag == "Pt"
+
+    # non-selective Part (covers every key): both orders ship the same
+    # intermediates -> the tie keeps the program-written order
+    root, g2 = _chain(("O", "Pt"))
+    est2 = C.CardinalityEstimator(_stats(part_rows=100,
+                                         part_distinct=100), 8)
+    assert C.order_join_chains(g2, est2) == 0
+    out2 = g2.nodes[0].plan
+    assert out2.right.bag == "Pt" and out2.left.right.bag == "O"
+
+
+def test_join_order_respects_key_dependencies():
+    # stage 2's key lives on stage 1's build side: 2 can never move
+    # before 1, whatever the cardinalities say
+    l = P.ScanP("L", "l")
+    j1 = P.JoinP(l, P.ScanP("Pt", "p"), ("l.pid",), ("p.pid",))
+    j2 = P.JoinP(j1, P.ScanP("O", "o"), ("p.pid",), ("o.oid",))
+    g = _Graph([_Node("T", j2)])
+    st = _stats(part_rows=100, part_distinct=100)
+    st["O"] = SK.TableStats(rows=2, distinct={"oid": 2})
+    assert C.order_join_chains(g, C.CardinalityEstimator(st, 8)) == 0
+
+
+def test_join_order_skipped_without_stats():
+    root, g = _chain(("O", "Pt"))
+    assert C.order_join_chains(g, C.CardinalityEstimator({}, 8)) == 0
+
+
+# ---------------------------------------------------------------------------
+# decision (c): fuse-vs-unfuse flips with skew intensity
+# ---------------------------------------------------------------------------
+
+def test_choose_unfuse_flips_with_skew():
+    # Zipf-grade key (30% of rows): priced imbalance dwarfs the
+    # light-exchange + replication + extra-pass cost -> un-fuse
+    assert C.choose_unfuse(1000, [300], 8)
+    # barely-heavy key (just over fair share): keep the fusion
+    assert not C.choose_unfuse(1000, [130], 8)
+    assert not C.choose_unfuse(1000, [], 8)       # no heavy keys
+    assert not C.choose_unfuse(1000, [300], 1)    # one partition
+
+
+def _fused_graph(heavy):
+    j = P.JoinP(P.ScanP("L", "l"), P.ScanP("Pt", "p"),
+                ("l.pid",), ("p.pid",))
+    f = P.FusedJoinAggP(j, keys=("l.oid",), vals=("l.qty",))
+    return _Graph([_Node("T", f)]), _stats(part_rows=100,
+                                           part_distinct=100,
+                                           heavy=heavy)
+
+
+def test_costed_skew_pass_keeps_mild_fusion_without_param():
+    g, st = _fused_graph(heavy=[(7, 130)])
+    est = C.CardinalityEstimator(st, 8)
+    defaults = P.apply_skew_program(g, st, 8, estimator=est)
+    # kept fused — and crucially no dangling __hk parameter was
+    # registered for the join that stayed fused
+    assert isinstance(g.nodes[0].plan, P.FusedJoinAggP)
+    assert defaults == {}
+
+
+def test_costed_skew_pass_unfuses_heavy_skew():
+    g, st = _fused_graph(heavy=[(7, 300)])
+    est = C.CardinalityEstimator(st, 8)
+    defaults = P.apply_skew_program(g, st, 8, estimator=est)
+    out = g.nodes[0].plan
+    assert isinstance(out, P.SumAggP)
+    assert isinstance(out.child, P.SkewJoinP)
+    assert set(defaults) == {"__hk0"}
+
+
+def test_rule_based_skew_pass_still_always_unfuses():
+    # estimator=None: PR 5's rule is byte-identical (cost_mode="off")
+    g, st = _fused_graph(heavy=[(7, 130)])
+    defaults = P.apply_skew_program(g, st, 8)
+    assert isinstance(g.nodes[0].plan, P.SumAggP)
+    assert set(defaults) == {"__hk0"}
+
+
+# ---------------------------------------------------------------------------
+# decision (b): estimated-intermediate cascade costing
+# ---------------------------------------------------------------------------
+
+def test_cascade_send_rows_est_degenerates_to_spine_assumption():
+    rows = [1000, 100, 10]
+    # intermediate ~ spine for every stage reproduces the old formula
+    assert SK.cascade_send_rows_est(rows, [1000.0, 1000.0]) \
+        == SK.cascade_send_rows(rows)
+    # shrinking intermediates make the cascade cheaper ...
+    assert SK.cascade_send_rows_est(rows, [50.0, 5.0]) \
+        < SK.cascade_send_rows(rows)
+    # ... expanding ones dearer
+    assert SK.cascade_send_rows_est(rows, [5000.0, 9000.0]) \
+        > SK.cascade_send_rows(rows)
+    assert SK.cascade_send_rows_est([7], []) == 7
+
+
+def test_chain_intermediates_feed_the_gate():
+    est = C.CardinalityEstimator(_stats(part_rows=30, part_distinct=30),
+                                 8)
+    base = P.ScanP("L", "l")
+    j1 = P.JoinP(base, P.ScanP("Pt", "p"), ("l.pid",), ("p.pid",))
+    j2 = P.JoinP(j1, P.ScanP("O", "o"), ("l.oid",), ("o.oid",))
+    inters = est.chain_intermediates(base, [j1, j2])
+    assert inters is not None and len(inters) == 2
+    assert inters[0] < 1000.0          # the selective build shrinks
+    # missing stats -> None (caller falls back to the stats-free gate)
+    assert C.CardinalityEstimator({}, 8).chain_intermediates(
+        base, [j1, j2]) is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: decide_heavy_keys flips on measured rows, both directions
+# ---------------------------------------------------------------------------
+
+def test_decide_heavy_keys_meters_flip_off_to_on():
+    ts = SK.TableStats(rows=1000, heavy={"pid": [(7, 30)]})
+    assert SK.decide_heavy_keys(ts, "pid", 8) == []     # 30 < 125
+    ts.meters["rows"] = 100                             # need -> 13
+    assert SK.decide_heavy_keys(ts, "pid", 8) == [7]
+
+
+def test_decide_heavy_keys_meters_flip_on_to_off():
+    ts = SK.TableStats(rows=100, heavy={"pid": [(7, 30)]})
+    assert SK.decide_heavy_keys(ts, "pid", 8) == [7]    # 30 >= 13
+    ts.meters["rows"] = 1000                            # need -> 125
+    assert SK.decide_heavy_keys(ts, "pid", 8) == []
+
+
+# ---------------------------------------------------------------------------
+# satellite: batched Misra-Gries shed keeps exactly k under ties
+# ---------------------------------------------------------------------------
+
+def test_sketch_shed_keeps_exactly_k_on_tied_batch():
+    sk = SK.HeavyKeySketch(k=4)
+    sk.update(np.array([9, 9, 9]))          # borderline-heavy early key
+    sk.update(np.array([1, 2, 3, 4, 5, 6]))  # adversarial: all tied at 1
+    # exactly k survivors (the old code dropped every counter tied at
+    # the cut, leaving only {9})
+    assert len(sk.counts) == sk.k
+    # the early key kept its lead over the fresh near-uniform batch
+    assert sk.counts[9] == 2
+    # deterministic (count, key) tiebreak: smallest keys survive
+    assert set(sk.counts) == {9, 1, 2, 3}
+    assert sk.error_bound() == 1
+
+
+def test_sketch_shed_repeated_ties_stay_bounded_and_lower_bound():
+    rng = np.random.default_rng(0)
+    sk = SK.HeavyKeySketch(k=8)
+    true = {}
+    for i in range(30):
+        batch = np.concatenate([
+            np.full(20, 77),                       # the real heavy key
+            rng.integers(1000 * i, 1000 * i + 50, size=50),  # churn
+        ])
+        for v in batch.tolist():
+            true[v] = true.get(v, 0) + 1
+        sk.update(batch)
+        assert len(sk.counts) <= sk.k
+    # the heavy key survives every tied shed and its count is a lower
+    # bound on the true frequency (the Misra-Gries guarantee)
+    assert 77 in sk.counts
+    assert sk.counts[77] <= true[77]
+    assert true[77] - sk.counts[77] <= sk.error_bound()
+    # every surviving counter is a lower bound
+    for v, c in sk.counts.items():
+        assert c <= true[v]
+
+
+def test_stored_stats_distinct_tightened_by_range_bound():
+    """Summed per-chunk distinct counts overcount keys repeated across
+    chunks; for integer columns the zone-map value range is a second
+    sound upper bound (satellite: planner-stats sweep). A foreign-key
+    column with 10 values over many chunks must not report 10x that."""
+    import tempfile
+
+    from repro.core import nrc as N
+    from repro.storage import StorageCatalog, table_stats
+
+    ty = {"R": N.bag(N.tuple_t(fk=N.INT, x=N.REAL))}
+    rows = [{"fk": (i % 10) + 1, "x": float(i) + 0.5}
+            for i in range(320)]
+    with tempfile.TemporaryDirectory() as td:
+        cat = StorageCatalog(td)
+        cat.writer("d", ty, chunk_rows=32).append({"R": rows})
+        st = table_stats(cat.open("d"))["R__F"]
+    # 10 chunks x 10 distinct sums to 100; the range bound [1, 10]
+    # tightens it to the true count
+    assert st.distinct["fk"] == 10
+    # float columns get no range bound (infinitely many values in any
+    # interval) — only the row-count clamp applies
+    assert st.distinct["x"] == 320
+
+
+# ---------------------------------------------------------------------------
+# compile integration: cost_mode plumbing
+# ---------------------------------------------------------------------------
+
+def test_compile_program_cost_mode_annotates_and_matches_off():
+    from repro.core import codegen as CG
+    from repro.core import materialization as M
+    from repro.core import nrc as N
+
+    types = {"R": N.bag(N.tuple_t(a=N.INT, b=N.INT))}
+    R = N.Var("R", types["R"])
+    q = N.for_in("x", R, lambda x: N.Singleton(N.record(a=x.a, b=x.b)))
+    prog = N.Program([N.Assignment("Q", q)])
+    sp = M.shred_program(prog, types, domain_elimination=True)
+    cp_off = CG.compile_program(sp, cost_mode="off")
+    cp_on = CG.compile_program(sp, cost_mode="auto")
+    assert cp_off.estimates == {}
+    assert set(cp_on.estimates) == {n for n, _ in cp_on.plans}
+    for _, p in cp_on.plans:
+        for sub in P._walk_plan(p):
+            assert hasattr(sub, "est_rows")
+    rows = [{"a": 1, "b": 2}, {"a": 3, "b": 4}]
+    env = CG.columnar_shred_inputs({"R": rows}, types)
+    o1 = CG.jit_program(cp_off)(env)
+    o2 = CG.jit_program(cp_on)(env)
+    for k in o1:
+        assert np.array_equal(np.asarray(o1[k].valid),
+                              np.asarray(o2[k].valid))
+        for c in o1[k].data:
+            assert np.array_equal(np.asarray(o1[k].data[c]),
+                                  np.asarray(o2[k].data[c]))
+
+
+def test_query_service_cost_mode_caches_estimates():
+    from repro.core import nrc as N
+    from repro.serve import QueryService
+
+    types = {"R": N.bag(N.tuple_t(a=N.INT, b=N.INT))}
+    R = N.Var("R", types["R"])
+    q = N.for_in("x", R, lambda x: N.Singleton(N.record(a=x.a)))
+    prog = N.Program([N.Assignment("Q", q)])
+    svc = QueryService(types, cost_mode="auto", skew_partitions=8)
+    env = svc.shred_inputs({"R": [{"a": 1, "b": 2}, {"a": 3, "b": 4}]})
+    svc.execute(prog, env)
+    (entry,) = svc._cache.values()
+    assert entry.estimates and set(entry.estimates) == \
+        {n for n, _ in entry.cp.plans}
+    # warm call: cache hit, the snapshot is reused (no recompile)
+    svc.execute(prog, env)
+    assert svc.stats["hits"] == 1 and svc.stats["misses"] == 1
